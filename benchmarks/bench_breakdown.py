@@ -1,0 +1,42 @@
+"""Fig. 1: decomposition of inference time (sample / feature-load / compute).
+
+Paper claim: mini-batch preparation (sampling + feature loading) is
+56-92% of end-to-end time, and the sample:feature split varies with
+fan-out — the motivation for a *dual* cache.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import FANOUTS, emit, make_engine, run_policy
+
+
+def run(datasets=("reddit", "ogbn-products")) -> list[dict]:
+    rows = []
+    for ds in datasets:
+        for fo_name, fo in FANOUTS.items():
+            eng = make_engine(ds, fanouts=fo)
+            rep = run_policy(eng, "dgl")
+            prep_frac = (rep.sample_seconds + rep.feature_seconds) / max(rep.total_seconds, 1e-9)
+            sample_frac = rep.sample_seconds / max(
+                rep.sample_seconds + rep.feature_seconds, 1e-9
+            )
+            rows.append(
+                {
+                    "dataset": ds,
+                    "fanout": fo_name,
+                    "prep_frac": prep_frac,
+                    "sample_frac_of_prep": sample_frac,
+                    "total_s": rep.total_seconds,
+                }
+            )
+            emit(
+                f"breakdown/{ds}/{fo_name}",
+                rep.total_seconds / rep.num_batches * 1e6,
+                f"prep_frac={prep_frac:.2f};sample_frac={sample_frac:.2f}",
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,36 @@
+"""Fig. 2: single-cache saturation — feature-only cache vs capacity.
+
+Paper claim: beyond a small budget (1 GB at paper scale) extra feature
+cache stops helping (long-tail effect), which is why spending the rest on
+an adjacency cache (DCI) wins.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, make_engine, run_policy
+
+
+def run(dataset="ogbn-products", capacities=(0, 125_000, 500_000, 2_000_000, 8_000_000, 32_000_000)):
+    rows = []
+    for cap in capacities:
+        eng = make_engine(dataset, fanouts=(8, 4, 2))
+        rep = run_policy(eng, "sci", cache_bytes=cap)
+        rows.append(
+            {
+                "capacity_B": cap,
+                "feat_hit": round(rep.feat_hit_rate, 4),
+                "feature_s": round(rep.feature_seconds, 4),
+                "modeled_s": round(rep.modeled_transfer_seconds(), 6),
+            }
+        )
+        emit(
+            f"cache_capacity/{cap}",
+            rep.feature_seconds / rep.num_batches * 1e6,
+            f"feat_hit={rep.feat_hit_rate:.3f};modeled_s={rep.modeled_transfer_seconds():.6f}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,49 @@
+"""Shared benchmark plumbing.
+
+Every bench prints CSV rows ``name,us_per_call,derived`` (harness contract)
+plus a human-readable table.  Datasets are the synthetic Table-II stand-ins
+at a laptop scale chosen so a full suite run stays in CI budget; the
+directional claims (speedups, hit rates, preprocessing ratios) are what we
+validate against the paper (see EXPERIMENTS.md for the claim mapping).
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.graph.datasets import load_dataset
+from repro.runtime.gnn_engine import GNNInferenceEngine
+
+# benchmark-scale knobs (one place to turn for deeper runs)
+SCALE = 0.004
+MAX_NODES = 60_000
+MAX_BATCHES = 8
+BATCH_SIZE = 512
+FANOUTS = {"2,2,2": (2, 2, 2), "8,4,2": (8, 4, 2), "15,10,5": (15, 10, 5)}
+DATASETS = ("reddit", "yelp", "amazon", "ogbn-products", "ogbn-papers100m")
+CACHE_BYTES = 2_000_000
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")
+    sys.stdout.flush()
+
+
+def make_engine(
+    dataset_name: str,
+    *,
+    model: str = "graphsage",
+    fanouts=(8, 4, 2),
+    batch_size: int = BATCH_SIZE,
+    scale: float = SCALE,
+    seed: int = 0,
+) -> GNNInferenceEngine:
+    ds = load_dataset(dataset_name, scale=scale, seed=seed, max_nodes=MAX_NODES)
+    return GNNInferenceEngine(
+        ds, model=model, fanouts=tuple(fanouts), batch_size=batch_size, seed=seed
+    )
+
+
+def run_policy(engine: GNNInferenceEngine, policy: str, cache_bytes: int = CACHE_BYTES, **kw):
+    engine.prepare(policy, total_cache_bytes=cache_bytes, **kw)
+    return engine.run(max_batches=MAX_BATCHES)

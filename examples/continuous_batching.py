@@ -1,0 +1,31 @@
+"""Scenario: continuous batching — ragged requests through shared slots.
+
+Five requests with different prompt lengths and budgets stream through a
+2-slot server; per-slot cache lengths let them decode in one jitted step.
+
+    PYTHONPATH=src python examples/continuous_batching.py
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models.lm.model import init_params
+from repro.runtime.serve_engine import BatchedServer
+
+cfg = dataclasses.replace(get_smoke("granite-3-8b"), dtype="float32")
+params = init_params(jax.random.PRNGKey(0), cfg)
+
+rng = np.random.default_rng(0)
+server = BatchedServer(cfg, params, slots=2, max_len=64)
+for i, (plen, budget) in enumerate([(5, 8), (12, 4), (7, 10), (20, 6), (9, 5)]):
+    server.submit(rng.integers(0, cfg.vocab, plen).astype(np.int32), budget, req_id=i)
+
+results = server.run()
+total = sum(len(r.generated) for r in results)
+print(f"served {len(results)} requests / {total} tokens in {server.elapsed:.2f}s "
+      f"({total/server.elapsed:.1f} tok/s) on 2 slots")
+for r in results:
+    print(f"  req {r.req_id}: prompt {len(r.prompt):2d} tokens -> generated {r.generated}")

@@ -1,0 +1,25 @@
+"""Scenario: how the Eq.1 split and hit rates react to the cache budget.
+
+Sweeps the total cache budget and prints DCI's allocation decision plus the
+resulting hit rates — the Fig. 9 experiment as a runnable script.
+
+    PYTHONPATH=src python examples/gnn_dual_cache.py
+"""
+
+from repro.graph import load_dataset
+from repro.runtime.gnn_engine import GNNInferenceEngine
+
+dataset = load_dataset("ogbn-products", scale=0.004, seed=0)
+
+print(f"{'budget':>12s} {'C_adj':>10s} {'C_feat':>10s} {'adj_hit':>8s} {'feat_hit':>9s}")
+for budget in (250_000, 1_000_000, 4_000_000, 16_000_000):
+    engine = GNNInferenceEngine(dataset, fanouts=(15, 10, 5), batch_size=256)
+    pipe = engine.prepare("dci", total_cache_bytes=budget)
+    rep = engine.run(max_batches=6)
+    a = pipe.caches.allocation
+    print(
+        f"{budget:12,d} {a.adj_bytes:10,d} {a.feat_bytes:10,d} "
+        f"{rep.adj_hit_rate:8.3f} {rep.feat_hit_rate:9.3f}"
+    )
+print("\nlarger budgets -> both caches saturate; the split follows the")
+print("measured sample:feature time ratio (Eq. 1), not a fixed fraction.")

@@ -1,0 +1,36 @@
+"""Scenario: batched LM serving with DCI's dual cache (embeddings + experts).
+
+Runs the MoE smoke model: profiles a request sample, Eq.1-allocates the
+budget between hot-embedding rows and hot-expert weights, then serves a
+batch of requests and reports hit rates — the paper's workflow transplanted
+to transformer serving (DESIGN.md §4).
+
+    PYTHONPATH=src python examples/serve_lm_dci.py
+"""
+
+import subprocess
+import sys
+
+for arch, budget in (("phi3.5-moe-42b-a6.6b", 2.0), ("gemma-2b", 1.0)):
+    print(f"=== {arch} (budget {budget} MB) ===")
+    rc = subprocess.call(
+        [
+            sys.executable,
+            "-m",
+            "repro.launch.serve",
+            "--arch",
+            arch,
+            "--smoke",
+            "--requests",
+            "8",
+            "--prompt-len",
+            "48",
+            "--gen-len",
+            "16",
+            "--cache-mb",
+            str(budget),
+        ],
+    )
+    if rc != 0:
+        sys.exit(rc)
+print("done — see repro.launch.serve for the full driver.")

@@ -1,0 +1,60 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf helper: dry-run one (arch, shape) under several variants and print
+the three roofline terms side by side.
+
+  PYTHONPATH=src python scripts/perf_compare.py deepseek-v2-236b train_4k \
+      baseline moe_shardmap moe_shardmap,batch2d
+"""
+
+import sys
+
+from repro.launch.dryrun import dryrun_one
+from repro.launch.mesh import HW
+
+
+def terms(rec):
+    h = rec["hlo"]
+    coll = sum(h["collective_bytes_per_device"].values())
+    return {
+        "compute_s": h["flops_per_device"] / HW["peak_flops_bf16"],
+        "memory_s": h["dot_bytes_per_device"] / HW["hbm_bw"],
+        "collective_s": coll / HW["ici_bw_per_link"],
+        "flops": h["flops_per_device"],
+        "dot_bytes": h["dot_bytes_per_device"],
+        "coll_bytes": coll,
+    }
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    variants = sys.argv[3:] or ["baseline"]
+    rows = {}
+    for v in variants:
+        rec = dryrun_one(arch, shape, variant=v, verbose=False)
+        rows[v] = terms(rec)
+    print(f"{arch} x {shape} (16x16, per-device seconds)")
+    hdr = f"{'variant':28s} {'compute':>10s} {'memory':>10s} {'collective':>11s} {'dominant':>10s}"
+    print(hdr)
+    for v, t in rows.items():
+        dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: t[k])
+        print(
+            f"{v:28s} {t['compute_s']:10.3e} {t['memory_s']:10.3e} "
+            f"{t['collective_s']:11.3e} {dom.replace('_s',''):>10s}"
+        )
+    base = rows.get("baseline")
+    if base:
+        for v, t in rows.items():
+            if v == "baseline":
+                continue
+            print(
+                f"  {v}: compute x{base['compute_s']/max(t['compute_s'],1e-12):.2f}, "
+                f"memory x{base['memory_s']/max(t['memory_s'],1e-12):.2f}, "
+                f"collective x{base['collective_s']/max(t['collective_s'],1e-12):.2f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,250 @@
+"""Post-optimization HLO analysis for the dry-run roofline.
+
+XLA's ``compiled.cost_analysis()`` visits each ``while`` body ONCE, so a
+46-layer scanned model reports ~1/46th of its FLOPs.  This module parses
+the optimized HLO text, recovers loop trip counts (scan lowers to
+``while`` whose condition compares the induction variable against a bound
+that is a constant element of the init tuple), and aggregates:
+
+  * dot FLOPs       — 2 · |result| · |contraction dims|, × trip multiplier
+  * dot bytes       — operand + result bytes of every dot (the matmul HBM
+                      traffic: weights, activations, KV reads), × multiplier
+  * collective bytes — operand bytes of all-gather / all-reduce /
+                      reduce-scatter / all-to-all / collective-permute,
+                      × multiplier, per op kind
+
+The optimized module is post-SPMD: every shape is one partition's share,
+so all numbers here are PER-DEVICE — exactly what the per-chip roofline
+terms divide by peak FLOP/s / HBM bw / ICI bw.  Fusion computations are
+walked with their caller's multiplier; elementwise fusion traffic is NOT
+counted (documented approximation — matmul/collective traffic dominates
+every assigned shape).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["analyze_hlo", "HLOSummary"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+|pred)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+# Computation headers start at column 0 (instructions are indented).
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s+\(")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    """All (dtype, dims) array shapes in a type string (handles tuples)."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = tuple(int(x) for x in dims.split(",")) if dims else ()
+        out.append((dt, d))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str  # operand list + attributes (raw)
+    comp: str
+
+    def operand_names(self) -> list[str]:
+        # names inside the top-level parens, before attributes
+        depth = 0
+        end = len(self.rest)
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth < 0:
+                    end = i
+                    break
+        return re.findall(r"%([\w.\-]+)", self.rest[:end])
+
+    def attr(self, key: str) -> str | None:
+        m = re.search(rf"{key}=%?([\w.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+    def int_set_attr(self, key: str) -> tuple[int, ...]:
+        m = re.search(rf"{key}=\{{([0-9,]*)\}}", self.rest)
+        if not m or not m.group(1):
+            return ()
+        return tuple(int(x) for x in m.group(1).split(","))
+
+
+@dataclasses.dataclass
+class HLOSummary:
+    flops: float
+    dot_bytes: float
+    collective_bytes: dict[str, float]
+    collective_counts: dict[str, int]
+    parameter_bytes: int
+    num_whiles: int
+    unresolved_trip_counts: int
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _parse(hlo: str) -> tuple[dict[str, Instr], dict[str, list[Instr]], str]:
+    instrs: dict[str, Instr] = {}
+    comps: dict[str, list[Instr]] = {}
+    comp = "?"
+    entry = "?"
+    for line in hlo.splitlines():
+        cm = _COMP_RE.match(line)
+        if cm:
+            comp = cm.group(2)
+            comps.setdefault(comp, [])
+            if cm.group(1):
+                entry = comp
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            ins = Instr(im.group(1), im.group(2), im.group(3), im.group(4), comp)
+            instrs[ins.name] = ins
+            comps.setdefault(comp, []).append(ins)
+    return instrs, comps, entry
+
+
+def _resolve_constant(name: str, instrs: dict[str, Instr]) -> int | None:
+    ins = instrs.get(name)
+    for _ in range(8):  # follow copies/converts/broadcasts
+        if ins is None:
+            return None
+        if ins.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + ins.rest)
+            return int(m.group(1)) if m else None
+        if ins.op in ("copy", "convert", "broadcast", "bitcast", "reshape"):
+            ops = ins.operand_names()
+            ins = instrs.get(ops[0]) if ops else None
+            continue
+        return None
+    return None
+
+
+def _while_trip_count(w: Instr, instrs: dict[str, Instr], comps: dict[str, list[Instr]]) -> int | None:
+    """Trip count of a counted loop (lax.scan lowering).
+
+    The condition computation holds the bound as a scalar s32 constant
+    (either compared directly or inside a wrapped_compare fusion whose
+    constant operand still lives in the condition computation).  Scans
+    start at 0 with step 1, so the bound IS the trip count; take the max
+    constant to be safe against a stray 0.
+    """
+    cond_name = w.attr("condition")
+    if cond_name is None or cond_name not in comps:
+        return None
+    vals = []
+    for ins in comps[cond_name]:
+        if ins.op == "constant" and ins.type_str.strip().startswith("s32[]"):
+            v = _resolve_constant(ins.name, instrs)
+            if v is not None:
+                vals.append(v)
+    if not vals:
+        return None
+    return max(vals)
+
+
+def analyze_hlo(hlo: str) -> HLOSummary:
+    instrs, comps, entry = _parse(hlo)
+
+    # computation multipliers: walk from entry through while/call/fusion.
+    mult: dict[str, float] = {}
+    num_whiles = 0
+    unresolved = 0
+
+    def visit(comp: str, m: float):
+        nonlocal num_whiles, unresolved
+        mult[comp] = mult.get(comp, 0.0) + m
+        for ins in comps.get(comp, []):
+            if ins.op == "while":
+                num_whiles += 1
+                body = ins.attr("body")
+                cond = ins.attr("condition")
+                tc = _while_trip_count(ins, instrs, comps)
+                if tc is None:
+                    tc = 1
+                    unresolved += 1
+                if body in comps:
+                    visit(body, m * max(tc, 1))
+                if cond in comps:
+                    visit(cond, m * max(tc, 1))
+            elif ins.op in ("fusion", "call", "custom-call", "map", "reduce", "reduce-window", "sort", "scatter", "select-and-scatter", "conditional"):
+                for key in ("calls", "to_apply", "true_computation", "false_computation"):
+                    callee = ins.attr(key)
+                    if callee in comps:
+                        visit(callee, m)
+
+    visit(entry, 1.0)
+
+    flops = 0.0
+    dot_bytes = 0.0
+    coll_bytes = {op: 0.0 for op in _COLLECTIVES}
+    coll_counts = {op: 0 for op in _COLLECTIVES}
+    param_bytes = 0
+
+    for name, ins in instrs.items():
+        m = mult.get(ins.comp, 0.0)
+        if m == 0.0:
+            continue
+        if ins.op == "dot":
+            out_elems = 1
+            for _, dims in _shape_dims(ins.type_str):
+                for d in dims:
+                    out_elems *= d
+            lhs_contract = ins.int_set_attr("lhs_contracting_dims")
+            ops = ins.operand_names()
+            csize = 1
+            if ops and ops[0] in instrs:
+                lhs_shapes = _shape_dims(instrs[ops[0]].type_str)
+                if lhs_shapes:
+                    lhs_dims = lhs_shapes[0][1]
+                    for d in lhs_contract:
+                        if d < len(lhs_dims):
+                            csize *= lhs_dims[d]
+            flops += m * 2.0 * out_elems * csize
+            obytes = sum(_nbytes(instrs[o].type_str) for o in ops if o in instrs)
+            dot_bytes += m * (obytes + _nbytes(ins.type_str))
+        elif ins.op in _COLLECTIVES:
+            ops = ins.operand_names()
+            obytes = sum(_nbytes(instrs[o].type_str) for o in ops if o in instrs)
+            if obytes == 0:
+                obytes = _nbytes(ins.type_str)
+            coll_bytes[ins.op] += m * obytes
+            coll_counts[ins.op] += int(m)
+        elif ins.op == "parameter" and ins.comp == entry:
+            param_bytes += _nbytes(ins.type_str)
+
+    return HLOSummary(
+        flops=flops,
+        dot_bytes=dot_bytes,
+        collective_bytes=coll_bytes,
+        collective_counts=coll_counts,
+        parameter_bytes=param_bytes,
+        num_whiles=num_whiles,
+        unresolved_trip_counts=unresolved,
+    )

@@ -1,0 +1,54 @@
+"""Minimal dependency-free checkpointing: pytree ↔ .npz with path keys."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint"]
+
+_SEP = "||"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            p.key if isinstance(p, jax.tree_util.DictKey) else str(getattr(p, "idx", p))
+            for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            out[key + "@bf16"] = arr.astype(np.float32)
+        else:
+            out[key] = arr
+    return out
+
+
+def save_checkpoint(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez_compressed(path, **_flatten(tree))
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    with np.load(path if path.endswith(".npz") else path + ".npz") as data:
+        flat = dict(data.items())
+
+    def restore(path_keys, leaf):
+        key = _SEP.join(
+            p.key if isinstance(p, jax.tree_util.DictKey) else str(getattr(p, "idx", p))
+            for p in path_keys
+        )
+        if key + "@bf16" in flat:
+            arr = jnp.asarray(flat[key + "@bf16"], jnp.bfloat16)
+        else:
+            arr = jnp.asarray(flat[key])
+        if arr.shape != leaf.shape:
+            raise ValueError(f"checkpoint mismatch at {key}: {arr.shape} vs {leaf.shape}")
+        return arr
+
+    return jax.tree_util.tree_map_with_path(restore, like)

@@ -1,0 +1,32 @@
+"""Gemma 2B [arXiv:2403.08295].
+
+18 layers, d_model=2048, 8 heads with MQA (kv=1), head_dim=256,
+GeGLU d_ff=16384, vocab=256000.
+"""
+
+from repro.configs.common import reduced
+from repro.models.lm.config import LMConfig
+
+CONFIG = LMConfig(
+    arch_id="gemma-2b",
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab=256000,
+    activation="geglu",
+)
+
+SMOKE = reduced(
+    CONFIG,
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=32,
+    d_ff=256,
+    vocab=512,
+)

@@ -1,0 +1,24 @@
+"""DCI core: the paper's contribution (allocation + filling + dual cache)."""
+
+from repro.core.allocation import (
+    DEFAULT_RESERVE_BYTES,
+    CacheAllocation,
+    allocate_capacity,
+    available_budget,
+)
+from repro.core.cache import DualCache
+from repro.core.policies import POLICIES, PreparedPipeline, prepare
+from repro.core.presample import PresampleStats, run_presampling
+
+__all__ = [
+    "DEFAULT_RESERVE_BYTES",
+    "CacheAllocation",
+    "allocate_capacity",
+    "available_budget",
+    "DualCache",
+    "POLICIES",
+    "PreparedPipeline",
+    "prepare",
+    "PresampleStats",
+    "run_presampling",
+]

@@ -1,0 +1,82 @@
+"""Workload-aware cache-capacity allocation (paper §IV-A, Eq. 1).
+
+Two decisions happen here:
+
+1. *How much memory is available for caching at all* — run a few
+   pre-sampling batches, observe the peak workload footprint, subtract it
+   plus a safety reserve (the paper reserves 1 GB, following PaGraph) from
+   total device memory.
+2. *How to split that budget between the two caches* — proportionally to
+   the measured stage times (Eq. 1):
+
+       C_adj  = Σ t_sample  / Σ (t_sample + t_feature) · C
+       C_feat = Σ t_feature / Σ (t_sample + t_feature) · C
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["CacheAllocation", "allocate_capacity", "available_budget", "DEFAULT_RESERVE_BYTES"]
+
+DEFAULT_RESERVE_BYTES = 1 << 30  # 1 GB, the paper's reference reserve
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheAllocation:
+    total_bytes: int
+    adj_bytes: int
+    feat_bytes: int
+    sample_fraction: float  # Σt_sample / Σ(t_sample+t_feature)
+
+    def __post_init__(self):
+        assert self.adj_bytes + self.feat_bytes <= self.total_bytes + 1
+
+
+def available_budget(
+    device_memory_bytes: int,
+    peak_workload_bytes: int,
+    reserve_bytes: int = DEFAULT_RESERVE_BYTES,
+) -> int:
+    """Workload-aware total budget C: what's left after the live workload."""
+    return max(device_memory_bytes - peak_workload_bytes - reserve_bytes, 0)
+
+
+def allocate_capacity(
+    sample_times: list[float],
+    feature_times: list[float],
+    total_bytes: int,
+    *,
+    adj_need_bytes: int | None = None,
+    feat_need_bytes: int | None = None,
+) -> CacheAllocation:
+    """Eq. 1: split ``total_bytes`` by the measured stage-time ratio.
+
+    Saturation-aware spill (beyond-paper refinement): when the Eq. 1 share
+    of one cache exceeds what that cache can usefully hold (``*_need``),
+    the excess spills to the other.  With a budget covering the whole
+    dataset both caches saturate — matching the paper's Fig. 9 observation
+    that all strategies coincide once everything fits.
+    """
+    if len(sample_times) != len(feature_times) or not sample_times:
+        raise ValueError("need equal, non-empty per-batch stage time lists")
+    t_s = float(sum(sample_times))
+    t_f = float(sum(feature_times))
+    denom = t_s + t_f
+    frac = 0.5 if denom <= 0 else t_s / denom
+    total = int(total_bytes)
+    adj = int(total * frac)
+    feat = total - adj
+    if adj_need_bytes is not None and adj > adj_need_bytes:
+        feat += adj - adj_need_bytes
+        adj = adj_need_bytes
+    if feat_need_bytes is not None and feat > feat_need_bytes:
+        spill = feat - feat_need_bytes
+        feat = feat_need_bytes
+        adj = min(adj + spill, adj_need_bytes) if adj_need_bytes is not None else adj + spill
+    return CacheAllocation(
+        total_bytes=total,
+        adj_bytes=adj,
+        feat_bytes=feat,
+        sample_fraction=frac,
+    )

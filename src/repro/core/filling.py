@@ -1,0 +1,18 @@
+"""Cache-filling algorithms (paper §IV-B), re-exported from their homes.
+
+The implementations live next to the data structures they fill:
+  * adjacency cache (Alg. 1): ``repro.graph.csc.two_level_sort`` +
+    ``repro.graph.csc.build_adj_cache``
+  * feature cache (sort-free above-mean fill):
+    ``repro.graph.features.build_feature_cache``
+  * LM-serving variants (hot embeddings / hot experts):
+    ``repro.runtime.lm_cache.build_serving_caches``
+
+This module is the documented entry point for "the filling algorithm" as a
+concept; ``core.cache.DualCache.build`` composes them.
+"""
+
+from repro.graph.csc import build_adj_cache, two_level_sort
+from repro.graph.features import build_feature_cache
+
+__all__ = ["build_adj_cache", "two_level_sort", "build_feature_cache"]

@@ -1,0 +1,31 @@
+from repro.graph.csc import AdjCache, CSCGraph, build_adj_cache, two_level_sort
+from repro.graph.datasets import DATASETS, DatasetSpec, SyntheticGraphDataset, load_dataset
+from repro.graph.features import FeatureStore, build_feature_cache, plain_feature_store
+from repro.graph.sampling import (
+    BlockSample,
+    DeviceGraph,
+    count_visits,
+    device_graph,
+    sample_blocks,
+    sample_neighbors,
+)
+
+__all__ = [
+    "AdjCache",
+    "CSCGraph",
+    "build_adj_cache",
+    "two_level_sort",
+    "DATASETS",
+    "DatasetSpec",
+    "SyntheticGraphDataset",
+    "load_dataset",
+    "FeatureStore",
+    "build_feature_cache",
+    "plain_feature_store",
+    "BlockSample",
+    "DeviceGraph",
+    "count_visits",
+    "device_graph",
+    "sample_blocks",
+    "sample_neighbors",
+]

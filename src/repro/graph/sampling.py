@@ -1,0 +1,214 @@
+"""Vectorized neighbor sampling (paper §II-B) with optional adjacency cache.
+
+The sampler is pure JAX and jittable: for every seed node it draws
+``fanout`` uniform slots ``r ~ U[0, deg)`` and reads the neighbor at that
+slot.  With DCI's adjacency cache active, the hit test is the paper's
+single compare ``r < cached_len[v]`` (Fig. 6c): hits read from the compact
+cache arrays, misses fall back to the (two-level-sorted) host CSC — the
+UVA path on the paper's GPU, the HBM full-table path on TPU.
+
+Zero-degree nodes self-loop (counted as hits: no host access is needed).
+Sampling is with replacement; see DESIGN.md §3 for why this does not
+change the cache algorithms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csc import AdjCache, CSCGraph
+
+__all__ = [
+    "DeviceGraph",
+    "LayerSample",
+    "BlockSample",
+    "device_graph",
+    "sample_neighbors",
+    "sample_blocks",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceGraph:
+    """Graph structure as device arrays, with an optional adjacency cache.
+
+    Without a cache, ``row_index`` is the original CSC order and
+    ``cached_len`` is all zeros.  With a cache, ``row_index`` MUST be the
+    two-level-sorted copy (slots refer to sorted order on both paths).
+    """
+
+    col_ptr: jax.Array  # int32[N+1]
+    row_index: jax.Array  # int32[E]   ("host"/UVA side)
+    cache_ptr: jax.Array  # int32[N+1]
+    cache_row_index: jax.Array  # int32[>=1] (padded to at least 1)
+    cached_len: jax.Array  # int32[N]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.col_ptr.shape[0] - 1
+
+    def tree_flatten(self):
+        return (
+            (self.col_ptr, self.row_index, self.cache_ptr, self.cache_row_index, self.cached_len),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    DeviceGraph, DeviceGraph.tree_flatten, DeviceGraph.tree_unflatten
+)
+
+
+def device_graph(
+    graph: CSCGraph,
+    *,
+    sorted_row_index: np.ndarray | None = None,
+    adj_cache: AdjCache | None = None,
+) -> DeviceGraph:
+    """Stage a CSC graph (and optionally its DCI adjacency cache) on device."""
+    n = graph.num_nodes
+    if adj_cache is not None:
+        if sorted_row_index is None:
+            raise ValueError("adjacency cache requires the two-level-sorted row_index")
+        row = sorted_row_index
+        cache_ptr = adj_cache.cache_ptr.astype(np.int32)
+        cache_row = adj_cache.cache_row_index
+        cached_len = adj_cache.cached_len
+    else:
+        row = graph.row_index if sorted_row_index is None else sorted_row_index
+        cache_ptr = np.zeros(n + 1, np.int32)
+        cache_row = np.empty(0, np.int32)
+        cached_len = np.zeros(n, np.int32)
+    if cache_row.shape[0] == 0:
+        cache_row = np.zeros(1, np.int32)  # keep gathers well-defined
+    return DeviceGraph(
+        col_ptr=jnp.asarray(graph.col_ptr, jnp.int32),
+        row_index=jnp.asarray(row, jnp.int32),
+        cache_ptr=jnp.asarray(cache_ptr, jnp.int32),
+        cache_row_index=jnp.asarray(cache_row, jnp.int32),
+        cached_len=jnp.asarray(cached_len, jnp.int32),
+    )
+
+
+class LayerSample(dict):
+    pass
+
+
+def sample_neighbors(
+    key: jax.Array, g: DeviceGraph, seeds: jax.Array, fanout: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sample ``fanout`` in-neighbors per seed (with replacement).
+
+    Returns ``(neighbors[S, fanout], hits[S, fanout], edge_slots[S, fanout])``
+    where ``edge_slots`` are global positions ``col_ptr[v] + r`` used for
+    visit counting during pre-sampling.
+    """
+    seeds = seeds.astype(jnp.int32)
+    start = g.col_ptr[seeds]  # [S]
+    deg = g.col_ptr[seeds + 1] - start  # [S]
+    safe_deg = jnp.maximum(deg, 1)
+    r = jax.random.randint(key, (seeds.shape[0], fanout), 0, safe_deg[:, None])
+    edge_slots = start[:, None] + r
+    host_nbr = g.row_index[edge_slots]
+
+    clen = g.cached_len[seeds]  # [S]
+    hit = r < clen[:, None]
+    cache_idx = g.cache_ptr[seeds][:, None] + jnp.minimum(r, jnp.maximum(clen - 1, 0)[:, None])
+    cache_nbr = g.cache_row_index[jnp.minimum(cache_idx, g.cache_row_index.shape[0] - 1)]
+    nbr = jnp.where(hit, cache_nbr, host_nbr)
+
+    isolated = (deg == 0)[:, None]
+    nbr = jnp.where(isolated, seeds[:, None], nbr)
+    hit = jnp.where(isolated, True, hit)
+    return nbr, hit, edge_slots
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSample:
+    """Layered mini-batch (GraphSAGE-style blocks).
+
+    ``frontiers[0]`` are the batch seeds; ``frontiers[l+1]`` has layout
+    ``[frontiers[l] | neighbors_l.reshape(-1)]`` so the model can split a
+    feature matrix over frontier ``l+1`` into (self, neighbors) parts by a
+    static reshape.  ``input_nodes`` is the deepest frontier — these are the
+    rows the feature loader must fetch.
+    """
+
+    frontiers: tuple[jax.Array, ...]
+    neighbor_hits: tuple[jax.Array, ...]  # per layer, [S_l, fanout_l]
+    edge_slots: tuple[jax.Array, ...]
+    fanouts: tuple[int, ...]
+
+    @property
+    def input_nodes(self) -> jax.Array:
+        return self.frontiers[-1]
+
+    def adj_hit_stats(self) -> tuple[jax.Array, jax.Array]:
+        hits = sum(jnp.sum(h) for h in self.neighbor_hits)
+        total = sum(h.size for h in self.neighbor_hits)
+        return hits, jnp.asarray(total)
+
+
+@functools.partial(jax.jit, static_argnames=("fanouts",))
+def sample_blocks(
+    key: jax.Array, g: DeviceGraph, seeds: jax.Array, fanouts: tuple[int, ...]
+) -> BlockSample:
+    """Multi-layer fan-out sampling producing GraphSAGE blocks.
+
+    ``fanouts`` is listed outermost-layer-first (the paper's '15,10,5'
+    convention); layer 0 of the expansion uses the *last* element, matching
+    DGL's semantics where fan-outs map to model layers from input to output.
+    """
+    frontiers = [seeds.astype(jnp.int32)]
+    hits_all = []
+    slots_all = []
+    frontier = frontiers[0]
+    for i, fanout in enumerate(reversed(fanouts)):
+        key, sub = jax.random.split(key)
+        nbr, hit, slots = sample_neighbors(sub, g, frontier, fanout)
+        frontier = jnp.concatenate([frontier, nbr.reshape(-1)])
+        frontiers.append(frontier)
+        hits_all.append(hit)
+        slots_all.append(slots)
+    return BlockSample(
+        frontiers=tuple(frontiers),
+        neighbor_hits=tuple(hits_all),
+        edge_slots=tuple(slots_all),
+        fanouts=tuple(fanouts),
+    )
+
+
+jax.tree_util.register_pytree_node(
+    BlockSample,
+    lambda b: ((b.frontiers, b.neighbor_hits, b.edge_slots), b.fanouts),
+    lambda aux, ch: BlockSample(frontiers=ch[0], neighbor_hits=ch[1], edge_slots=ch[2], fanouts=aux),
+)
+
+
+def count_visits(
+    num_nodes: int, num_edges: int, blocks: Sequence[BlockSample]
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pre-sampling visit counters (paper §IV-B).
+
+    Node counts = how often each node's *feature* row is loaded (membership
+    in input frontiers); edge counts = how often each adjacency element is
+    touched by sampling.  Both are one scatter-add per block.
+    """
+    node_counts = jnp.zeros(num_nodes, jnp.int32)
+    edge_counts = jnp.zeros(num_edges, jnp.int32)
+    for b in blocks:
+        node_counts = node_counts.at[b.input_nodes].add(1)
+        for slots in b.edge_slots:
+            edge_counts = edge_counts.at[slots.reshape(-1)].add(1)
+    return np.asarray(node_counts), np.asarray(edge_counts)

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: DCI's two-source cached row gather.
+
+TPU adaptation of the paper's cache-hit feature load (DESIGN.md §3): the
+row id (``indices``) and cache slot (``positions``) arrays are *scalar
+prefetched* — Pallas knows them before tile DMA, so each grid step DMAs
+exactly one feature-row tile from the right source (hot cache vs full
+table) HBM→VMEM.  The feature axis is tiled at up to 512 lanes (multiples
+of the 128-lane VREG width); rows are the outer grid dimension.
+
+A hit (`pos >= 0`) reads the hot-table row, a miss reads the host-table
+row.  Addressing happens in the BlockSpec index_map (so no gather
+instruction runs in the body); the body is a select between the two staged
+tiles.  Three scalar operands are prefetched: raw positions (hit test),
+clamped positions (safe hot addressing), clamped indices (host addressing).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["cached_gather"]
+
+LANE = 128
+
+
+def _kernel(idx_ref, pos_raw_ref, pos_clamped_ref, hot_ref, host_ref, out_ref):
+    del idx_ref, pos_clamped_ref
+    i = pl.program_id(0)
+    hit = pos_raw_ref[i] >= 0
+    out_ref[...] = jnp.where(hit, hot_ref[...], host_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def cached_gather(
+    hot_table: jax.Array,  # [H, F]
+    host_table: jax.Array,  # [N, F]
+    indices: jax.Array,  # int32 [S]
+    positions: jax.Array,  # int32 [S] (slot or -1)
+    *,
+    block_f: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    if hot_table.shape[1] != host_table.shape[1]:
+        raise ValueError("hot and host tables must share the feature dim")
+    s = indices.shape[0]
+    f = host_table.shape[1]
+    block_f = min(block_f, f)
+    if f % block_f != 0:
+        pad = block_f - f % block_f
+        hot_table = jnp.pad(hot_table, ((0, 0), (0, pad)))
+        host_table = jnp.pad(host_table, ((0, 0), (0, pad)))
+    fp = host_table.shape[1]
+
+    idx = jnp.clip(indices.astype(jnp.int32), 0, host_table.shape[0] - 1)
+    pos_raw = positions.astype(jnp.int32)
+    pos_clamped = jnp.clip(pos_raw, 0, hot_table.shape[0] - 1)
+
+    grid = (s, fp // block_f)
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                # hot tile: row picked by the prefetched (clamped) cache slot
+                pl.BlockSpec((1, block_f), lambda i, j, idx, praw, pcl: (pcl[i], j)),
+                # host tile: row picked by the prefetched node id
+                pl.BlockSpec((1, block_f), lambda i, j, idx, praw, pcl: (idx[i], j)),
+            ],
+            out_specs=pl.BlockSpec((1, block_f), lambda i, j, idx, praw, pcl: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((s, fp), host_table.dtype),
+        interpret=interpret,
+    )(idx, pos_raw, pos_clamped, hot_table, host_table)
+    return out[:, :f]

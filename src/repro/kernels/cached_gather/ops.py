@@ -1,0 +1,33 @@
+"""Public op: cached feature gather (kernel on TPU, oracle elsewhere).
+
+On a real TPU deployment ``use_kernel=True`` routes through the Pallas
+kernel (compiled); on this CPU container the kernel runs in interpret mode
+for validation and the oracle is the production path.  Cost note: the
+select-based kernel DMAs both candidate tiles per row; a two-pass
+hit-partitioned variant would halve DMA traffic at the cost of a stable
+partition — recorded as a §Perf candidate.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.cached_gather.kernel import cached_gather
+from repro.kernels.cached_gather.ref import cached_gather_ref
+
+__all__ = ["cached_feature_gather"]
+
+
+def cached_feature_gather(
+    hot_table: jax.Array,
+    host_table: jax.Array,
+    indices: jax.Array,
+    positions: jax.Array,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Gather feature rows via DCI's dual-source cache."""
+    if use_kernel:
+        return cached_gather(hot_table, host_table, indices, positions, interpret=interpret)
+    return cached_gather_ref(hot_table, host_table, indices, positions)

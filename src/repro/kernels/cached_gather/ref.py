@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the DCI two-source cached feature gather."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cached_gather_ref"]
+
+
+def cached_gather_ref(
+    hot_table: jax.Array,  # [H, F]
+    host_table: jax.Array,  # [N, F]
+    indices: jax.Array,  # int32 [S] node ids
+    positions: jax.Array,  # int32 [S] hot slot or -1
+) -> jax.Array:
+    hit = positions >= 0
+    safe_pos = jnp.clip(positions, 0, hot_table.shape[0] - 1)
+    safe_idx = jnp.clip(indices, 0, host_table.shape[0] - 1)
+    return jnp.where(hit[:, None], hot_table[safe_pos], host_table[safe_idx])

@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: blocked online-softmax attention.
+
+Supports the attention variants the assigned architectures need at
+prefill: causal masking, sliding-window (Gemma-2 local layers, the
+long_500k dense variant) and logit soft-capping (Gemma-2).  Classic
+flash-attention structure: grid = (q blocks, k blocks) with the k axis
+sequential; running max / normalizer / weighted accumulator live in VMEM
+scratch across k steps.  Block sizes default to 128×128 — MXU-aligned
+(the q·kᵀ and p·v contractions are 128-multiple matmuls) and small enough
+that scratch (block_q·d + 2·block_q floats) stays a fraction of VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_2d"]
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    out_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    block_q: int,
+    block_k: int,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+    num_k_blocks: int,
+    kv_len: int,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qi = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    ki = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = ki < kv_len  # padded kv positions never attend
+    if causal:
+        mask &= qi >= ki
+    if window is not None:
+        mask &= qi - ki < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    # Rows where everything so far is masked keep m == NEG_INF; exp() of
+    # (NEG_INF - NEG_INF) would be 1, so zero those probabilities.
+    p = jnp.where(s <= NEG_INF, 0.0, p)
+    alpha = jnp.where(m_prev <= NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+    l_new = alpha * l_prev + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[...], preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == num_k_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        out_ref[...] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "block_q", "block_k", "interpret")
+)
+def flash_attention_2d(
+    q: jax.Array,  # [Sq, D]
+    k: jax.Array,  # [Sk, D]
+    v: jax.Array,  # [Sk, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    sq, d = q.shape
+    sk = k.shape[0]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, pad_q), (0, 0)))
+    if pad_k:
+        # Padded kv positions are excluded inside the kernel via the
+        # ``ki < kv_len`` mask.
+        k = jnp.pad(k, ((0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, pad_k), (0, 0)))
+    sq_p, sk_p = q.shape[0], k.shape[0]
+    num_k_blocks = sk_p // block_k
+
+    kern = functools.partial(
+        _kernel,
+        block_q=block_q,
+        block_k=block_k,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        num_k_blocks=num_k_blocks,
+        kv_len=sk,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(sq_p // block_q, num_k_blocks),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:sq]

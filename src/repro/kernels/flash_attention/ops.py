@@ -1,0 +1,49 @@
+"""Public op: multi-head attention via the flash kernel or the oracle.
+
+``q``: [B, Hq, Sq, D]; ``k``/``v``: [B, Hkv, Sk, D] with Hq a multiple of
+Hkv (GQA/MQA — kv heads are repeated).  The 2-D kernel is vmapped over
+(batch, head).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_2d
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["multi_head_attention"]
+
+
+def _expand_kv(k: jax.Array, num_q_heads: int) -> jax.Array:
+    hkv = k.shape[1]
+    if hkv == num_q_heads:
+        return k
+    assert num_q_heads % hkv == 0
+    return jnp.repeat(k, num_q_heads // hkv, axis=1)
+
+
+def multi_head_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    hq = q.shape[1]
+    k = _expand_kv(k, hq)
+    v = _expand_kv(v, hq)
+    if use_kernel:
+        fn = functools.partial(
+            flash_attention_2d, causal=causal, window=window, softcap=softcap, interpret=interpret
+        )
+    else:
+        fn = functools.partial(attention_ref, causal=causal, window=window, softcap=softcap)
+    return jax.vmap(jax.vmap(fn))(q, k, v)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle: dense attention with causal / sliding-window / softcap."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jax.Array,  # [Sq, D]
+    k: jax.Array,  # [Sk, D]
+    v: jax.Array,  # [Sk, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    s = (q @ k.T) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = jnp.arange(q.shape[0])[:, None]
+    ki = jnp.arange(k.shape[0])[None, :]
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask &= qi >= ki
+    if window is not None:
+        mask &= qi - ki < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    # Fully-masked rows (can happen with tiny windows) produce NaN in
+    # softmax; zero them like flash attention does.
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return p @ v

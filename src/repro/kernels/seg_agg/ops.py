@@ -1,0 +1,22 @@
+"""Public op: padded-neighborhood aggregation (sum/mean)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.seg_agg.kernel import seg_agg
+from repro.kernels.seg_agg.ref import seg_agg_ref
+
+__all__ = ["aggregate_neighbors"]
+
+
+def aggregate_neighbors(
+    nbr_feats: jax.Array,
+    *,
+    mode: str = "sum",
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    if use_kernel:
+        return seg_agg(nbr_feats, mode=mode, interpret=interpret)
+    return seg_agg_ref(nbr_feats, mode=mode)

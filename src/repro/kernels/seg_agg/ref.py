@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for padded-neighborhood aggregation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["seg_agg_ref"]
+
+
+def seg_agg_ref(nbr_feats: jax.Array, *, mode: str = "sum") -> jax.Array:
+    """Aggregate ``[S, fanout, F]`` neighbor features to ``[S, F]``."""
+    if mode == "sum":
+        return nbr_feats.sum(axis=1)
+    if mode == "mean":
+        return nbr_feats.mean(axis=1)
+    raise ValueError(f"unknown mode {mode!r}")

@@ -1,0 +1,40 @@
+"""Multi-host bootstrap for real TPU pods.
+
+On actual hardware each host runs the same driver; this module wires
+``jax.distributed.initialize`` from the standard env vars and checks the
+mesh arithmetic matches the brief's production topology.  The CPU
+container never calls this (the dry-run uses host-device emulation); it is
+the deployment path (scripts/launch_pod.sh).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["initialize_from_env", "assert_production_topology"]
+
+
+def initialize_from_env() -> None:
+    """Initialize jax.distributed from COORDINATOR_ADDRESS/NUM_PROCESSES/
+    PROCESS_ID (or TPU metadata auto-detection when unset)."""
+    coord = os.environ.get("COORDINATOR_ADDRESS")
+    if coord:
+        jax.distributed.initialize(
+            coordinator_address=coord,
+            num_processes=int(os.environ["NUM_PROCESSES"]),
+            process_id=int(os.environ["PROCESS_ID"]),
+        )
+    else:  # TPU pod slices auto-detect
+        jax.distributed.initialize()
+
+
+def assert_production_topology(*, multi_pod: bool) -> None:
+    want = 512 if multi_pod else 256
+    got = jax.device_count()
+    if got != want:
+        raise RuntimeError(
+            f"production mesh needs {want} chips, found {got} "
+            f"({jax.process_count()} processes x {jax.local_device_count()} local)"
+        )

@@ -1,0 +1,240 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input shape × mesh).
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init), which is why they precede the module docstring's
+natural position.  Everything here is ShapeDtypeStruct-abstract: no real
+tensors are allocated; success of ``.lower().compile()`` plus the memory /
+cost / collective analyses are the deliverable (brief: MULTI-POD DRY-RUN,
+ROOFLINE ANALYSIS).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+  ... --multipod          # 2-pod (2,16,16) mesh instead of (16,16)
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    abstract_decode_inputs,
+    abstract_prefill_inputs,
+    abstract_train_inputs,
+)
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models.lm.sharding import (
+    batch_specs,
+    cache_specs,
+    data_axes,
+    param_specs,
+    to_shardings,
+)
+
+def _is_long(shape_name: str) -> bool:
+    return shape_name == "long_500k"
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, variant: str = "baseline"):
+    """Returns (fn, args, in_specs) for jit.
+
+    ``variant`` is a comma-separated set of §Perf switches:
+      baseline      — the paper-faithful / naive configuration
+      moe_shardmap  — explicit expert-parallel MoE via shard_map
+      mla_absorb    — matrix-absorbed MLA decode (no per-step k/v expansion)
+      batch2d       — train/prefill batch sharded over (data, model) [FSDP-
+                      style: weights gathered per layer instead of activation
+                      all-reduces]
+    """
+    from repro.models.lm import moe as moe_mod
+
+    variants = set(variant.split(","))
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ba = data_axes(mesh)
+    if "batch2d" in variants and shape.kind in ("train", "prefill"):
+        ba2 = ba + ("model",)
+        n_shards = 1
+        for a in ba2:
+            n_shards *= mesh.shape[a]
+        if shape.global_batch % n_shards == 0:
+            ba = ba2  # else: batch too small for the extra axis; keep 1D
+    from repro.models.lm import tp as tp_mod
+
+    if "tp_shardmap" in variants:
+        tp_mod.set_tp_context(mesh, "model")
+    else:
+        tp_mod.set_tp_context(None)
+        tp_mod.set_bf16_barrier(False)
+        tp_mod.set_remat_policy(None)
+        tp_mod.set_rwkv_chunked(False)
+    tp_mod.set_bf16_barrier("bf16_psum" in variants)
+    tp_mod.set_remat_policy("dots" if "remat_dots" in variants else None)
+    tp_mod.set_rwkv_chunked("rwkv_chunked" in variants)
+    if "moe_shardmap" in variants and cfg.moe is not None:
+        moe_data_axes = () if shape.global_batch == 1 else tuple(
+            a for a in ba if a != "model"
+        )
+        moe_mod.set_shard_map_context(mesh, moe_data_axes, "model")
+    else:
+        moe_mod.set_shard_map_context(None)
+
+    if shape.kind == "train":
+        params, opt_state, batch = abstract_train_inputs(cfg, shape)
+        fn = make_train_step(cfg)
+        in_specs = (param_specs(params), jax.tree.map(lambda *_: None, opt_state), batch_specs(batch, ba))
+        # optimizer moments shard like their parameters; step is replicated
+        opt_specs = {
+            "m": param_specs(params),
+            "v": param_specs(params),
+            "step": jax.sharding.PartitionSpec(),
+        }
+        in_specs = (param_specs(params), opt_specs, batch_specs(batch, ba))
+        args = (params, opt_state, batch)
+    elif shape.kind == "prefill":
+        params, batch = abstract_prefill_inputs(cfg, shape)
+        fn = make_prefill_step(cfg, cache_size=shape.seq_len)
+        in_specs = (param_specs(params), batch_specs(batch, ba))
+        args = (params, batch)
+    else:  # decode
+        long_mode = _is_long(shape_name)
+        params, tokens, caches, cache_len = abstract_decode_inputs(cfg, shape, long_mode=long_mode)
+        fn = make_serve_step(cfg, long_mode=long_mode, mla_absorb="mla_absorb" in variants)
+        bspec = () if shape.global_batch == 1 else ba
+        in_specs = (
+            param_specs(params),
+            batch_specs({"tokens": tokens}, bspec)["tokens"],
+            cache_specs(caches, bspec),
+            jax.sharding.PartitionSpec(),
+        )
+        args = (params, tokens, caches, cache_len)
+    return fn, args, in_specs
+
+
+def dryrun_one(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    verbose: bool = True,
+    variant: str = "baseline",
+) -> dict:
+    from repro.models.lm import moe as moe_mod
+
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        fn, args, in_specs = build_lowerable(arch, shape_name, mesh, variant)
+        in_shardings = to_shardings(mesh, in_specs)
+
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_shardings).lower(*args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+    finally:
+        moe_mod.set_shard_map_context(None)
+        from repro.models.lm import tp as tp_mod
+
+        tp_mod.set_tp_context(None)
+
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": int(mesh.size),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        rec["cost_analysis"] = {
+            k: float(v)
+            for k, v in cost.items()
+            if isinstance(v, (int, float)) and (k in ("flops", "bytes accessed") or k.startswith("bytes accessed"))
+        }
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis_error"] = repr(e)
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis_error"] = repr(e)
+    try:
+        from repro.analysis.hlo import analyze_hlo
+
+        s = analyze_hlo(compiled.as_text())
+        rec["hlo"] = {
+            "flops_per_device": s.flops,
+            "dot_bytes_per_device": s.dot_bytes,
+            "collective_bytes_per_device": s.collective_bytes,
+            "collective_counts": s.collective_counts,
+            "parameter_bytes_per_device": s.parameter_bytes,
+            "num_whiles": s.num_whiles,
+            "unresolved_trip_counts": s.unresolved_trip_counts,
+        }
+    except Exception as e:  # pragma: no cover
+        rec["hlo_error"] = repr(e)
+
+    if verbose:
+        h = rec.get("hlo", {})
+        coll = sum(h.get("collective_bytes_per_device", {}).values())
+        print(
+            f"[dryrun] {arch:24s} {shape_name:12s} mesh={rec['mesh']:8s} "
+            f"compile={rec['compile_s']:7.1f}s flops/dev={h.get('flops_per_device', float('nan')):.3e} "
+            f"coll/dev={coll:.3e}B"
+        )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all 40 arch x shape combos")
+    ap.add_argument("--out", default=None, help="write one JSON per combo under this dir")
+    ap.add_argument("--variant", default="baseline", help="comma-separated perf switches")
+    args = ap.parse_args()
+
+    combos = (
+        [(a, s) for a in ARCH_IDS for s in INPUT_SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    records = []
+    for arch, shape in combos:
+        rec = dryrun_one(arch, shape, multi_pod=args.multipod, variant=args.variant)
+        records.append(rec)
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            tag = f"{arch}_{shape}_{rec['mesh']}_{args.variant}".replace("/", "-").replace(",", "+")
+            tag = tag.replace("_baseline", "")
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=1)
+    ok = sum("cost_analysis" in r or "memory_analysis" in r for r in records)
+    print(f"[dryrun] {len(records)} combos compiled, {ok} with analyses")
+
+
+if __name__ == "__main__":
+    main()

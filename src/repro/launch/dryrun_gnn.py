@@ -1,0 +1,161 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Pod-scale GNN inference dry-run — DCI's own workload on the production
+mesh (beyond-paper: the paper is single-GPU).
+
+Setup: an Ogbn-papers100M-scale graph (111M nodes / 1.6B edges / 128-dim
+features) abstractly staged on the 16x16 mesh — features and adjacency
+row-sharded across all 256 chips, GNN parameters replicated.  One
+mini-batch inference step = fan-out sampling (adjacency gathers) + feature
+gather + 3-layer GraphSAGE.
+
+Two variants bracket DCI's dual-cache benefit:
+
+  cold — every gather hits the *sharded* tables: cross-chip traffic
+         (the distributed analogue of the paper's UVA miss path);
+  hot  — every gather hits a per-chip *replicated* hot cache sized by the
+         DCI budget (the 100% hit-rate bound; misses cost ~0 collectives).
+
+At hit rate h the expected collective term is ≈ (1−h)·cold + h·hot; the
+paper's measured hit rates (0.7–0.99 at modest budgets) put real traffic
+near the hot bound.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun_gnn [--batch 1024]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import analyze_hlo
+from repro.launch.mesh import HW, make_production_mesh
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Ogbn-papers100M scale, padded to multiples of 256 so flat tables shard
+# evenly across all chips.
+N = 111_059_968  # nodes (111,059,956 padded)
+E = 1_615_686_144  # edges (1,615,685,872 padded)
+F = 128
+FANOUTS = (15, 10, 5)
+HOT_ROWS = 4_000_000  # ~1GB bf16 hot feature cache per chip (DCI budget)
+HOT_EDGES = 64_000_000  # ~256MB hot adjacency elements per chip
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def frontier_sizes(batch):
+    sizes = [batch]
+    for f in reversed(FANOUTS):
+        sizes.append(sizes[-1] * f)  # neighbor draws per layer
+    return sizes
+
+
+def make_step(variant: str, batch: int):
+    """Returns (fn, abstract args, in_specs)."""
+    sizes = frontier_sizes(batch)
+    n_input = batch
+    for f in reversed(FANOUTS):
+        n_input *= 1 + f
+
+    def step(col_ptr, row_index, features, hot_feat, params, seeds, key):
+        frontier = seeds
+        for f in reversed(FANOUTS):
+            start = col_ptr[frontier]
+            deg = col_ptr[jnp.minimum(frontier + 1, N - 1)] - start
+            key, sub = jax.random.split(key)
+            r = jax.random.randint(sub, (frontier.shape[0], f), 0, jnp.maximum(deg, 1)[:, None])
+            slots = start[:, None] + r
+            if variant == "cold":
+                nbr = row_index[slots]  # sharded-table gather (cross-chip)
+            else:
+                nbr = row_index[jnp.minimum(slots, HOT_EDGES - 1)]  # hot prefix
+            frontier = jnp.concatenate([frontier, nbr.reshape(-1)])
+        if variant == "cold":
+            feats = features[frontier]
+        else:
+            feats = hot_feat[jnp.minimum(frontier, HOT_ROWS - 1)]
+        # 3-layer GraphSAGE (replicated params)
+        h = feats.astype(jnp.float32)
+        for li, f in enumerate(FANOUTS):
+            w_self, w_nbr = params[li]
+            ndst = h.shape[0] // (1 + list(reversed(FANOUTS))[li])
+            self_h = h[:ndst]
+            nbr_h = h[ndst:].reshape(ndst, -1, h.shape[-1]).sum(1)
+            h = jax.nn.relu(self_h @ w_self + nbr_h @ w_nbr)
+        return h
+
+    dims = [F, 128, 128, 47]
+    params = tuple(
+        (_sds((dims[i], dims[i + 1]), jnp.float32), _sds((dims[i], dims[i + 1]), jnp.float32))
+        for i in range(3)
+    )
+    args = (
+        _sds((N,), jnp.int64),  # col_ptr starts (padded; start[v+1]-start[v] via shifted gather)
+        _sds((E if variant == "cold" else HOT_EDGES,), jnp.int32),
+        _sds((N, F), jnp.bfloat16),
+        _sds((HOT_ROWS, F), jnp.bfloat16),
+        params,
+        _sds((batch,), jnp.int32),
+        _sds((2,), jnp.uint32),
+    )
+    shard_all = ("data", "model")
+    in_specs = (
+        P(shard_all) if variant == "cold" else P(None),  # col_ptr
+        P(shard_all) if variant == "cold" else P(None),  # row_index (hot: per-chip)
+        P(shard_all, None),  # features always sharded (too big to replicate)
+        P(None, None),  # hot feature cache replicated per chip
+        jax.tree.map(lambda _: P(None, None), params),
+        P(None),
+        P(None),
+    )
+    return step, args, in_specs
+
+
+def run(variant: str, batch: int) -> dict:
+    mesh = make_production_mesh()
+    step, args, in_specs = make_step(variant, batch)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), in_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    with mesh:
+        compiled = jax.jit(step, in_shardings=shardings).lower(*args).compile()
+    s = analyze_hlo(compiled.as_text())
+    coll = sum(s.collective_bytes.values())
+    return {
+        "variant": variant,
+        "collective_bytes_per_dev": coll,
+        "collective_s": coll / HW["ici_bw_per_link"],
+        "flops_per_dev": s.flops,
+        "compute_s": s.flops / HW["peak_flops_bf16"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=1024)
+    args = ap.parse_args()
+    rows = [run(v, args.batch) for v in ("cold", "hot")]
+    for r in rows:
+        print(
+            f"[gnn-pod] {r['variant']:4s} collective {r['collective_bytes_per_dev']:.3e} B/dev "
+            f"({r['collective_s']*1e3:.2f} ms) compute {r['compute_s']*1e3:.2f} ms"
+        )
+    cold, hot = rows
+    saved = cold["collective_bytes_per_dev"] - hot["collective_bytes_per_dev"]
+    print(
+        f"[gnn-pod] per-chip cross-chip gather traffic eliminated at 100% hit rate: "
+        f"{saved:.3e} B/step ({saved / HW['ici_bw_per_link'] * 1e3:.2f} ms of ICI)"
+    )
+    print("[gnn-pod] at the paper's measured hit rates (0.7-0.99) DCI removes")
+    print("          70-99% of that traffic (EXPERIMENTS.md §Dry-run).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""GNN inference driver — the paper's system as a CLI.
+
+    PYTHONPATH=src python -m repro.launch.infer_gnn \
+        --dataset ogbn-products --policy dci --fanouts 15,10,5 \
+        --batch-size 1024 --cache-mb 2
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core.policies import POLICIES
+from repro.graph import load_dataset
+from repro.runtime.gnn_engine import GNNInferenceEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="ogbn-products")
+    ap.add_argument("--policy", default="dci", choices=sorted(POLICIES))
+    ap.add_argument("--model", default="graphsage", choices=("graphsage", "gcn"))
+    ap.add_argument("--fanouts", default="15,10,5")
+    ap.add_argument("--batch-size", type=int, default=1024)
+    ap.add_argument("--cache-mb", type=float, default=2.0)
+    ap.add_argument("--scale", type=float, default=0.004)
+    ap.add_argument("--presample", type=int, default=8)
+    ap.add_argument("--max-batches", type=int, default=None)
+    args = ap.parse_args()
+
+    fanouts = tuple(int(x) for x in args.fanouts.split(","))
+    ds = load_dataset(args.dataset, scale=args.scale, max_nodes=200_000)
+    eng = GNNInferenceEngine(
+        ds, model=args.model, fanouts=fanouts, batch_size=args.batch_size
+    )
+    eng.prepare(
+        args.policy,
+        total_cache_bytes=int(args.cache_mb * 1e6),
+        n_presample=args.presample,
+    )
+    rep = eng.run(max_batches=args.max_batches)
+    print(json.dumps(rep.summary(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production meshes (multi-pod dry-run §0/§1 of the brief).
+
+A FUNCTION, not a module constant: importing this module never touches
+jax device state.  Single pod = 256 chips as (data=16, model=16); two pods
+= 512 chips as (pod=2, data=16, model=16).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants for the roofline (per chip).
+HW = {
+    "peak_flops_bf16": 197e12,  # FLOP/s
+    "hbm_bw": 819e9,  # B/s
+    "ici_bw_per_link": 50e9,  # B/s per link
+}

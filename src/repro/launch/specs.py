@@ -1,0 +1,109 @@
+"""Abstract input construction for the dry-run (ShapeDtypeStruct stand-ins).
+
+``input_specs(cfg, shape)`` builds weak-type-correct, shardable abstract
+inputs for every model input of the given (architecture × input-shape)
+pair — no device allocation (dry-run §2 of the brief).
+
+Shape conventions:
+  * train / prefill: tokens or frontend embeddings of ``seq_len`` with
+    ``global_batch`` rows (enc-dec adds 4096 encoder frames; train uses
+    seq_len frames).
+  * decode: ONE new token against caches of ``seq_len`` logical context;
+    ``long_500k`` switches long_mode on (ring-buffer windows for dense
+    attention, native state for SSM/hybrid).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.common import InputShape
+from repro.models.lm.blocks import init_block_cache
+from repro.models.lm.config import LMConfig
+from repro.models.lm.model import abstract_params
+from repro.optim.adamw import init_adamw
+
+__all__ = [
+    "abstract_train_inputs",
+    "abstract_prefill_inputs",
+    "abstract_decode_inputs",
+    "abstract_caches",
+    "DECODE_ENC_LEN",
+]
+
+DECODE_ENC_LEN = 4096  # encoder frames held fixed for enc-dec decode shapes
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), jnp.dtype(dtype))
+
+
+def _batch_dict(cfg: LMConfig, b: int, s: int, *, labels: bool) -> dict:
+    batch: dict = {}
+    if cfg.encoder_layers > 0:
+        batch["src_embeds"] = _sds((b, s if labels else min(s, DECODE_ENC_LEN), cfg.d_model), cfg.dtype)
+        batch["tokens"] = _sds((b, s), jnp.int32)
+    elif cfg.input_mode == "embeds":
+        batch["embeds"] = _sds((b, s, cfg.d_model), cfg.dtype)
+    else:
+        batch["tokens"] = _sds((b, s), jnp.int32)
+    if cfg.rope_kind == "mrope":
+        batch["positions"] = _sds((b, s, 3), jnp.int32)
+    if labels:
+        batch["labels"] = _sds((b, s), jnp.int32)
+    return batch
+
+
+def abstract_train_inputs(cfg: LMConfig, shape: InputShape):
+    params = abstract_params(cfg)
+    opt_state = jax.eval_shape(init_adamw, params)
+    batch = _batch_dict(cfg, shape.global_batch, shape.seq_len, labels=True)
+    return params, opt_state, batch
+
+
+def abstract_prefill_inputs(cfg: LMConfig, shape: InputShape):
+    params = abstract_params(cfg)
+    batch = _batch_dict(cfg, shape.global_batch, shape.seq_len, labels=False)
+    return params, batch
+
+
+def abstract_caches(
+    cfg: LMConfig, batch: int, cache_size: int, *, long_mode: bool
+) -> tuple:
+    """Stacked (over repeats) abstract caches, one entry per pattern position."""
+    enc_len = DECODE_ENC_LEN if cfg.encoder_layers > 0 else None
+    dtype = jnp.dtype(cfg.dtype)
+    out = []
+    for pos in range(cfg.pattern_period):
+        def one(p=pos):
+            return init_block_cache(
+                cfg, p, batch, cache_size, dtype, long_mode=long_mode, enc_len=enc_len
+            )
+
+        def stacked():
+            return jax.vmap(lambda _: one())(jnp.arange(cfg.n_repeats))
+
+        out.append(jax.eval_shape(stacked))
+    return tuple(out)
+
+
+def abstract_decode_inputs(cfg: LMConfig, shape: InputShape, *, long_mode: bool):
+    params = abstract_params(cfg)
+    tokens = _sds((shape.global_batch, 1), jnp.int32)
+    caches = abstract_caches(cfg, shape.global_batch, shape.seq_len, long_mode=long_mode)
+    cache_len = _sds((), jnp.int32)
+    return params, tokens, caches, cache_len
+
+
+def concrete_from_abstract(tree, seed: int = 0):
+    """Materialize small abstract trees for smoke tests (not used by dry-run)."""
+    rng = np.random.default_rng(seed)
+
+    def leaf(x):
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            return jnp.asarray(rng.integers(0, 2, x.shape), x.dtype)
+        return jnp.asarray(rng.standard_normal(x.shape) * 0.02, x.dtype)
+
+    return jax.tree.map(leaf, tree)

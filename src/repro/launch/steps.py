@@ -1,0 +1,38 @@
+"""Step functions the launcher jits: train_step / prefill_step / serve_step."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.models.lm.config import LMConfig
+from repro.models.lm.model import decode_step, prefill, train_loss
+from repro.optim.adamw import adamw_update
+
+__all__ = ["make_train_step", "make_prefill_step", "make_serve_step"]
+
+
+def make_train_step(cfg: LMConfig, *, base_lr: float = 3e-4):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: train_loss(p, batch, cfg))(params)
+        new_params, new_opt = adamw_update(params, grads, opt_state, base_lr=base_lr)
+        return new_params, new_opt, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: LMConfig, *, cache_size: int | None = None, long_mode: bool = False):
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg, cache_size=cache_size, long_mode=long_mode)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: LMConfig, *, long_mode: bool = False, mla_absorb: bool = False):
+    def serve_step(params, tokens, caches, cache_len):
+        return decode_step(
+            params, tokens, caches, cache_len, cfg, long_mode=long_mode, mla_absorb=mla_absorb
+        )
+
+    return serve_step

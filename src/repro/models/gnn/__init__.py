@@ -1,0 +1,3 @@
+from repro.models.gnn.models import MODELS, forward, init_params
+
+__all__ = ["MODELS", "forward", "init_params"]

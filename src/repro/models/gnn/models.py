@@ -1,0 +1,83 @@
+"""GraphSAGE and GCN models (paper Table III: 3 layers, hidden 128, FC apply).
+
+Pure-JAX functional models: ``init_params`` builds a parameter pytree,
+``forward`` consumes input-frontier features plus the block structure
+(static fan-outs) and produces per-seed logits.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.layers import gcn_layer, sage_layer
+
+__all__ = ["init_params", "forward", "MODELS"]
+
+MODELS = ("graphsage", "gcn")
+
+
+def init_params(
+    key: jax.Array,
+    model: str,
+    in_dim: int,
+    num_classes: int,
+    hidden: int = 128,
+    n_layers: int = 3,
+) -> list[dict]:
+    if model not in MODELS:
+        raise ValueError(f"unknown GNN model {model!r}")
+    dims = [in_dim] + [hidden] * (n_layers - 1) + [num_classes]
+    params = []
+    for i in range(n_layers):
+        key, k1, k2 = jax.random.split(key, 3)
+        scale = 1.0 / jnp.sqrt(dims[i])
+        layer = {
+            "w_self": jax.random.normal(k1, (dims[i], dims[i + 1]), jnp.float32) * scale,
+            "b": jnp.zeros((dims[i + 1],), jnp.float32),
+        }
+        if model == "graphsage":
+            layer["w_nbr"] = jax.random.normal(k2, (dims[i], dims[i + 1]), jnp.float32) * scale
+        params.append(layer)
+    return params
+
+
+@functools.partial(jax.jit, static_argnames=("model", "fanouts"))
+def forward(
+    params: list[dict],
+    input_feats: jax.Array,
+    *,
+    model: str,
+    fanouts: tuple[int, ...],
+    frontier_sizes: tuple[int, ...] | None = None,
+) -> jax.Array:
+    """Run the GNN over one sampled block.
+
+    ``input_feats`` covers the deepest frontier (``block.input_nodes``).
+    Frontier sizes are implied by ``fanouts`` and the seed count, which we
+    recover from the feature row count (all shapes are static under jit).
+    """
+    rev = tuple(reversed(fanouts))  # expansion order used by sample_blocks
+    # Recover seed count: |frontier_L| = B * Π(1 + f)
+    mult = 1
+    for f in rev:
+        mult *= 1 + f
+    num_seeds = input_feats.shape[0] // mult
+
+    # Frontier sizes from seeds outward.
+    sizes = [num_seeds]
+    for f in rev:
+        sizes.append(sizes[-1] * (1 + f))
+
+    layer_fn = sage_layer if model == "graphsage" else gcn_layer
+    h = input_feats
+    n_layers = len(fanouts)
+    # Walk from the deepest frontier inward; model layer 0 consumes raw feats.
+    for li, l in enumerate(range(n_layers - 1, -1, -1)):
+        h = layer_fn(params[li], h, sizes[l], rev[l])
+        if li < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h  # [num_seeds, num_classes]

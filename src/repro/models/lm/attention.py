@@ -1,0 +1,373 @@
+"""Attention mixers: GQA/MQA (with sliding window + softcap) and MLA.
+
+Two entry modes per mixer:
+
+* ``prefill`` — full-sequence causal attention.  Scores are computed in
+  *q-chunks* under ``lax.scan`` so the peak live buffer is
+  ``[B, H, chunk, S]`` instead of ``[B, H, S, S]`` — at 32k context the
+  unchunked form would not fit any real device, and the dry-run's
+  memory_analysis would (rightly) explode.  Returns the populated KV cache.
+* ``decode`` — one new token against a KV cache, functional cache update
+  at position ``cache_len`` (ring-buffer semantics when the cache is
+  shorter than the logical position — the long_500k dense carve-in).
+
+MLA (DeepSeek-V2) caches the *compressed* (c_kv, k_rope) pair.  The
+baseline decode expands k/v from c_kv per step; ``absorb=True`` switches to
+the matrix-absorbed decode (q projected into the compressed space) — a
+beyond-paper §Perf option that shrinks decode FLOPs and live memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import LMConfig
+from repro.models.lm.rope import apply_rope, rope_angles
+from repro.models.lm.tp import maybe_row_parallel
+
+__all__ = [
+    "init_gqa_params",
+    "gqa_prefill",
+    "gqa_decode",
+    "init_mla_params",
+    "mla_prefill",
+    "mla_decode",
+    "init_cross_params",
+    "cross_attention",
+]
+
+NEG_INF = -1e30
+
+
+def _init(key, shape, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# =============================================================== GQA / MQA
+
+
+def init_gqa_params(key: jax.Array, cfg: LMConfig, dtype) -> dict:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _init(ks[0], (d, h * dh), dtype),
+        "wk": _init(ks[1], (d, hkv * dh), dtype),
+        "wv": _init(ks[2], (d, hkv * dh), dtype),
+        "wo": _init(ks[3], (h * dh, d), dtype),
+    }
+
+
+def _qkv(params, x, cfg: LMConfig):
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (x @ params["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ params["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _softcap(s, cap):
+    return s if cap is None else cap * jnp.tanh(s / cap)
+
+
+def _chunked_scores_softmax(q, k, v, *, q_offset, kv_valid_len, window, softcap, causal, n_rep):
+    """Causal/windowed attention with q chunked over a lax.scan.
+
+    q: [B, S, H, D]; k/v: [B, Sk, Hkv, D].  Returns [B, S, H, D].
+    ``n_rep`` = H // Hkv (GQA repetition, via reshape-grouped einsum so the
+    kv tensors are never materially repeated).
+    """
+    b, s, h, dh = q.shape
+    dv = v.shape[-1]  # may differ from dh (MLA: qk dim != v dim)
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    chunk = 512 if s % 512 == 0 else s
+    n_chunks = s // chunk
+    qg = q.reshape(b, n_chunks, chunk, hkv, n_rep, dh).transpose(1, 0, 2, 3, 4, 5)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    ki = jnp.arange(sk)
+
+    def body(carry, qc_and_idx):
+        qc, ci = qc_and_idx  # qc: [B, chunk, Hkv, rep, D]
+        s_scores = jnp.einsum("bqkrd,bskd->bkrqs", qc.astype(jnp.float32), k.astype(jnp.float32))
+        s_scores = _softcap(s_scores * scale, softcap)
+        qi = q_offset + ci * chunk + jnp.arange(chunk)
+        mask = ki[None, :] < kv_valid_len
+        if causal:
+            mask = mask & (qi[:, None] >= ki[None, :])
+        if window is not None:
+            mask = mask & (qi[:, None] - ki[None, :] < window)
+        s_scores = jnp.where(mask[None, None, None], s_scores, NEG_INF)
+        p = jax.nn.softmax(s_scores, axis=-1)
+        out = jnp.einsum("bkrqs,bskd->bqkrd", p, v.astype(jnp.float32))
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, None, (qg, jnp.arange(n_chunks)))
+    # outs: [n_chunks, B, chunk, Hkv, rep, Dv] -> [B, S, H, Dv]
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, dv)
+
+
+def gqa_prefill(
+    params: dict,
+    x: jax.Array,  # [B, S, d]
+    positions: jax.Array,  # [B, S] (or [B, S, 3] for mrope)
+    cfg: LMConfig,
+    *,
+    window: int | None,
+    causal: bool = True,
+) -> tuple[jax.Array, dict]:
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, x, cfg)
+    if cfg.rope_kind != "none":
+        cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta, cfg.rope_kind, cfg.mrope_sections)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    out = _chunked_scores_softmax(
+        q,
+        k,
+        v,
+        q_offset=0,
+        kv_valid_len=s,
+        window=window,
+        softcap=cfg.attn_softcap,
+        causal=causal,
+        n_rep=cfg.n_heads // cfg.n_kv_heads,
+    )
+    out = maybe_row_parallel(out.reshape(b, s, cfg.n_heads * cfg.head_dim), params["wo"])
+    return out, {"k": k, "v": v}
+
+
+def _per_batch(cache_len: jax.Array, b: int) -> jax.Array:
+    """Broadcast a scalar or [B] cache_len to [B] (per-slot serving)."""
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if cache_len.ndim == 0:
+        return jnp.broadcast_to(cache_len, (b,))
+    return cache_len
+
+
+def _ring_write(buf: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array:
+    """Write ``new[:, 0]`` at per-batch ring slots. buf: [B, Sc, ...]."""
+    b = buf.shape[0]
+    return buf.at[jnp.arange(b), slot].set(new[:, 0])
+
+
+def _ring_mask(cache_len_b: jax.Array, sc: int, window: int | None) -> jax.Array:
+    """[B, Sc] validity mask.  Slot ki holds logical position p(ki) = the
+    largest p <= cache_len with p % sc == ki (ring semantics)."""
+    ki = jnp.arange(sc)[None, :]
+    cl = cache_len_b[:, None]
+    logical = cl - jnp.mod(cl - ki, sc)
+    mask = (logical >= 0) & (logical <= cl)
+    if window is not None:
+        mask &= cl - logical < window
+    return mask
+
+
+def gqa_decode(
+    params: dict,
+    x: jax.Array,  # [B, 1, d]
+    cache: dict,  # {"k": [B, Sc, Hkv, D], "v": ...}
+    cache_len: jax.Array,  # int32 scalar or [B]: logical position per slot
+    cfg: LMConfig,
+    *,
+    window: int | None,
+) -> tuple[jax.Array, dict]:
+    b = x.shape[0]
+    sc = cache["k"].shape[1]
+    cl = _per_batch(cache_len, b)
+    q, k, v = _qkv(params, x, cfg)
+    pos = cl[:, None]
+    if cfg.rope_kind == "mrope":
+        pos = jnp.broadcast_to(pos[..., None], (b, 1, 3))
+    if cfg.rope_kind != "none":
+        cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_theta, cfg.rope_kind, cfg.mrope_sections)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    slot = jnp.mod(cl, sc)  # ring buffer when logical pos >= capacity
+    new_k = _ring_write(cache["k"], k, slot)
+    new_v = _ring_write(cache["v"], v, slot)
+
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
+    qg = q.reshape(b, 1, cfg.n_kv_heads, n_rep, cfg.head_dim)
+    s_scores = jnp.einsum(
+        "bqkrd,bskd->bkrqs", qg.astype(jnp.float32), new_k.astype(jnp.float32)
+    )
+    s_scores = _softcap(s_scores * scale, cfg.attn_softcap)
+    mask = _ring_mask(cl, sc, window)  # [B, Sc]
+    s_scores = jnp.where(mask[:, None, None, None, :], s_scores, NEG_INF)
+    p = jax.nn.softmax(s_scores, axis=-1)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", p, new_v.astype(jnp.float32)).astype(x.dtype)
+    out = maybe_row_parallel(out.reshape(b, 1, cfg.n_heads * cfg.head_dim), params["wo"])
+    return out, {"k": new_k, "v": new_v}
+
+
+# ===================================================================== MLA
+
+
+def init_mla_params(key: jax.Array, cfg: LMConfig, dtype) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    qd = m.nope_head_dim + m.rope_head_dim
+    return {
+        "w_dq": _init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": {"scale": jnp.ones((m.q_lora_rank,), jnp.float32)},
+        "w_uq": _init(ks[1], (m.q_lora_rank, h * qd), dtype),
+        "w_dkv": _init(ks[2], (d, m.kv_lora_rank), dtype),
+        "kv_norm": {"scale": jnp.ones((m.kv_lora_rank,), jnp.float32)},
+        "w_kr": _init(ks[3], (d, m.rope_head_dim), dtype),
+        "w_uk": _init(ks[4], (m.kv_lora_rank, h * m.nope_head_dim), dtype),
+        "w_uv": _init(ks[5], (m.kv_lora_rank, h * m.v_head_dim), dtype),
+        "wo": _init(ks[6], (h * m.v_head_dim, d), dtype),
+    }
+
+
+def _mla_q(params, x, positions, cfg):
+    from repro.models.lm.norms import rms_norm
+
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = rms_norm(params["q_norm"], x @ params["w_dq"])
+    q = (cq @ params["w_uq"]).reshape(b, s, h, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim :]
+    cos, sin = rope_angles(positions, m.rope_head_dim, cfg.rope_theta, "default", cfg.mrope_sections)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_compress(params, x, positions, cfg):
+    from repro.models.lm.norms import rms_norm
+
+    m = cfg.mla
+    c_kv = rms_norm(params["kv_norm"], x @ params["w_dkv"])  # [B,S,R]
+    k_rope = (x @ params["w_kr"])[:, :, None, :]  # [B,S,1,Dr] (shared head)
+    cos, sin = rope_angles(positions, m.rope_head_dim, cfg.rope_theta, "default", cfg.mrope_sections)
+    k_rope = apply_rope(k_rope, cos, sin)[:, :, 0, :]  # [B,S,Dr]
+    return c_kv, k_rope
+
+
+def mla_prefill(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: LMConfig,
+    *,
+    window: int | None,
+    causal: bool = True,
+) -> tuple[jax.Array, dict]:
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(params, x, positions, cfg)
+    c_kv, k_rope = _mla_compress(params, x, positions, cfg)
+    k_nope = (c_kv @ params["w_uk"]).reshape(b, s, h, m.nope_head_dim)
+    v = (c_kv @ params["w_uv"]).reshape(b, s, h, m.v_head_dim)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, m.rope_head_dim))], axis=-1)
+    out = _chunked_scores_softmax(
+        q, k, v, q_offset=0, kv_valid_len=s, window=window, softcap=cfg.attn_softcap,
+        causal=causal, n_rep=1,
+    )
+    out = maybe_row_parallel(out.reshape(b, s, h * m.v_head_dim), params["wo"])
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode(
+    params: dict,
+    x: jax.Array,  # [B, 1, d]
+    cache: dict,  # {"c_kv": [B, Sc, R], "k_rope": [B, Sc, Dr]}
+    cache_len: jax.Array,
+    cfg: LMConfig,
+    *,
+    window: int | None,
+    absorb: bool = False,
+) -> tuple[jax.Array, dict]:
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    sc = cache["c_kv"].shape[1]
+    cl = _per_batch(cache_len, b)
+    pos = cl[:, None]
+    q_nope, q_rope = _mla_q(params, x, pos, cfg)  # [B,1,H,*]
+    c_new, kr_new = _mla_compress(params, x, pos, cfg)
+    slot = jnp.mod(cl, sc)
+    c_kv = _ring_write(cache["c_kv"], c_new, slot)
+    k_rope = _ring_write(cache["k_rope"], kr_new, slot)
+
+    mask = _ring_mask(cl, sc, window)  # [B, Sc]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(m.nope_head_dim + m.rope_head_dim, jnp.float32))
+
+    if absorb:
+        # Absorbed decode: fold W_uk into the query and W_uv into the output
+        # so attention runs in the compressed space — no per-step k/v
+        # expansion, cache reads are O(Sc · (R + Dr)).
+        w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.nope_head_dim)
+        q_c = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+        s_scores = jnp.einsum("bqhr,bsr->bhqs", q_c, c_kv.astype(jnp.float32))
+        s_scores += jnp.einsum(
+            "bqhe,bse->bhqs", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32)
+        )
+        s_scores = _softcap(s_scores * scale, cfg.attn_softcap)
+        s_scores = jnp.where(mask[:, None, None, :], s_scores, NEG_INF)
+        p = jax.nn.softmax(s_scores, axis=-1)
+        ctx = jnp.einsum("bhqs,bsr->bqhr", p, c_kv.astype(jnp.float32))  # [B,1,H,R]
+        w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+        out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv.astype(jnp.float32)).astype(x.dtype)
+    else:
+        # Baseline decode: expand k/v from the compressed cache every step.
+        k_nope = (c_kv @ params["w_uk"]).reshape(b, sc, h, m.nope_head_dim)
+        v = (c_kv @ params["w_uv"]).reshape(b, sc, h, m.v_head_dim)
+        s_scores = jnp.einsum(
+            "bqhn,bshn->bhqs", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32)
+        )
+        s_scores += jnp.einsum(
+            "bqhe,bse->bhqs", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32)
+        )
+        s_scores = _softcap(s_scores * scale, cfg.attn_softcap)
+        s_scores = jnp.where(mask[:, None, None, :], s_scores, NEG_INF)
+        p = jax.nn.softmax(s_scores, axis=-1)
+        out = jnp.einsum("bhqs,bshv->bqhv", p, v.astype(jnp.float32)).astype(x.dtype)
+
+    out = maybe_row_parallel(out.reshape(b, 1, h * m.v_head_dim), params["wo"])
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+# ======================================================== cross-attention
+
+
+def init_cross_params(key: jax.Array, cfg: LMConfig, dtype) -> dict:
+    return init_gqa_params(key, cfg, dtype)
+
+
+def cross_attention(
+    params: dict,
+    x: jax.Array,  # [B, Sq, d] decoder states
+    enc_kv: dict,  # {"k": [B, Se, Hkv, D], "v": ...} precomputed encoder KV
+    cfg: LMConfig,
+) -> jax.Array:
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    out = _chunked_scores_softmax(
+        q,
+        enc_kv["k"],
+        enc_kv["v"],
+        q_offset=0,
+        kv_valid_len=enc_kv["k"].shape[1],
+        window=None,
+        softcap=None,
+        causal=False,
+        n_rep=cfg.n_heads // cfg.n_kv_heads,
+    )
+    return maybe_row_parallel(out.reshape(b, s, cfg.n_heads * cfg.head_dim), params["wo"])
+
+
+def encode_cross_kv(params: dict, enc_out: jax.Array, cfg: LMConfig) -> dict:
+    b, se, _ = enc_out.shape
+    k = (enc_out @ params["wk"]).reshape(b, se, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_out @ params["wv"]).reshape(b, se, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": k, "v": v}

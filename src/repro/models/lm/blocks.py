@@ -1,0 +1,227 @@
+"""Block assembly: norm → mixer → residual → norm → FFN/MoE → residual.
+
+A block's *kind* (one entry of ``cfg.block_pattern``) picks the mixer:
+``attn`` (full causal GQA/MLA), ``local`` (sliding window), ``mamba``,
+``rwkv`` (whose channel-mix replaces the FFN).  MoE replaces the dense FFN
+at positions where ``cfg.is_moe_position`` holds.  Decoder blocks of an
+encoder-decoder additionally carry cross-attention after self-attention.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import attention as attn
+from repro.models.lm import mamba as mamba_mod
+from repro.models.lm import rwkv6 as rwkv_mod
+from repro.models.lm.config import LMConfig
+from repro.models.lm.moe import dense_ffn, init_dense_ffn, init_moe_params, moe_ffn
+from repro.models.lm.norms import init_rms_norm, rms_norm
+
+__all__ = ["init_block_params", "block_prefill", "block_decode", "window_for", "init_block_cache"]
+
+
+def window_for(kind: str, cfg: LMConfig, long_mode: bool) -> int | None:
+    if kind == "local":
+        return cfg.window
+    if kind == "attn" and long_mode:
+        return cfg.long_context_window  # dense long-context carve-in
+    return None
+
+
+def init_block_params(key: jax.Array, cfg: LMConfig, pos: int, dtype, *, cross: bool = False) -> dict:
+    kind = cfg.block_pattern[pos]
+    ks = jax.random.split(key, 4)
+    p: dict = {"ln1": init_rms_norm(cfg.d_model)}
+    if kind in ("attn", "local"):
+        if cfg.attn_kind == "mla":
+            p["mla"] = attn.init_mla_params(ks[0], cfg, dtype)
+        else:
+            p["attn"] = attn.init_gqa_params(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = mamba_mod.init_mamba_params(ks[0], cfg, dtype)
+    elif kind == "rwkv":
+        p["tm"] = rwkv_mod.init_rwkv_params(ks[0], cfg, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+
+    if cross:
+        p["ln_cross"] = init_rms_norm(cfg.d_model)
+        p["cross"] = attn.init_cross_params(ks[2], cfg, dtype)
+
+    p["ln2"] = init_rms_norm(cfg.d_model)
+    if kind == "rwkv":
+        p["cm"] = rwkv_mod.init_rwkv_cm_params(ks[1], cfg, dtype)
+    elif cfg.is_moe_position(pos):
+        p["moe"] = init_moe_params(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = init_dense_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    return p
+
+
+def init_block_cache(
+    cfg: LMConfig,
+    pos: int,
+    batch: int,
+    cache_size: int,
+    dtype,
+    *,
+    long_mode: bool,
+    enc_len: int | None = None,
+):
+    """Abstract-friendly cache allocator for one pattern position.
+
+    ``enc_len`` adds the cross-attention KV (encoder-decoder decode).
+    """
+    base = _init_self_cache(cfg, pos, batch, cache_size, dtype, long_mode=long_mode)
+    if enc_len is not None:
+        return {
+            "self": base,
+            "cross_kv": {
+                "k": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            },
+        }
+    return base
+
+
+def _init_self_cache(cfg: LMConfig, pos: int, batch: int, cache_size: int, dtype, *, long_mode: bool):
+    kind = cfg.block_pattern[pos]
+    if kind in ("attn", "local"):
+        w = window_for(kind, cfg, long_mode)
+        sc = min(cache_size, w) if w is not None else cache_size
+        if cfg.attn_kind == "mla":
+            m = cfg.mla
+            return {
+                "c_kv": jnp.zeros((batch, sc, m.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, sc, m.rope_head_dim), dtype),
+            }
+        return {
+            "k": jnp.zeros((batch, sc, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, sc, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+    if kind == "mamba":
+        return mamba_mod.init_mamba_cache(cfg, batch, dtype)
+    if kind == "rwkv":
+        return {
+            "tm": rwkv_mod.init_rwkv_cache(cfg, batch),
+            "cm": {"shift": jnp.zeros((batch, cfg.d_model), jnp.float32)},
+        }
+    raise ValueError(kind)
+
+
+def _ring_from_full(full: jax.Array, cache_size: int) -> jax.Array:
+    """Convert full-sequence KV [B, S, ...] to a ring cache of ``cache_size``."""
+    s = full.shape[1]
+    if s <= cache_size:
+        pad = [(0, 0)] * full.ndim
+        pad[1] = (0, cache_size - s)
+        return jnp.pad(full, pad)
+    win = full[:, -cache_size:]
+    return jnp.roll(win, shift=(s - cache_size) % cache_size, axis=1)
+
+
+def block_prefill(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: LMConfig,
+    pos: int,
+    *,
+    causal: bool = True,
+    enc_out: jax.Array | None = None,
+    long_mode: bool = False,
+    cache_size: int | None = None,
+):
+    """Returns (x, cache, aux_loss).  ``cache_size`` trims KV to a ring."""
+    kind = cfg.block_pattern[pos]
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(params["ln1"], x)
+    if kind in ("attn", "local"):
+        w = window_for(kind, cfg, long_mode)
+        if cfg.attn_kind == "mla":
+            out, cache = attn.mla_prefill(params["mla"], h, positions, cfg, window=w, causal=causal)
+        else:
+            out, cache = attn.gqa_prefill(params["attn"], h, positions, cfg, window=w, causal=causal)
+        if cache_size is not None:
+            sc = min(cache_size, w) if w is not None else cache_size
+            cache = jax.tree.map(lambda a: _ring_from_full(a, sc), cache)
+    elif kind == "mamba":
+        out, cache = mamba_mod.mamba_prefill(params["mamba"], h, cfg)
+    else:  # rwkv
+        from repro.models.lm.tp import rwkv_chunked
+
+        if rwkv_chunked():
+            out, cache = rwkv_mod.rwkv_time_mix_prefill_chunked(params["tm"], h, cfg)
+        else:
+            out, cache = rwkv_mod.rwkv_time_mix_prefill(params["tm"], h, cfg)
+    from repro.models.lm.tp import maybe_barrier
+
+    x = x + maybe_barrier(out)
+
+    if "cross" in params:
+        hc = rms_norm(params["ln_cross"], x)
+        cross_kv = attn.encode_cross_kv(params["cross"], enc_out, cfg)
+        x = x + attn.cross_attention(params["cross"], hc, cross_kv, cfg)
+        cache = {"self": cache, "cross_kv": cross_kv}
+
+    h2 = rms_norm(params["ln2"], x)
+    if kind == "rwkv":
+        out2, cm_cache = rwkv_mod.rwkv_channel_mix_prefill(params["cm"], h2, cfg)
+        cache = {"tm": cache, "cm": cm_cache}
+    elif "moe" in params:
+        out2, aux = moe_ffn(params["moe"], h2, cfg)
+        cm_cache = None
+    else:
+        out2 = dense_ffn(params["ffn"], h2, cfg.activation)
+        cm_cache = None
+    del cm_cache
+    return x + maybe_barrier(out2), cache, aux
+
+
+def block_decode(
+    params: dict,
+    x: jax.Array,  # [B, 1, d]
+    cache,
+    cache_len: jax.Array,
+    cfg: LMConfig,
+    pos: int,
+    *,
+    long_mode: bool = False,
+    mla_absorb: bool = False,
+):
+    kind = cfg.block_pattern[pos]
+    h = rms_norm(params["ln1"], x)
+    self_cache = cache["self"] if "cross" in params else (cache["tm"] if kind == "rwkv" else cache)
+    if kind in ("attn", "local"):
+        w = window_for(kind, cfg, long_mode)
+        if cfg.attn_kind == "mla":
+            out, new_self = attn.mla_decode(
+                params["mla"], h, self_cache, cache_len, cfg, window=w, absorb=mla_absorb
+            )
+        else:
+            out, new_self = attn.gqa_decode(params["attn"], h, self_cache, cache_len, cfg, window=w)
+    elif kind == "mamba":
+        out, new_self = mamba_mod.mamba_decode(params["mamba"], h, self_cache, cfg)
+    else:
+        out, new_self = rwkv_mod.rwkv_time_mix_decode(params["tm"], h, self_cache, cfg)
+    x = x + out
+
+    if "cross" in params:
+        hc = rms_norm(params["ln_cross"], x)
+        x = x + attn.cross_attention(params["cross"], hc, cache["cross_kv"], cfg)
+
+    h2 = rms_norm(params["ln2"], x)
+    if kind == "rwkv":
+        out2, new_cm = rwkv_mod.rwkv_channel_mix_decode(params["cm"], h2, cache["cm"], cfg)
+        new_cache = {"tm": new_self, "cm": new_cm}
+    else:
+        if "moe" in params:
+            out2, _ = moe_ffn(params["moe"], h2, cfg)
+        else:
+            out2 = dense_ffn(params["ffn"], h2, cfg.activation)
+        new_cache = (
+            {"self": new_self, "cross_kv": cache["cross_kv"]} if "cross" in params else new_self
+        )
+    return x + out2, new_cache

@@ -1,0 +1,129 @@
+"""Mamba (selective SSM) mixer — Jamba's 7-of-8 layers.
+
+Prefill runs the selective scan as a sequential ``lax.scan`` over time
+(the per-step state is tiny; the 32k-step loop lowers to one HLO while
+loop, which is what the dry-run compiles).  Decode is the O(1) single-step
+recurrence with a (conv window, SSM state) cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import LMConfig
+
+__all__ = ["init_mamba_params", "mamba_prefill", "mamba_decode", "init_mamba_cache"]
+
+
+def _init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def _dims(cfg: LMConfig):
+    d_inner = cfg.mamba_expand * cfg.d_model
+    dt_rank = -(-cfg.d_model // 16)
+    return d_inner, dt_rank, cfg.mamba_d_state, cfg.mamba_d_conv
+
+
+def init_mamba_params(key: jax.Array, cfg: LMConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_inner, dt_rank, d_state, d_conv = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    a = jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_inner, d_state))
+    return {
+        "in_proj": _init(ks[0], (d, 2 * d_inner), dtype),
+        "conv_w": _init(ks[1], (d_conv, d_inner), dtype, fan_in=d_conv),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": _init(ks[2], (d_inner, dt_rank + 2 * d_state), dtype),
+        "dt_proj": _init(ks[3], (dt_rank, d_inner), dtype),
+        "dt_bias": jnp.zeros((d_inner,), jnp.float32),
+        "a_log": jnp.log(a),  # fp32 continuous-time decay
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": _init(ks[4], (d_inner, d), dtype),
+    }
+
+
+def _ssm_inputs(params, u):
+    """u: [..., d_inner] -> (dt, bmat, cmat) with fp32 dt."""
+    d_inner = u.shape[-1]
+    proj = u @ params["x_proj"]
+    dt_rank = params["dt_proj"].shape[0]
+    d_state = (proj.shape[-1] - dt_rank) // 2
+    dt = jax.nn.softplus(
+        (proj[..., :dt_rank] @ params["dt_proj"]).astype(jnp.float32) + params["dt_bias"]
+    )  # [..., d_inner]
+    bmat = proj[..., dt_rank : dt_rank + d_state].astype(jnp.float32)
+    cmat = proj[..., dt_rank + d_state :].astype(jnp.float32)
+    del d_inner
+    return dt, bmat, cmat
+
+
+def _step(params, h, u_t, dt_t, b_t, c_t):
+    """One SSM step. h: [B, d_inner, d_state]."""
+    a = -jnp.exp(params["a_log"])  # [d_inner, d_state]
+    da = jnp.exp(dt_t[..., None] * a)  # [B, d_inner, d_state]
+    h = da * h + (dt_t * u_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, c_t) + params["d_skip"] * u_t.astype(jnp.float32)
+    return h, y
+
+
+def _conv_full(params, x):
+    """Depthwise causal conv along time. x: [B, S, d_inner]."""
+    d_conv = params["conv_w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * params["conv_w"][i] for i in range(d_conv)
+    )
+    return out + params["conv_b"]
+
+
+def mamba_prefill(params: dict, x: jax.Array, cfg: LMConfig) -> tuple[jax.Array, dict]:
+    b, s, _ = x.shape
+    d_inner, _, d_state, d_conv = _dims(cfg)
+    xz = x @ params["in_proj"]
+    xin, z = xz[..., :d_inner], xz[..., d_inner:]
+    u = jax.nn.silu(_conv_full(params, xin))  # [B, S, d_inner]
+    dt, bmat, cmat = _ssm_inputs(params, u)
+
+    def body(h, t_in):
+        u_t, dt_t, b_t, c_t = t_in
+        h, y = _step(params, h, u_t, dt_t, b_t, c_t)
+        return h, y
+
+    h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+    hT, ys = jax.lax.scan(
+        body,
+        h0,
+        (u.transpose(1, 0, 2), dt.transpose(1, 0, 2), bmat.transpose(1, 0, 2), cmat.transpose(1, 0, 2)),
+    )
+    y = ys.transpose(1, 0, 2).astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    cache = {
+        "conv": xin[:, -(d_conv - 1) :, :],  # raw inputs for the conv window
+        "ssm": hT,
+    }
+    return out, cache
+
+
+def init_mamba_cache(cfg: LMConfig, batch: int, dtype) -> dict:
+    d_inner, _, d_state, d_conv = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+def mamba_decode(params: dict, x: jax.Array, cache: dict, cfg: LMConfig) -> tuple[jax.Array, dict]:
+    """x: [B, 1, d]."""
+    d_inner, _, _, d_conv = _dims(cfg)
+    xz = x[:, 0, :] @ params["in_proj"]
+    xin, z = xz[..., :d_inner], xz[..., d_inner:]
+    win = jnp.concatenate([cache["conv"], xin[:, None, :]], axis=1)  # [B, d_conv, d_inner]
+    u = jax.nn.silu(jnp.einsum("bcd,cd->bd", win, params["conv_w"]) + params["conv_b"])
+    dt, bmat, cmat = _ssm_inputs(params, u)
+    h, y = _step(params, cache["ssm"], u, dt, bmat, cmat)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"conv": win[:, 1:, :], "ssm": h}

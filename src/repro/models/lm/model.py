@@ -1,0 +1,301 @@
+"""Top-level LM: init / train_loss / prefill / decode_step.
+
+The layer stack is `lax.scan`-ned over ``n_repeats`` of the pattern period
+(DESIGN.md §5): parameters (and KV caches) are stacked pytrees with a
+leading repeat axis, one tuple entry per pattern position.  Encoder-decoder
+configs (SeamlessM4T) run an encoder stack first; decoder blocks carry
+cross-attention whose KV is cached at prefill.
+
+Loss is computed in sequence chunks so the full [B, S, vocab] logits tensor
+never materializes (vocab reaches 256k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.blocks import block_decode, block_prefill, init_block_params
+from repro.models.lm.config import LMConfig
+from repro.models.lm.norms import init_rms_norm, rms_norm
+
+__all__ = [
+    "init_params",
+    "abstract_params",
+    "train_loss",
+    "prefill",
+    "decode_step",
+    "default_positions",
+    "encoder_config",
+]
+
+AUX_WEIGHT = 0.01
+
+
+def encoder_config(cfg: LMConfig) -> LMConfig:
+    """The encoder stack of an enc-dec config: plain dense attention blocks."""
+    return dataclasses.replace(
+        cfg,
+        block_pattern=("attn",),
+        moe=None,
+        n_layers=cfg.encoder_layers,
+        attn_kind="gqa",
+        mla=None,
+    )
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _stack_blocks(key: jax.Array, cfg: LMConfig, *, cross: bool) -> tuple:
+    dtype = _dtype(cfg)
+    out = []
+    for pos in range(cfg.pattern_period):
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, cfg.n_repeats)
+        out.append(
+            jax.vmap(lambda k, p=pos: init_block_params(k, cfg, p, dtype, cross=cross))(keys)
+        )
+    return tuple(out)
+
+
+def init_params(key: jax.Array, cfg: LMConfig) -> dict:
+    dtype = _dtype(cfg)
+    k_embed, k_blocks, k_enc, k_head = jax.random.split(key, 4)
+    params: dict = {
+        "embed": (
+            jax.random.normal(k_embed, (cfg.vocab_padded, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dtype),
+        "blocks": _stack_blocks(k_blocks, cfg, cross=cfg.encoder_layers > 0),
+        "final_norm": init_rms_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab_padded), jnp.float32) * 0.02
+        ).astype(dtype)
+    if cfg.encoder_layers > 0:
+        ecfg = encoder_config(cfg)
+        params["encoder"] = {
+            "blocks": _stack_blocks(k_enc, ecfg, cross=False),
+            "final_norm": init_rms_norm(cfg.d_model),
+        }
+    return params
+
+
+def abstract_params(cfg: LMConfig, seed: int = 0):
+    """ShapeDtypeStruct pytree — the dry-run's zero-allocation param tree."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(seed), cfg))
+
+
+def default_positions(cfg: LMConfig, batch: int, seq: int) -> jax.Array:
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+    if cfg.rope_kind == "mrope":
+        pos = jnp.broadcast_to(pos[..., None], (batch, seq, 3))
+    return pos
+
+
+# ------------------------------------------------------------- stack runs
+
+
+def _run_prefill_stack(
+    blocks: tuple,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: LMConfig,
+    *,
+    causal: bool,
+    enc_out: jax.Array | None,
+    long_mode: bool,
+    cache_size: int | None,
+    collect: bool,
+    remat: bool,
+):
+    period = cfg.pattern_period
+
+    def body(hx, slices):
+        caches = []
+        aux = jnp.zeros((), jnp.float32)
+        for pos in range(period):
+            hx, cache, a = block_prefill(
+                slices[pos],
+                hx,
+                positions,
+                cfg,
+                pos,
+                causal=causal,
+                enc_out=enc_out,
+                long_mode=long_mode,
+                cache_size=cache_size,
+            )
+            caches.append(cache)
+            aux = aux + a
+        return hx, (tuple(caches) if collect else None, aux)
+
+    if remat:
+        from repro.models.lm.tp import remat_policy
+
+        pol = remat_policy()
+        body_fn = jax.checkpoint(body, policy=pol) if pol else jax.checkpoint(body)
+    else:
+        body_fn = body
+    x, (caches, auxs) = jax.lax.scan(body_fn, x, blocks)
+    return x, caches, auxs.sum()
+
+
+def _embed_in(params, cfg: LMConfig, batch: dict) -> jax.Array:
+    if "embeds" in batch:
+        return batch["embeds"].astype(_dtype(cfg))
+    return params["embed"][batch["tokens"]]
+
+
+def _logits(params, cfg: LMConfig, x: jax.Array) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    if cfg.vocab_padded != cfg.vocab:
+        # Padded vocab rows must never win softmax / argmax.
+        mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def _run_encoder(params, cfg: LMConfig, src_embeds: jax.Array):
+    ecfg = encoder_config(cfg)
+    pos = default_positions(ecfg, src_embeds.shape[0], src_embeds.shape[1])
+    enc_x, _, _ = _run_prefill_stack(
+        params["encoder"]["blocks"],
+        src_embeds.astype(_dtype(cfg)),
+        pos,
+        ecfg,
+        causal=False,
+        enc_out=None,
+        long_mode=False,
+        cache_size=None,
+        collect=False,
+        remat=True,
+    )
+    return rms_norm(params["encoder"]["final_norm"], enc_x)
+
+
+# ------------------------------------------------------------- train loss
+
+
+def train_loss(params: dict, batch: dict, cfg: LMConfig) -> jax.Array:
+    """Mean next-token CE (+ MoE aux).  Labels −100 are ignored."""
+    enc_out = None
+    if cfg.encoder_layers > 0:
+        enc_out = _run_encoder(params, cfg, batch["src_embeds"])
+
+    x = _embed_in(params, cfg, batch)
+    b, s = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = default_positions(cfg, b, s)
+
+    x, _, aux = _run_prefill_stack(
+        params["blocks"],
+        x,
+        positions,
+        cfg,
+        causal=True,
+        enc_out=enc_out,
+        long_mode=False,
+        cache_size=None,
+        collect=False,
+        remat=True,
+    )
+    x = rms_norm(params["final_norm"], x)
+
+    labels = batch["labels"]
+    chunk = 512 if s % 512 == 0 else s
+    xc = x.reshape(b, s // chunk, chunk, cfg.d_model).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, s // chunk, chunk).transpose(1, 0, 2)
+
+    def ce_body(carry, inp):
+        xch, lch = inp
+        logits = _logits(params, cfg, xch)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        valid = lch >= 0
+        ll = jnp.take_along_axis(logp, jnp.maximum(lch, 0)[..., None], axis=-1)[..., 0]
+        return (carry[0] + jnp.sum(ll * valid), carry[1] + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(ce_body, (jnp.zeros(()), jnp.zeros(())), (xc, lc))
+    ce = -tot / jnp.maximum(cnt, 1.0)
+    return ce + AUX_WEIGHT * aux
+
+
+# ---------------------------------------------------------------- serving
+
+
+def prefill(
+    params: dict,
+    batch: dict,
+    cfg: LMConfig,
+    *,
+    cache_size: int | None = None,
+    long_mode: bool = False,
+) -> tuple[jax.Array, tuple]:
+    """Process the prompt; returns (last-token logits [B, V], caches)."""
+    enc_out = None
+    if cfg.encoder_layers > 0:
+        enc_out = _run_encoder(params, cfg, batch["src_embeds"])
+    x = _embed_in(params, cfg, batch)
+    b, s = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = default_positions(cfg, b, s)
+    x, caches, _ = _run_prefill_stack(
+        params["blocks"],
+        x,
+        positions,
+        cfg,
+        causal=True,
+        enc_out=enc_out,
+        long_mode=long_mode,
+        cache_size=cache_size if cache_size is not None else s,
+        collect=True,
+        remat=False,
+    )
+    x = rms_norm(params["final_norm"], x[:, -1:, :])
+    return _logits(params, cfg, x)[:, 0, :], caches
+
+
+def decode_step(
+    params: dict,
+    tokens: jax.Array,  # [B, 1] int32
+    caches: tuple,
+    cache_len: jax.Array,  # scalar int32: logical position being written
+    cfg: LMConfig,
+    *,
+    long_mode: bool = False,
+    mla_absorb: bool = False,
+) -> tuple[jax.Array, tuple]:
+    """One-token decode against the KV/state caches."""
+    x = params["embed"][tokens]
+    period = cfg.pattern_period
+
+    def body(hx, slices):
+        bslices, cslices = slices
+        new_caches = []
+        for pos in range(period):
+            hx, nc = block_decode(
+                bslices[pos],
+                hx,
+                cslices[pos],
+                cache_len,
+                cfg,
+                pos,
+                long_mode=long_mode,
+                mla_absorb=mla_absorb,
+            )
+            new_caches.append(nc)
+        return hx, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    x = rms_norm(params["final_norm"], x)
+    return _logits(params, cfg, x)[:, 0, :], new_caches

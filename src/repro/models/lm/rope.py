@@ -1,0 +1,54 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the rotary half-dim into (temporal, height, width) sections,
+each rotated by its own position stream; text tokens carry identical
+(t, h, w) positions, which reduces exactly to standard RoPE.  Positions:
+``[..., S]`` for default, ``[..., S, 3]`` for mrope.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["apply_rope", "rope_angles"]
+
+
+def rope_angles(
+    positions: jax.Array,  # [B, S] or [B, S, 3]
+    head_dim: int,
+    theta: float,
+    kind: str,
+    mrope_sections: tuple[int, int, int],
+) -> tuple[jax.Array, jax.Array]:
+    """Return (cos, sin) of shape [B, S, head_dim // 2] (fp32)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)  # [half]
+    if kind == "default":
+        ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,half]
+    elif kind == "mrope":
+        if positions.ndim < 2 or positions.shape[-1] != 3:
+            raise ValueError("mrope needs positions [..., S, 3]")
+        secs = mrope_sections
+        if sum(secs) != half:
+            raise ValueError(f"mrope sections {secs} must sum to half dim {half}")
+        parts = []
+        start = 0
+        for axis, width in enumerate(secs):
+            f = freqs[start : start + width]
+            parts.append(positions[..., axis][..., None].astype(jnp.float32) * f)
+            start += width
+        ang = jnp.concatenate(parts, axis=-1)  # [B,S,half]
+    else:
+        raise ValueError(f"unknown rope kind {kind!r}")
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate ``x: [B, S, H, D]`` with angles ``[B, S, D//2]``."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

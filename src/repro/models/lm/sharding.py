@@ -1,0 +1,126 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs (DESIGN.md §5).
+
+Classification is by leaf name (params are named for their parallelism
+style): column-parallel weights shard the output feature dim on ``model``,
+row-parallel shard the input dim, MoE expert tensors shard the expert dim
+(expert parallelism), embeddings shard the vocab dim.  Leading stacking
+dims (the scan repeat axis, the MoE expert axis where explicit) are padded
+with ``None``.
+
+Batch dims shard over the data axes (``("pod","data")`` multi-pod); KV
+cache *sequence* dims shard over ``model`` — uniform and always divisible,
+unlike kv-head counts (kv=1..16 across the zoo).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "to_shardings", "data_axes"]
+
+# output-feature (last dim) on model
+_COL = {
+    "wq", "wk", "wv", "w_uq", "w_uk", "w_uv", "w1", "w3", "in_proj", "dt_proj",
+    "w_r", "w_k", "w_v", "w_g", "w_in", "w_lora_b", "lm_head", "conv_w", "u_bonus",
+}
+# input-feature (second-to-last dim) on model
+_ROW = {"wo", "w_o", "w2", "out_proj", "x_proj", "w_out"}
+# expert-parallel: (E, d, ff) etc, expert dim on model
+_EXPERT = {"we1", "we2", "we3"}
+# 1-D vectors over a model-sharded feature dim
+_VEC = {"conv_b", "dt_bias", "d_skip"}
+_REPL = {"router", "mu", "w0", "w_lora_a", "w_dq", "w_dkv", "w_kr", "b"}
+
+
+def _names(path) -> list[str]:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(p.key)
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            out.append(p.name)
+    return out
+
+
+def _pad(nd: int, tail: tuple) -> P:
+    return P(*([None] * (nd - len(tail)) + list(tail)))
+
+
+def _param_leaf_spec(path, leaf) -> P:
+    names = _names(path)
+    name = names[-1] if names else ""
+    nd = leaf.ndim
+    if name == "embed":
+        return P("model", None)
+    if name == "scale":
+        if len(names) >= 2 and names[-2] == "ln_x":
+            return _pad(nd, ("model",))
+        return P(*([None] * nd))
+    if name in _EXPERT:
+        return _pad(nd, ("model", None, None))
+    if name in _COL:
+        return _pad(nd, (None, "model"))
+    if name in _ROW:
+        return _pad(nd, ("model", None))
+    if name in _VEC:
+        return _pad(nd, ("model",))
+    if name == "a_log":
+        return _pad(nd, ("model", None))
+    if name in _REPL or nd == 0:
+        return P(*([None] * nd))
+    # default: replicate (norm scales, biases, anything unclassified)
+    return P(*([None] * nd))
+
+
+def param_specs(params) -> dict:
+    return jax.tree_util.tree_map_with_path(_param_leaf_spec, params)
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_specs(batch, batch_axes: tuple):
+    ba = tuple(batch_axes)
+    first = ba if ba else None
+
+    def leaf(path, x):
+        return P(*([first] + [None] * (x.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(leaf, batch)
+
+
+def _cache_leaf_spec(path, leaf, batch_axes: tuple) -> P:
+    names = _names(path)
+    name = names[-1] if names else ""
+    nd = leaf.ndim
+    ba = tuple(batch_axes) if batch_axes else None
+    # All cache leaves are stacked over repeats: leading R dim, then batch.
+    if name in ("k", "v"):  # (R, B, S, Hkv, Dh)
+        return P(None, ba, "model", None, None)
+    if name in ("c_kv", "k_rope"):  # (R, B, S, r)
+        return P(None, ba, "model", None)
+    if name == "conv":  # (R, B, d_conv-1, d_inner)
+        return P(None, ba, None, "model")
+    if name == "ssm":  # (R, B, d_inner, d_state)
+        return P(None, ba, "model", None)
+    if name == "state":  # (R, B, H, Dk, Dv) -> shard Dk
+        return P(None, ba, None, "model", None)
+    if name == "shift":  # (R, B, d)
+        return P(None, ba, None)
+    return P(*([None] * nd))
+
+
+def cache_specs(caches, batch_axes: tuple):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _cache_leaf_spec(p, l, batch_axes), caches
+    )
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

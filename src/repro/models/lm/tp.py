@@ -1,0 +1,110 @@
+"""Explicit tensor-parallel row-parallel matmul (§Perf iteration).
+
+GSPMD handles the col-parallel → row-parallel matmul pair correctly but
+sinks the fp32 upcast of the downstream RMSNorm *before* the psum, so the
+per-layer [B, S, d] activation all-reduce moves fp32 bytes (2× what it
+needs to).  ``maybe_row_parallel`` routes the row-parallel matmul through a
+shard_map whose psum is explicitly bf16.  Enabled by the launcher via
+``set_tp_context`` (variant ``tp_shardmap``); off by default so the
+baseline stays paper-naive.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "set_tp_context",
+    "maybe_row_parallel",
+    "set_bf16_barrier",
+    "maybe_barrier",
+    "set_remat_policy",
+    "remat_policy",
+    "set_rwkv_chunked",
+    "rwkv_chunked",
+]
+
+_TP_CTX: tuple | None = None  # (mesh, model_axis)
+_BF16_BARRIER = False
+_REMAT_POLICY: str | None = None
+
+
+def set_remat_policy(name: str | None) -> None:
+    """§Perf variant ``remat_dots``: make matmul outputs saveable under the
+    layer-scan checkpoint so the backward pass re-reads instead of
+    re-computing them — trades activation memory for HBM traffic/FLOPs."""
+    global _REMAT_POLICY
+    _REMAT_POLICY = name
+
+
+def remat_policy():
+    if _REMAT_POLICY == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+_RWKV_CHUNKED = False
+
+
+def set_rwkv_chunked(on: bool) -> None:
+    """§Perf variant ``rwkv_chunked``: chunked (flash-linear-attention
+    style) WKV6 prefill instead of the per-token sequential scan."""
+    global _RWKV_CHUNKED
+    _RWKV_CHUNKED = bool(on)
+
+
+def rwkv_chunked() -> bool:
+    return _RWKV_CHUNKED
+
+
+def set_bf16_barrier(on: bool) -> None:
+    """§Perf variant ``bf16_psum``: place an optimization barrier between the
+    row-parallel matmul output and the residual/norm consumer so XLA cannot
+    sink the norm's fp32 upcast below the TP all-reduce (which would double
+    its bytes).  The barrier pins the psum to the matmul's bf16 dtype."""
+    global _BF16_BARRIER
+    _BF16_BARRIER = bool(on)
+
+
+def maybe_barrier(x: jax.Array) -> jax.Array:
+    if _BF16_BARRIER:
+        return jax.lax.optimization_barrier(x)
+    return x
+
+
+def set_tp_context(mesh=None, model_axis: str = "model") -> None:
+    global _TP_CTX
+    _TP_CTX = None if mesh is None else (mesh, model_axis)
+
+
+def maybe_row_parallel(h: jax.Array, w: jax.Array) -> jax.Array:
+    """``h @ w`` with w row-parallel on the model axis when TP is enabled.
+
+    h: [..., F] activations whose last dim is model-sharded (produced by a
+    col-parallel matmul); w: [F, D].  The psum runs in h.dtype (bf16).
+    """
+    if _TP_CTX is None:
+        return h @ w
+    mesh, model_axis = _TP_CTX
+    if w.shape[0] % mesh.shape[model_axis] != 0:
+        return h @ w  # not evenly shardable; leave to GSPMD
+
+    h_spec = P(*([None] * (h.ndim - 1) + [model_axis]))
+    w_spec = P(model_axis, None)
+    out_spec = P(*([None] * h.ndim))
+
+    def local_fn(h_l, w_l):
+        return jax.lax.psum(h_l @ w_l, model_axis)
+
+    # Manual only over the model axis: batch/data sharding of ``h`` stays
+    # under GSPMD's control (partial-auto shard_map).
+    return jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(h_spec, w_spec),
+        out_specs=out_spec,
+        axis_names={model_axis},
+        check_vma=False,
+    )(h, w)

@@ -1,0 +1,64 @@
+"""AdamW with fp32 moments over (possibly bf16) parameters + cosine schedule."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_adamw", "adamw_update", "cosine_schedule"]
+
+
+def init_adamw(params) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def cosine_schedule(step, *, base_lr=3e-4, warmup=100, total=10_000, min_frac=0.1):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return base_lr * jnp.where(step < warmup, warm, cos)
+
+
+def adamw_update(
+    params,
+    grads,
+    state: dict,
+    *,
+    lr=None,
+    base_lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    step = state["step"] + 1
+    lr_t = cosine_schedule(step, base_lr=base_lr) if lr is None else lr
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(field):
+        def f(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g32
+            v_new = b2 * v + (1 - b2) * g32 * g32
+            if field == "m":
+                return m_new
+            if field == "v":
+                return v_new
+            update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            p32 = p.astype(jnp.float32)
+            return (p32 - lr_t * (update + weight_decay * p32)).astype(p.dtype)
+
+        return f
+
+    args = (params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(upd("p"), *args)
+    new_m = jax.tree.map(upd("m"), *args)
+    new_v = jax.tree.map(upd("v"), *args)
+    return new_params, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,158 @@
+"""DCI's technique applied to LM serving — the cross-domain integration.
+
+The paper's recipe is domain-agnostic (DESIGN.md §4):
+
+  1. profile a small pre-serving workload sample, timing the two candidate
+     stages (Eq. 1 inputs) and counting per-item visits;
+  2. split one device-memory budget across two caches proportionally to the
+     measured stage times (``core.allocation.allocate_capacity`` — the very
+     same Eq. 1 implementation the GNN path uses);
+  3. fill each cache with the sort-free above-mean heuristic.
+
+For a transformer server the two gather-heavy stages are:
+
+  * **embedding rows** (vocab up to 256k × d_model; token frequency is
+    zipfian — the "node features" of this domain), and
+  * **expert weights** (MoE: router selections are the "adjacency"
+    workload; a decode batch touches a hot subset of experts).
+
+``build_serving_caches`` profiles token/expert frequencies from a request
+sample and returns resident hot sets + position maps with hit counters.
+On TPU the hot tables are the HBM-resident working set and misses page
+from host memory; here the hit/miss accounting and Eq. 1 split are exact,
+byte movement is projected as in the GNN engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocation import CacheAllocation, allocate_capacity
+from repro.graph.features import FeatureStore, build_feature_cache
+from repro.models.lm.config import LMConfig
+
+__all__ = ["ServingCaches", "profile_and_allocate", "build_serving_caches"]
+
+
+@dataclasses.dataclass
+class ServingCaches:
+    allocation: CacheAllocation
+    embed_cache: FeatureStore  # hot embedding rows (position-map + hot table)
+    hot_experts: np.ndarray | None  # expert ids resident per the budget
+    expert_bytes_each: int
+    token_counts: np.ndarray
+    expert_counts: np.ndarray | None
+
+    def embed_hit_rate(self, tokens: np.ndarray) -> float:
+        pos = np.asarray(self.embed_cache.position_map)[tokens.reshape(-1)]
+        return float((pos >= 0).mean())
+
+    def expert_hit_rate(self, expert_ids: np.ndarray) -> float:
+        if self.hot_experts is None:
+            return 0.0
+        resident = np.zeros(int(self.expert_counts.shape[0]), bool)
+        resident[self.hot_experts] = True
+        return float(resident[expert_ids.reshape(-1)].mean())
+
+
+def _expert_param_bytes(cfg: LMConfig) -> int:
+    m = cfg.moe
+    per_expert = 3 * cfg.d_model * m.d_ff_expert  # we1/we2/we3
+    return per_expert * 2 * cfg.n_layers // max(m.every, 1)  # bf16
+
+
+def profile_and_allocate(
+    cfg: LMConfig,
+    params: dict,
+    sample_tokens: np.ndarray,  # [n_req, seq] request sample (pre-serving)
+    *,
+    total_cache_bytes: int,
+    seed: int = 0,
+) -> tuple[CacheAllocation, np.ndarray, np.ndarray | None, list[float], list[float]]:
+    """Stage timing + visit counting over the request sample (paper §IV-A/B).
+
+    Stage A = embedding gather; stage B = expert selection + expert-weight
+    touch (MoE) or KV staging (dense — then the split degenerates toward
+    all-embedding, which is DCI's SCI special case).
+    """
+    embed = params["embed"]
+    t_embed: list[float] = []
+    t_expert: list[float] = []
+    token_counts = np.zeros(cfg.vocab_padded, np.int64)
+    expert_counts = (
+        np.zeros(cfg.moe.n_experts, np.int64) if cfg.moe is not None else None
+    )
+
+    router = None
+    if cfg.moe is not None:
+        # first MoE block's router (any pattern position carrying "moe")
+        for pos in range(cfg.pattern_period):
+            if "moe" in params["blocks"][pos]:
+                router = params["blocks"][pos]["moe"]["router"][0]  # repeat 0
+                break
+
+    for req in sample_tokens:
+        ids = jnp.asarray(req)
+        t0 = time.perf_counter()
+        rows = embed[ids]
+        jax.block_until_ready(rows)
+        t_embed.append(time.perf_counter() - t0)
+        np.add.at(token_counts, np.asarray(req), 1)
+
+        if cfg.moe is not None and router is not None:
+            t0 = time.perf_counter()
+            logits = rows.astype(jnp.float32) @ router
+            _, top = jax.lax.top_k(logits, cfg.moe.top_k)
+            jax.block_until_ready(top)
+            t_expert.append(time.perf_counter() - t0)
+            np.add.at(expert_counts, np.asarray(top).reshape(-1), 1)
+        else:
+            t_expert.append(0.0)
+
+    alloc = allocate_capacity(t_expert, t_embed, total_cache_bytes)
+    # Eq.1 convention: "sample"-like stage (expert selection) ↔ adj budget.
+    return alloc, token_counts, expert_counts, t_embed, t_expert
+
+
+def build_serving_caches(
+    cfg: LMConfig,
+    params: dict,
+    sample_tokens: np.ndarray,
+    *,
+    total_cache_bytes: int,
+    seed: int = 0,
+) -> ServingCaches:
+    alloc, token_counts, expert_counts, _, _ = profile_and_allocate(
+        cfg, params, sample_tokens, total_cache_bytes=total_cache_bytes, seed=seed
+    )
+    embed_np = np.asarray(params["embed"], np.float32)
+    embed_cache = build_feature_cache(embed_np, token_counts, alloc.feat_bytes)
+
+    hot_experts = None
+    per_expert = 0
+    if cfg.moe is not None and expert_counts is not None:
+        per_expert = _expert_param_bytes(cfg) // cfg.moe.n_experts
+        budget = max(alloc.adj_bytes // max(per_expert, 1), 0)
+        mean = expert_counts.mean()
+        hot = np.nonzero(expert_counts > mean)[0]
+        if len(hot) > budget:
+            hot = hot[np.argsort(-expert_counts[hot], kind="stable")[:budget]]
+        elif len(hot) < budget:
+            rest = np.nonzero(expert_counts <= mean)[0]
+            rest = rest[np.argsort(-expert_counts[rest], kind="stable")]
+            hot = np.concatenate([hot, rest[: budget - len(hot)]])
+        hot_experts = np.sort(hot.astype(np.int32))
+
+    return ServingCaches(
+        allocation=alloc,
+        embed_cache=embed_cache,
+        hot_experts=hot_experts,
+        expert_bytes_each=per_expert,
+        token_counts=token_counts,
+        expert_counts=expert_counts,
+    )

@@ -1,0 +1,126 @@
+"""Slot-based batched serving engine (continuous batching, vLLM-lite).
+
+``BatchedServer`` owns a fixed number of decode *slots* sharing one jitted
+``decode_step`` whose ``cache_len`` is a per-slot vector: requests of
+different lengths decode together, each attending only to its own logical
+prefix (the per-batch ring mask in ``models/lm/attention.py``).  When a
+slot finishes (max tokens here; EOS in a real deployment) it is refilled
+from the queue by a single-request prefill whose caches are scattered into
+the slot — admission never stalls the running batch.
+
+Decoder-only token architectures; greedy sampling.  MoE capacity is shared
+across slots in a decode step (documented coupling — capacity_factor is
+ample at decode batch sizes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm.blocks import init_block_cache
+from repro.models.lm.config import LMConfig
+from repro.models.lm.model import decode_step, prefill
+
+__all__ = ["BatchedServer", "Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray  # [L] int32
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    def __init__(self, cfg: LMConfig, params, *, slots: int = 4, max_len: int = 256):
+        if cfg.encoder_layers > 0 or cfg.input_mode == "embeds":
+            raise ValueError("BatchedServer targets decoder-only token archs")
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        dtype = jnp.dtype(cfg.dtype)
+        self.caches = tuple(
+            jax.vmap(lambda _: init_block_cache(cfg, p, slots, max_len, dtype, long_mode=False))(
+                jnp.arange(cfg.n_repeats)
+            )
+            for p in range(cfg.pattern_period)
+        )
+        self.cache_len = np.zeros(slots, np.int32)
+        self.last_token = np.zeros(slots, np.int32)
+        self.active: list[Request | None] = [None] * slots
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, c, l: decode_step(p, t, c, l, cfg)
+        )
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, b, cfg, cache_size=max_len)
+        )
+
+    # ------------------------------------------------------------- intake
+    def submit(self, prompt: np.ndarray, max_new: int, req_id: int | None = None) -> Request:
+        req = Request(req_id if req_id is not None else len(self.queue), np.asarray(prompt, np.int32), max_new)
+        self.queue.append(req)
+        return req
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            logits, new_caches = self._prefill(self.params, {"tokens": jnp.asarray(req.prompt[None, :])})
+            tok = int(jnp.argmax(logits[0, : self.cfg.vocab]))
+            req.generated.append(tok)
+            # scatter the single-request caches into slot s (batch dim = 2
+            # for attn kv [R,B,S,...]; mamba/rwkv leaves also have B at 1)
+            def insert(slot_leaf, new_leaf):
+                return slot_leaf.at[:, s].set(new_leaf[:, 0])
+
+            self.caches = jax.tree.map(insert, self.caches, new_caches)
+            self.cache_len[s] = len(req.prompt)
+            self.last_token[s] = tok
+            self.active[s] = req
+
+    # --------------------------------------------------------------- step
+    def step(self) -> int:
+        """Admit + one decode step for all active slots. Returns #active."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        tokens = jnp.asarray(self.last_token[:, None])
+        lens = jnp.asarray(self.cache_len)
+        logits, self.caches = self._decode(self.params, tokens, self.caches, lens)
+        next_tok = np.asarray(jnp.argmax(logits[:, : self.cfg.vocab], axis=-1), np.int32)
+        n_active = 0
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.cache_len[s] += 1
+            req.generated.append(int(next_tok[s]))
+            self.last_token[s] = next_tok[s]
+            if len(req.generated) >= req.max_new or self.cache_len[s] >= self.max_len - 1:
+                req.done = True
+                self.finished.append(req)
+                self.active[s] = None
+                self.cache_len[s] = 0
+            else:
+                n_active += 1
+        return n_active + len(self.queue)
+
+    def run(self) -> list[Request]:
+        t0 = time.perf_counter()
+        steps = 0
+        while self.step() or self.queue or any(r is not None for r in self.active):
+            steps += 1
+            if steps > 100_000:  # safety
+                break
+        self.elapsed = time.perf_counter() - t0
+        return sorted(self.finished, key=lambda r: r.req_id)

@@ -1,0 +1,44 @@
+"""Wall-clock helpers (pre-sampling stage timing is part of DCI's Eq. 1)."""
+
+from __future__ import annotations
+
+import contextlib
+import time
+
+import jax
+
+__all__ = ["Stopwatch", "timed"]
+
+
+class Stopwatch:
+    """Accumulates named wall-clock durations (seconds)."""
+
+    def __init__(self):
+        self.totals: dict[str, float] = {}
+        self.counts: dict[str, int] = {}
+
+    @contextlib.contextmanager
+    def track(self, name: str, *, sync: object = None):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            if sync is not None:
+                jax.block_until_ready(sync)
+            dt = time.perf_counter() - t0
+            self.totals[name] = self.totals.get(name, 0.0) + dt
+            self.counts[name] = self.counts.get(name, 0) + 1
+
+    def add(self, name: str, seconds: float) -> None:
+        self.totals[name] = self.totals.get(name, 0.0) + seconds
+        self.counts[name] = self.counts.get(name, 0) + 1
+
+    def total(self, name: str) -> float:
+        return self.totals.get(name, 0.0)
+
+
+@contextlib.contextmanager
+def timed(out: dict, name: str):
+    t0 = time.perf_counter()
+    yield
+    out[name] = out.get(name, 0.0) + time.perf_counter() - t0

@@ -1,0 +1,19 @@
+import numpy as np
+import pytest
+
+from repro.graph.datasets import load_dataset
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    return load_dataset("ogbn-products", scale=0.002, seed=0)
+
+
+@pytest.fixture(scope="session")
+def tiny_dataset():
+    return load_dataset("reddit", scale=0.001, seed=1)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

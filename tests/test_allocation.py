@@ -1,0 +1,62 @@
+"""Eq. 1 capacity allocation + workload-aware budget."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.allocation import allocate_capacity, available_budget
+
+
+def test_eq1_proportional_split():
+    a = allocate_capacity([1.0, 1.0], [3.0, 3.0], 1000)
+    assert a.adj_bytes == 250  # 2 / (2+6)
+    assert a.feat_bytes == 750
+    assert a.adj_bytes + a.feat_bytes == 1000
+
+
+def test_eq1_zero_times_splits_evenly():
+    a = allocate_capacity([0.0], [0.0], 100)
+    assert a.adj_bytes == 50
+
+
+def test_eq1_rejects_mismatched_lists():
+    with pytest.raises(ValueError):
+        allocate_capacity([1.0], [1.0, 2.0], 10)
+    with pytest.raises(ValueError):
+        allocate_capacity([], [], 10)
+
+
+def test_available_budget_reserve():
+    assert available_budget(24 << 30, 2 << 30, reserve_bytes=1 << 30) == 21 << 30
+    assert available_budget(1 << 30, 2 << 30) == 0  # never negative
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    ts=st.lists(st.floats(0, 10, allow_nan=False), min_size=1, max_size=16),
+    tf=st.lists(st.floats(0, 10, allow_nan=False), min_size=1, max_size=16),
+    total=st.integers(0, 1 << 32),
+)
+def test_eq1_properties(ts, tf, total):
+    n = min(len(ts), len(tf))
+    ts, tf = ts[:n], tf[:n]
+    a = allocate_capacity(ts, tf, total)
+    # partition of the budget, both non-negative
+    assert a.adj_bytes >= 0 and a.feat_bytes >= 0
+    assert a.adj_bytes + a.feat_bytes == total
+    # split fraction matches Eq. 1 within integer rounding
+    denom = sum(ts) + sum(tf)
+    if denom > 0 and total > 0:
+        assert abs(a.adj_bytes / total - sum(ts) / denom) <= 1.0 / total + 1e-9
+
+
+def test_saturation_spill():
+    """Eq.1 share beyond a cache's useful size spills to the other
+    (beyond-paper refinement; see EXPERIMENTS.md)."""
+    # sampling dominates -> Eq.1 gives adj 80%; adj only needs 100 bytes
+    a = allocate_capacity([8.0], [2.0], 1000, adj_need_bytes=100, feat_need_bytes=10_000)
+    assert a.adj_bytes == 100
+    assert a.feat_bytes == 900
+    # both saturate when the budget covers everything
+    b = allocate_capacity([1.0], [1.0], 10_000, adj_need_bytes=100, feat_need_bytes=200)
+    assert b.adj_bytes == 100 and b.feat_bytes == 200

@@ -1,0 +1,53 @@
+"""Regression guard: the dry-run (512 host devices) still lowers+compiles.
+
+Runs in a subprocess because the dry-run must set XLA_FLAGS before jax
+initializes (the test process already holds a 1-device jax).  One cheap
+combo per kind + the §Perf variants keeps it fast (~1 min total).
+"""
+
+import subprocess
+import sys
+
+import pytest
+
+CASES = [
+    ("gemma-2b", "decode_32k", "baseline"),
+    ("qwen2-vl-2b", "train_4k", "baseline"),
+    ("phi3.5-moe-42b-a6.6b", "prefill_32k", "moe_shardmap"),
+    ("deepseek-v2-236b", "decode_32k", "mla_absorb"),
+    ("rwkv6-3b", "long_500k", "baseline"),
+]
+
+
+@pytest.mark.parametrize("arch,shape,variant", CASES)
+def test_dryrun_compiles(arch, shape, variant):
+    proc = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "repro.launch.dryrun",
+            "--arch",
+            arch,
+            "--shape",
+            shape,
+            "--variant",
+            variant,
+        ],
+        capture_output=True,
+        text=True,
+        timeout=420,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "1 combos compiled, 1 with analyses" in proc.stdout
+
+
+def test_pod_scale_gnn_dryrun_compiles():
+    """The beyond-paper pod-scale GNN inference dry-run (papers100M scale)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun_gnn", "--batch", "256"],
+        capture_output=True,
+        text=True,
+        timeout=420,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "cold" in proc.stdout and "hot" in proc.stdout

@@ -1,0 +1,81 @@
+"""Feature-cache filling (§IV-B): sort-free above-mean selection."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.graph.features import build_feature_cache, plain_feature_store
+
+
+def test_above_mean_nodes_cached_first(rng):
+    feats = rng.standard_normal((100, 8)).astype(np.float32)
+    counts = np.zeros(100, np.int64)
+    counts[:10] = 100  # hot
+    counts[10:20] = 1  # lukewarm
+    row = 8 * 4
+    store = build_feature_cache(feats, counts, capacity_bytes=row * 10)
+    pos = np.asarray(store.position_map)
+    assert (pos[:10] >= 0).all()  # all above-mean nodes in
+    assert (pos[20:] < 0).all()
+
+
+def test_top_up_below_mean(rng):
+    feats = rng.standard_normal((50, 4)).astype(np.float32)
+    counts = np.zeros(50, np.int64)
+    counts[0] = 10
+    counts[1:6] = 1  # below mean after the spike? mean = 15/50 = 0.3 -> above
+    store = build_feature_cache(feats, counts, capacity_bytes=4 * 4 * 20)
+    pos = np.asarray(store.position_map)
+    # visited nodes preferred over never-visited when topping up
+    assert (pos[:6] >= 0).all()
+    assert int((pos >= 0).sum()) == 20
+
+
+def test_capacity_zero(rng):
+    feats = rng.standard_normal((10, 4)).astype(np.float32)
+    store = build_feature_cache(feats, np.ones(10, np.int64), capacity_bytes=0)
+    assert store.num_cached == 0
+    out, hit = store.gather(np.arange(10, dtype=np.int32))
+    assert not np.asarray(hit).any()
+    np.testing.assert_allclose(np.asarray(out), feats)
+
+
+def test_gather_correct_on_hits_and_misses(rng):
+    feats = rng.standard_normal((30, 6)).astype(np.float32)
+    counts = rng.integers(0, 5, 30).astype(np.int64)
+    store = build_feature_cache(feats, counts, capacity_bytes=6 * 4 * 7)
+    idx = rng.integers(0, 30, 64).astype(np.int32)
+    out, hit = store.gather(idx)
+    np.testing.assert_allclose(np.asarray(out), feats[idx], rtol=1e-6)
+    # hit mask matches the position map
+    pos = np.asarray(store.position_map)
+    np.testing.assert_array_equal(np.asarray(hit), pos[idx] >= 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 60),
+    f=st.integers(1, 12),
+    budget_rows=st.integers(0, 70),
+    seed=st.integers(0, 999),
+)
+def test_feature_cache_properties(n, f, budget_rows, seed):
+    rng = np.random.default_rng(seed)
+    feats = rng.standard_normal((n, f)).astype(np.float32)
+    counts = rng.integers(0, 10, n).astype(np.int64)
+    store = build_feature_cache(feats, counts, capacity_bytes=budget_rows * f * 4)
+    cached = store.num_cached
+    assert cached <= min(budget_rows, n)
+    if budget_rows >= n:
+        assert cached == n  # everything fits
+    # gather always reconstructs the exact features
+    idx = rng.integers(0, n, 20).astype(np.int32)
+    out, _ = store.gather(idx)
+    np.testing.assert_allclose(np.asarray(out), feats[idx], rtol=1e-6)
+
+
+def test_plain_store_never_hits(rng):
+    feats = rng.standard_normal((5, 3)).astype(np.float32)
+    store = plain_feature_store(feats)
+    _, hit = store.gather(np.arange(5, dtype=np.int32))
+    assert not np.asarray(hit).any()

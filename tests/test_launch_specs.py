@@ -1,0 +1,63 @@
+"""Dry-run spec consistency: the abstract caches used for decode lowering
+must match (structure AND shapes) what prefill actually produces — this is
+the test that keeps `launch/specs.py` honest as the model evolves."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.launch.specs import abstract_caches
+from repro.models.lm import model as M
+
+B, S = 2, 16
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_abstract_caches_match_prefill(arch):
+    cfg = get_smoke(arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {}
+    if cfg.encoder_layers > 0:
+        batch["src_embeds"] = jnp.zeros((B, S, cfg.d_model), jnp.float32)
+        batch["tokens"] = jnp.zeros((B, S), jnp.int32)
+    elif cfg.input_mode == "embeds":
+        batch["embeds"] = jnp.zeros((B, S, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = jnp.zeros((B, S), jnp.int32)
+    _, caches = jax.eval_shape(
+        lambda p, b: M.prefill(p, b, cfg, cache_size=S), params, batch
+    )
+
+    # enc-dec abstract uses a fixed encoder length; align it for comparison
+    import repro.launch.specs as specs_mod
+
+    old = specs_mod.DECODE_ENC_LEN
+    specs_mod.DECODE_ENC_LEN = S
+    try:
+        abstract = abstract_caches(cfg, B, S, long_mode=False)
+    finally:
+        specs_mod.DECODE_ENC_LEN = old
+
+    assert jax.tree.structure(caches) == jax.tree.structure(abstract)
+    for got, want in zip(jax.tree.leaves(caches), jax.tree.leaves(abstract)):
+        assert got.shape == want.shape, (arch, got.shape, want.shape)
+        assert got.dtype == want.dtype, (arch, got.dtype, want.dtype)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "gemma2-27b", "rwkv6-3b", "jamba-v0.1-52b"])
+def test_decode_accepts_abstract_cache_shapes(arch):
+    """decode_step must lower against exactly the abstract cache tree."""
+    cfg = get_smoke(arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    abstract = abstract_caches(cfg, B, S, long_mode=False)
+    tokens = jnp.zeros((B, 1), jnp.int32)
+    out = jax.eval_shape(
+        lambda p, t, c: M.decode_step(p, t, c, jnp.int32(S - 1), cfg),
+        params,
+        tokens,
+        abstract,
+    )
+    logits, new_caches = out
+    assert logits.shape == (B, cfg.vocab_padded)
+    assert jax.tree.structure(new_caches) == jax.tree.structure(abstract)

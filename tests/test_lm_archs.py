@@ -1,0 +1,143 @@
+"""Per-architecture smoke tests (brief requirement: reduced variant, one
+forward/train step on CPU, shape + finiteness assertions) plus
+prefill↔decode consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.models.lm import model as M
+
+B, S = 2, 32
+
+
+def make_batch(cfg, key, s=S, labels=True):
+    batch = {}
+    if cfg.encoder_layers > 0:
+        batch["src_embeds"] = jax.random.normal(key, (B, s, cfg.d_model), jnp.float32)
+        batch["tokens"] = jax.random.randint(key, (B, s), 0, cfg.vocab)
+    elif cfg.input_mode == "embeds":
+        batch["embeds"] = jax.random.normal(key, (B, s, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, s), 0, cfg.vocab)
+    if labels:
+        batch["labels"] = jax.random.randint(key, (B, s), 0, cfg.vocab)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_reduced_constraints(arch):
+    cfg = get_smoke(arch)
+    assert cfg.n_layers <= 2 + cfg.pattern_period  # reduced depth
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    # same family as the full config
+    assert cfg.family == get_config(arch).family
+    assert cfg.block_pattern[0] in ("attn", "local", "mamba", "rwkv")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_shapes_and_finite(arch):
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    batch = make_batch(cfg, key)
+    loss, grads = jax.value_and_grad(lambda p: M.train_loss(p, batch, cfg))(params)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(l, np.float32)).all() for l in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_shapes(arch):
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(key, cfg)
+    batch = make_batch(cfg, key, labels=False)
+    logits, caches = M.prefill(params, batch, cfg, cache_size=S + 4)
+    assert logits.shape == (B, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits[:, : cfg.vocab])).all()
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    assert int(tok.max()) < cfg.vocab  # padded vocab rows masked out
+    logits2, caches2 = M.decode_step(params, tok, caches, jnp.int32(S), cfg)
+    assert logits2.shape == (B, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits2[:, : cfg.vocab])).all()
+    # cache trees keep their structure
+    assert jax.tree.structure(caches) == jax.tree.structure(caches2)
+
+
+@pytest.mark.parametrize(
+    "arch", ["granite-3-8b", "gemma2-27b", "deepseek-v2-236b", "jamba-v0.1-52b", "rwkv6-3b"]
+)
+def test_prefill_decode_consistency_fp32(arch):
+    """prefill(N+1) last logits == prefill(N) + decode (exact in fp32)."""
+    cfg = dataclasses.replace(get_smoke(arch), dtype="float32")
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0)
+        )  # avoid prefill-only capacity drops
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    s = 17
+    toks = jax.random.randint(key, (B, s + 1), 0, cfg.vocab)
+    batch_full = {"tokens": toks}
+    batch_pre = {"tokens": toks[:, :s]}
+    lf, _ = M.prefill(params, batch_full, cfg, cache_size=s + 8)
+    _, caches = M.prefill(params, batch_pre, cfg, cache_size=s + 8)
+    ld, _ = M.decode_step(params, toks[:, s : s + 1], caches, jnp.int32(s), cfg)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(ld), rtol=2e-4, atol=2e-4)
+
+
+def test_mla_absorb_matches_naive():
+    cfg = dataclasses.replace(get_smoke("deepseek-v2-236b"), dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    toks = jax.random.randint(key, (B, 9), 0, cfg.vocab)
+    _, caches = M.prefill(params, {"tokens": toks}, cfg, cache_size=16)
+    nxt = toks[:, :1]
+    l_naive, _ = M.decode_step(params, nxt, caches, jnp.int32(9), cfg, mla_absorb=False)
+    l_abs, _ = M.decode_step(params, nxt, caches, jnp.int32(9), cfg, mla_absorb=True)
+    np.testing.assert_allclose(np.asarray(l_naive), np.asarray(l_abs), rtol=2e-3, atol=2e-3)
+
+
+def test_ring_buffer_window_decode():
+    """With a ring cache of size W, decoding past W stays finite and the
+    window mask only sees the last W tokens."""
+    cfg = dataclasses.replace(get_smoke("granite-3-8b"), dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    w = 8
+    toks = jax.random.randint(key, (B, 30), 0, cfg.vocab)
+    _, caches = M.prefill(
+        params, {"tokens": toks[:, :16]}, cfg, cache_size=w, long_mode=True
+    )
+    logits = None
+    for t in range(16, 30):
+        logits, caches = M.decode_step(
+            params, toks[:, t : t + 1], caches, jnp.int32(t), cfg, long_mode=True
+        )
+    assert np.isfinite(np.asarray(logits[:, : cfg.vocab])).all()
+
+
+def test_mrope_positions_change_logits():
+    cfg = dataclasses.replace(get_smoke("qwen2-vl-2b"), dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    emb = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    p1 = M.default_positions(cfg, B, S)
+    # RoPE is relative: a uniform shift is a no-op.  Shift the "height"
+    # stream of only the first half (a 2-D patch block) to change relative
+    # geometry, as dynamic-resolution image grids do.
+    p2 = p1.at[:, : S // 2, 1].add(7)
+    l1, _ = M.prefill(params, {"embeds": emb, "positions": p1}, cfg, cache_size=S)
+    l2, _ = M.prefill(params, {"embeds": emb, "positions": p2}, cfg, cache_size=S)
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-5
+    # ...and a uniform shift of every stream IS a no-op
+    p3 = p1 + 11
+    l3, _ = M.prefill(params, {"embeds": emb, "positions": p3}, cfg, cache_size=S)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l3), atol=1e-4)

@@ -1,0 +1,26 @@
+"""Property tests for the serving ring-buffer mask (per-slot cache_len)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.lm.attention import _ring_mask
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    sc=st.integers(1, 64),
+    window=st.one_of(st.none(), st.integers(1, 80)),
+    lens=st.lists(st.integers(0, 200), min_size=1, max_size=4),
+)
+def test_ring_mask_counts(sc, window, lens):
+    """Each row must expose exactly min(cache_len+1, sc, window) positions:
+    the logical prefix, capped by ring capacity and attention window."""
+    cl = jnp.asarray(lens, jnp.int32)
+    mask = np.asarray(_ring_mask(cl, sc, window))
+    for i, l in enumerate(lens):
+        expect = min(l + 1, sc, window if window is not None else l + 1)
+        assert mask[i].sum() == expect, (l, sc, window, mask[i].sum())
+        # the current token's slot is always visible
+        assert mask[i, l % sc]

@@ -1,0 +1,45 @@
+"""Chunked WKV6 (flash-linear-attention style) == sequential scan."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models.lm import rwkv6 as R
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_smoke("rwkv6-3b"), dtype="float32")
+    params = R.init_rwkv_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    return cfg, params
+
+
+@pytest.mark.parametrize("s", [1, 7, 32, 64, 130])
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_chunked_matches_scan(setup, s, chunk):
+    cfg, params = setup
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, s, cfg.d_model), jnp.float32)
+    y_scan, c_scan = R.rwkv_time_mix_prefill(params, x, cfg)
+    y_chunk, c_chunk = R.rwkv_time_mix_prefill_chunked(params, x, cfg, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_chunk), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(c_scan["state"]), np.asarray(c_chunk["state"]), rtol=2e-4, atol=2e-5
+    )
+    np.testing.assert_allclose(np.asarray(c_scan["shift"]), np.asarray(c_chunk["shift"]))
+
+
+def test_chunked_then_decode_consistent(setup):
+    """Chunked prefill's carried state must continue correctly in decode."""
+    cfg, params = setup
+    s = 33
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, s + 1, cfg.d_model), jnp.float32)
+    y_full, _ = R.rwkv_time_mix_prefill(params, x, cfg)
+    _, cache = R.rwkv_time_mix_prefill_chunked(params, x[:, :s], cfg, chunk=16)
+    y_dec, _ = R.rwkv_time_mix_decode(params, x[:, s : s + 1], cache, cfg)
+    np.testing.assert_allclose(
+        np.asarray(y_full[:, -1:]), np.asarray(y_dec), rtol=2e-4, atol=2e-5
+    )

@@ -1,0 +1,112 @@
+"""Sampler invariants: validity, cache-hit equivalence, visit counting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.allocation import CacheAllocation
+from repro.core.cache import DualCache
+from repro.graph.csc import build_adj_cache, two_level_sort
+from repro.graph.sampling import count_visits, device_graph, sample_blocks, sample_neighbors
+
+
+def neighbors_of(ds, v):
+    lo, hi = ds.graph.col_ptr[v], ds.graph.col_ptr[v + 1]
+    return set(ds.graph.row_index[lo:hi].tolist()) or {v}
+
+
+def test_sampled_neighbors_are_real(small_dataset):
+    ds = small_dataset
+    g = device_graph(ds.graph)
+    seeds = jnp.asarray(ds.test_idx[:32])
+    nbr, hit, _ = sample_neighbors(jax.random.PRNGKey(0), g, seeds, 5)
+    nbr = np.asarray(nbr)
+    for i, v in enumerate(np.asarray(seeds)):
+        allowed = neighbors_of(ds, int(v))
+        assert set(nbr[i].tolist()) <= allowed
+
+
+def test_cached_sampler_returns_real_neighbors(small_dataset):
+    """With the adjacency cache active, samples must still be true neighbors."""
+    ds = small_dataset
+    seeds = jnp.asarray(ds.test_idx[:64])
+    # visit counts from a real pre-sampling pass over the same seeds, so the
+    # cache holds the edges these seeds actually touch
+    plain = device_graph(ds.graph)
+    _, _, slots = sample_neighbors(jax.random.PRNGKey(7), plain, seeds, 4)
+    counts = np.zeros(ds.graph.num_edges, np.int64)
+    np.add.at(counts, np.asarray(slots).reshape(-1), 1)
+    sorted_row, totals = two_level_sort(ds.graph, counts)
+    cache = build_adj_cache(ds.graph, sorted_row, totals, capacity_bytes=4 * 2000)
+    g = device_graph(ds.graph, sorted_row_index=sorted_row, adj_cache=cache)
+    nbr, hit, _ = sample_neighbors(jax.random.PRNGKey(1), g, seeds, 4)
+    nbr, hit = np.asarray(nbr), np.asarray(hit)
+    assert hit.any()  # cache actually used
+    for i, v in enumerate(np.asarray(seeds)):
+        assert set(nbr[i].tolist()) <= neighbors_of(ds, int(v))
+
+
+def test_zero_degree_self_loop():
+    import numpy as np
+
+    from repro.graph.csc import CSCGraph
+
+    g = CSCGraph(col_ptr=np.array([0, 0, 1]), row_index=np.array([0], np.int32))
+    dg = device_graph(g)
+    nbr, hit, _ = sample_neighbors(jax.random.PRNGKey(0), dg, jnp.array([0], jnp.int32), 3)
+    assert (np.asarray(nbr) == 0).all()
+    assert np.asarray(hit).all()  # self-loops need no host access
+
+
+def test_block_frontier_sizes(small_dataset):
+    g = device_graph(small_dataset.graph)
+    seeds = jnp.asarray(small_dataset.test_idx[:16])
+    b = sample_blocks(jax.random.PRNGKey(0), g, seeds, (4, 3, 2))
+    sizes = [16]
+    for f in (2, 3, 4):  # expansion uses reversed fanouts
+        sizes.append(sizes[-1] * (1 + f))
+    assert [fr.shape[0] for fr in b.frontiers] == sizes
+
+
+def test_count_visits_totals(small_dataset):
+    g = device_graph(small_dataset.graph)
+    seeds = jnp.asarray(small_dataset.test_idx[:16])
+    b = sample_blocks(jax.random.PRNGKey(0), g, seeds, (3, 2))
+    node_counts, edge_counts = count_visits(
+        small_dataset.num_nodes, small_dataset.graph.num_edges, [b]
+    )
+    assert node_counts.sum() == b.input_nodes.shape[0]
+    # every edge count came from a sampled slot of a non-isolated seed
+    assert edge_counts.sum() <= sum(s.size for s in b.edge_slots)
+
+
+@settings(max_examples=10, deadline=None)
+@given(fanout=st.integers(1, 6), n_seeds=st.integers(1, 32), seed=st.integers(0, 99))
+def test_hit_rate_in_unit_interval(small_dataset, fanout, n_seeds, seed):
+    ds = small_dataset
+    counts = np.random.default_rng(seed).integers(0, 5, ds.graph.num_edges).astype(np.int64)
+    sorted_row, totals = two_level_sort(ds.graph, counts)
+    cache = build_adj_cache(ds.graph, sorted_row, totals, capacity_bytes=4 * 200)
+    g = device_graph(ds.graph, sorted_row_index=sorted_row, adj_cache=cache)
+    seeds = jnp.asarray(ds.test_idx[:n_seeds])
+    _, hit, _ = sample_neighbors(jax.random.PRNGKey(seed), g, seeds, fanout)
+    rate = float(jnp.mean(hit))
+    assert 0.0 <= rate <= 1.0
+
+
+def test_dual_cache_build(small_dataset):
+    ds = small_dataset
+    rng = np.random.default_rng(0)
+    alloc = CacheAllocation(
+        total_bytes=100_000, adj_bytes=50_000, feat_bytes=50_000, sample_fraction=0.5
+    )
+    dc = DualCache.build(
+        ds,
+        node_counts=rng.integers(0, 9, ds.num_nodes),
+        edge_counts=rng.integers(0, 9, ds.graph.num_edges),
+        allocation=alloc,
+    )
+    assert dc.adj_cached_elements * 4 <= alloc.adj_bytes
+    assert dc.feat_cached_rows * ds.feature_nbytes_per_row() <= alloc.feat_bytes
