@@ -7,50 +7,92 @@ Paper claims validated here (directionally, on the scaled stand-ins):
   * DCI > SCI: dual cache beats single cache at equal budget (Fig. 8).
   * hit rates: feature hit high under power-law reuse; adjacency cache
     accelerates the sampling stage that SCI leaves cold.
+
+Beyond-paper axis: every policy runs at pipeline_depth 1 (serial, a device
+sync after every stage — the paper's execution model) and 2 (double
+buffered, batch i+1's sample/gather overlapping batch i's compute), so the
+serial-vs-pipelined wall-clock delta is reported side by side.  Outputs and
+hit rates are identical across depths by construction.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import CACHE_BYTES, FANOUTS, emit, make_engine, run_policy
+import argparse
+import json
+
+from benchmarks.common import CACHE_BYTES, FANOUTS, emit, make_engine, run_policy_depths
 
 POLICIES = ("dgl", "sci", "dci", "rain")
+PIPELINE_DEPTHS = (1, 2)
 
 
-def run(datasets=("reddit", "yelp", "amazon", "ogbn-products"), models=("graphsage", "gcn")):
+def run(
+    datasets=("reddit", "yelp", "amazon", "ogbn-products"),
+    models=("graphsage", "gcn"),
+    depths=PIPELINE_DEPTHS,
+):
+    if 1 not in depths:
+        raise ValueError("depths must include 1: the serial run is the baseline")
     rows = []
     for ds in datasets:
         for model in models:
             reports = {}
             for policy in POLICIES:
                 eng = make_engine(ds, model=model, fanouts=FANOUTS["8,4,2"])
-                reports[policy] = run_policy(eng, policy, cache_bytes=CACHE_BYTES)
-            base = reports["dgl"]
-            for policy, rep in reports.items():
-                speedup_wall = base.total_seconds / max(rep.total_seconds, 1e-9)
-                speedup_model = base.modeled_transfer_seconds() / max(
-                    rep.modeled_transfer_seconds(), 1e-9
+                reports[policy] = run_policy_depths(
+                    eng, policy, cache_bytes=CACHE_BYTES, depths=depths
                 )
-                rows.append(
-                    {
-                        "dataset": ds,
-                        "model": model,
-                        "policy": policy,
-                        "total_s": round(rep.total_seconds, 4),
-                        "speedup_wall_vs_dgl": round(speedup_wall, 3),
-                        "speedup_modeled_vs_dgl": round(speedup_model, 3),
-                        "adj_hit": round(rep.adj_hit_rate, 3),
-                        "feat_hit": round(rep.feat_hit_rate, 3),
-                    }
-                )
-                emit(
-                    f"end2end/{ds}/{model}/{policy}",
-                    rep.total_seconds / rep.num_batches * 1e6,
-                    f"speedup_modeled={speedup_model:.2f};adj_hit={rep.adj_hit_rate:.2f};"
-                    f"feat_hit={rep.feat_hit_rate:.2f}",
-                )
+            base = reports["dgl"][1]
+            for policy, by_depth in reports.items():
+                serial = by_depth[1]
+                for depth, rep in by_depth.items():
+                    speedup_wall = base.total_seconds / max(rep.total_seconds, 1e-9)
+                    speedup_model = base.modeled_transfer_seconds() / max(
+                        rep.modeled_transfer_seconds(), 1e-9
+                    )
+                    pipeline_speedup = serial.total_seconds / max(rep.total_seconds, 1e-9)
+                    rows.append(
+                        {
+                            "dataset": ds,
+                            "model": model,
+                            "policy": policy,
+                            "pipeline_depth": depth,
+                            "mode": "serial" if depth == 1 else "pipelined",
+                            "total_s": round(rep.total_seconds, 4),
+                            "speedup_wall_vs_dgl": round(speedup_wall, 3),
+                            "speedup_modeled_vs_dgl": round(speedup_model, 3),
+                            "pipeline_speedup_vs_serial": round(pipeline_speedup, 3),
+                            "adj_hit": round(rep.adj_hit_rate, 3),
+                            "feat_hit": round(rep.feat_hit_rate, 3),
+                        }
+                    )
+                    emit(
+                        f"end2end/{ds}/{model}/{policy}/depth{depth}",
+                        rep.total_seconds / rep.num_batches * 1e6,
+                        f"speedup_modeled={speedup_model:.2f};adj_hit={rep.adj_hit_rate:.2f};"
+                        f"feat_hit={rep.feat_hit_rate:.2f};"
+                        f"pipeline_speedup={pipeline_speedup:.2f}",
+                    )
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="also write rows as JSON to this path")
+    ap.add_argument(
+        "--quick", action="store_true", help="one dataset/model pair (CI artifact runs)"
+    )
+    args = ap.parse_args()
+    if args.quick:
+        rows = run(datasets=("ogbn-products",), models=("graphsage",))
+    else:
+        rows = run()
+    for r in rows:
         print(r)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

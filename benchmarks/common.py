@@ -44,6 +44,32 @@ def make_engine(
     )
 
 
-def run_policy(engine: GNNInferenceEngine, policy: str, cache_bytes: int = CACHE_BYTES, **kw):
+def run_policy(
+    engine: GNNInferenceEngine,
+    policy: str,
+    cache_bytes: int = CACHE_BYTES,
+    pipeline_depth: int = 1,
+    **kw,
+):
     engine.prepare(policy, total_cache_bytes=cache_bytes, **kw)
-    return engine.run(max_batches=MAX_BATCHES)
+    return engine.run(max_batches=MAX_BATCHES, pipeline_depth=pipeline_depth)
+
+
+def run_policy_depths(
+    engine: GNNInferenceEngine,
+    policy: str,
+    cache_bytes: int = CACHE_BYTES,
+    depths: tuple[int, ...] = (1, 2),
+    **kw,
+):
+    """Prepare once, then run at each pipeline depth (serial vs pipelined).
+
+    Outputs/hit rates are depth-invariant, so the reports differ only in
+    stage/wall timing — the serial-vs-pipelined benchmark axis.  A short
+    throwaway run first compiles the small accounting/dispatch programs
+    (identical across depths), so compile time isn't charged to whichever
+    depth happens to run first.
+    """
+    engine.prepare(policy, total_cache_bytes=cache_bytes, **kw)
+    engine.run(max_batches=2)
+    return {d: engine.run(max_batches=MAX_BATCHES, pipeline_depth=d) for d in depths}

@@ -1,7 +1,10 @@
 """Scenario: how the Eq.1 split and hit rates react to the cache budget.
 
 Sweeps the total cache budget and prints DCI's allocation decision plus the
-resulting hit rates — the Fig. 9 experiment as a runnable script.
+resulting hit rates — the Fig. 9 experiment as a runnable script.  Each
+budget also runs twice through the batch executor (serial pipeline_depth=1
+vs double-buffered depth=2): hit rates are identical by construction, only
+wall clock moves.
 
     PYTHONPATH=src python examples/gnn_dual_cache.py
 """
@@ -11,15 +14,22 @@ from repro.runtime.gnn_engine import GNNInferenceEngine
 
 dataset = load_dataset("ogbn-products", scale=0.004, seed=0)
 
-print(f"{'budget':>12s} {'C_adj':>10s} {'C_feat':>10s} {'adj_hit':>8s} {'feat_hit':>9s}")
+print(
+    f"{'budget':>12s} {'C_adj':>10s} {'C_feat':>10s} {'adj_hit':>8s} {'feat_hit':>9s} "
+    f"{'serial_s':>9s} {'pipe_s':>8s}"
+)
 for budget in (250_000, 1_000_000, 4_000_000, 16_000_000):
     engine = GNNInferenceEngine(dataset, fanouts=(15, 10, 5), batch_size=256)
     pipe = engine.prepare("dci", total_cache_bytes=budget)
-    rep = engine.run(max_batches=6)
+    rep = engine.run(max_batches=6, pipeline_depth=1)
+    rep_pipe = engine.run(max_batches=6, pipeline_depth=2)
     a = pipe.caches.allocation
     print(
         f"{budget:12,d} {a.adj_bytes:10,d} {a.feat_bytes:10,d} "
-        f"{rep.adj_hit_rate:8.3f} {rep.feat_hit_rate:9.3f}"
+        f"{rep.adj_hit_rate:8.3f} {rep.feat_hit_rate:9.3f} "
+        f"{rep.total_seconds:9.4f} {rep_pipe.total_seconds:8.4f}"
     )
 print("\nlarger budgets -> both caches saturate; the split follows the")
 print("measured sample:feature time ratio (Eq. 1), not a fixed fraction.")
+print("pipeline_depth=2 overlaps batch i+1's sample/gather with batch i's")
+print("compute; outputs and hit rates match depth=1 exactly.")

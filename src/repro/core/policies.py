@@ -49,11 +49,17 @@ def prepare_dci(
     batch_size: int,
     n_presample: int = 8,
     seed: int = 0,
+    pipeline_depth: int = 1,
     _feat_only: bool = False,
     _adj_only: bool = False,
 ) -> PreparedPipeline:
     stats = run_presampling(
-        dataset, fanouts=fanouts, batch_size=batch_size, n_batches=n_presample, seed=seed
+        dataset,
+        fanouts=fanouts,
+        batch_size=batch_size,
+        n_batches=n_presample,
+        seed=seed,
+        pipeline_depth=pipeline_depth,
     )
     # Preprocessing cost = steady-state pre-sampling work + allocation +
     # cache filling.  The one-time jit compile inside run_presampling's
@@ -130,6 +136,7 @@ def prepare_ducati(
     batch_size: int,
     n_presample: int = 8,
     seed: int = 0,
+    pipeline_depth: int = 1,
 ) -> PreparedPipeline:
     """DUCATI's dual-cache population, adapted to inference.
 
@@ -146,7 +153,12 @@ def prepare_ducati(
     # in training); we follow with 4x DCI's presampling.  Jit-compile time
     # is excluded the same way as prepare_dci.
     stats = run_presampling(
-        dataset, fanouts=fanouts, batch_size=batch_size, n_batches=4 * n_presample, seed=seed
+        dataset,
+        fanouts=fanouts,
+        batch_size=batch_size,
+        n_batches=4 * n_presample,
+        seed=seed,
+        pipeline_depth=pipeline_depth,
     )
     t0 = time.perf_counter() - sum(stats.sample_times) - sum(stats.feature_times)
     row_bytes = dataset.feature_nbytes_per_row()
@@ -278,6 +290,9 @@ POLICIES = {
 
 
 def prepare(policy: str, dataset: SyntheticGraphDataset, **kw) -> PreparedPipeline:
+    """Dispatch to a policy's ``prepare_*``.  Presampling policies accept a
+    ``pipeline_depth`` knob (default 1 = serial, the Eq. 1 timing semantics)
+    forwarded to :func:`repro.core.presample.run_presampling`."""
     if policy not in POLICIES:
         raise KeyError(f"unknown policy {policy!r}; have {sorted(POLICIES)}")
     fn = POLICIES[policy]

@@ -5,12 +5,18 @@ sampling and feature-loading wall time (the Eq. 1 inputs) and accumulating
 node / adjacency-element visit counts (the cache-filling inputs).  The
 paper shows hit rates stabilize at ~8 pre-sampling batches (Fig. 11);
 ``n_batches=8`` is the default.
+
+Batches run through the same staged executor as inference
+(:mod:`repro.runtime.pipeline` — one code path for Eq. 1 stage times and
+filling counts).  ``pipeline_depth=1`` (the default) keeps every stage
+fully synchronized, which is what Eq. 1's stage-time ratio assumes;
+``depth>1`` overlaps batches, leaving the visit counts unchanged but
+turning the per-stage laps into dispatch times.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +25,8 @@ import numpy as np
 from repro.graph.datasets import SyntheticGraphDataset
 from repro.graph.features import plain_feature_store
 from repro.graph.sampling import device_graph, sample_blocks
+from repro.runtime.pipeline import PipelinedExecutor, Stage
+from repro.utils.timing import StageClock
 
 __all__ = ["PresampleStats", "run_presampling"]
 
@@ -53,53 +61,63 @@ def run_presampling(
     batch_size: int,
     n_batches: int = 8,
     seed: int = 0,
+    pipeline_depth: int = 1,
 ) -> PresampleStats:
     g = device_graph(dataset.graph)
     store = plain_feature_store(dataset.features)
-    key = jax.random.PRNGKey(seed)
-
-    node_counts = jnp.zeros(dataset.num_nodes, jnp.int32)
-    edge_counts = jnp.zeros(dataset.graph.num_edges, jnp.int32)
-    sample_times: list[float] = []
-    feature_times: list[float] = []
-    peak_bytes = 0
 
     # Untimed warmup: compile the sampler/gather once so Eq. 1's stage-time
     # ratio measures steady-state work, not jit compilation.
+    key = jax.random.PRNGKey(seed)
     wseeds = jnp.asarray(_batch_seeds(dataset.test_idx, batch_size, 0))
     wblock = sample_blocks(key, g, wseeds, tuple(fanouts))
     wfeats, _ = store.gather(wblock.input_nodes)
     jax.block_until_ready(wfeats)
 
-    for i in range(n_batches):
-        key, sub = jax.random.split(key)
-        seeds = jnp.asarray(_batch_seeds(dataset.test_idx, batch_size, i))
+    state = {"key": key}
+    counts = {
+        "node": jnp.zeros(dataset.num_nodes, jnp.int32),
+        "edge": jnp.zeros(dataset.graph.num_edges, jnp.int32),
+        "peak_bytes": 0,
+    }
 
-        t0 = time.perf_counter()
-        block = sample_blocks(sub, g, seeds, tuple(fanouts))
-        jax.block_until_ready(block.frontiers[-1])
-        sample_times.append(time.perf_counter() - t0)
+    def sample_stage(ctx):
+        state["key"], sub = jax.random.split(state["key"])
+        return sample_blocks(sub, g, jnp.asarray(ctx.payload), tuple(fanouts))
 
-        t0 = time.perf_counter()
-        feats, _ = store.gather(block.input_nodes)
-        jax.block_until_ready(feats)
-        feature_times.append(time.perf_counter() - t0)
+    def feature_stage(ctx):
+        feats, _ = store.gather(ctx.outputs["sample"].input_nodes)
+        return feats
 
-        node_counts = node_counts.at[block.input_nodes].add(1)
+    def on_retire(ctx):
+        block, feats = ctx.outputs["sample"], ctx.outputs["feature"]
+        counts["node"] = counts["node"].at[block.input_nodes].add(1)
         for slots in block.edge_slots:
-            edge_counts = edge_counts.at[slots.reshape(-1)].add(1)
+            counts["edge"] = counts["edge"].at[slots.reshape(-1)].add(1)
         # Live workload footprint of this batch (frontier ids + gathered
         # features) — the "workload-aware" part of the budget.
         batch_bytes = int(feats.size * feats.dtype.itemsize) + sum(
             int(f.size * 4) for f in block.frontiers
         )
-        peak_bytes = max(peak_bytes, batch_bytes)
+        counts["peak_bytes"] = max(counts["peak_bytes"], batch_bytes)
+
+    clock = StageClock(overlap=pipeline_depth > 1)
+    executor = PipelinedExecutor(
+        [
+            Stage("sample", sample_stage, lambda c: c.outputs["sample"].frontiers[-1]),
+            Stage("feature", feature_stage, lambda c: c.outputs["feature"]),
+        ],
+        depth=pipeline_depth,
+        clock=clock,
+        on_retire=on_retire,
+    )
+    executor.run(_batch_seeds(dataset.test_idx, batch_size, i) for i in range(n_batches))
 
     return PresampleStats(
-        node_counts=np.asarray(node_counts),
-        edge_counts=np.asarray(edge_counts),
-        sample_times=sample_times,
-        feature_times=feature_times,
-        peak_workload_bytes=peak_bytes,
+        node_counts=np.asarray(counts["node"]),
+        edge_counts=np.asarray(counts["edge"]),
+        sample_times=list(clock.laps.get("sample", [])),
+        feature_times=list(clock.laps.get("feature", [])),
+        peak_workload_bytes=counts["peak_bytes"],
         n_batches=n_batches,
     )

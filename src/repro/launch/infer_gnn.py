@@ -26,12 +26,23 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.004)
     ap.add_argument("--presample", type=int, default=8)
     ap.add_argument("--max-batches", type=int, default=None)
+    ap.add_argument(
+        "--pipeline-depth",
+        type=int,
+        default=1,
+        help="batches kept in flight: 1 = serial (per-stage sync, the paper's "
+        "timing), 2+ = overlap batch i+1's sample/gather with batch i's compute",
+    )
     args = ap.parse_args()
 
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
     ds = load_dataset(args.dataset, scale=args.scale, max_nodes=200_000)
     eng = GNNInferenceEngine(
-        ds, model=args.model, fanouts=fanouts, batch_size=args.batch_size
+        ds,
+        model=args.model,
+        fanouts=fanouts,
+        batch_size=args.batch_size,
+        pipeline_depth=args.pipeline_depth,
     )
     eng.prepare(
         args.policy,

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.lm.config import LMConfig
+from repro.utils.jax_compat import shard_map_compat
 
 __all__ = [
     "init_moe_params",
@@ -247,7 +248,7 @@ def _moe_ffn_shard_map(
             aux = jax.lax.pmean(aux, data_axes)
         return out.reshape(b_l, s, d), aux
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         local_fn,
         mesh=mesh,
         in_specs=(param_specs, dspec),

@@ -1,0 +1,140 @@
+"""Staged, double-buffered batch executor for sampled GNN inference.
+
+DCI attacks sampling and feature-loading *cost*; SALIENT and BGL show the
+remaining end-to-end gap is inter-stage *idle* time when sample → gather →
+compute run strictly serially with a device sync after every stage.  This
+executor removes those barriers: each mini-batch's stages are dispatched
+back-to-back and up to ``depth`` batches are kept in flight, so batch
+``i+1``'s sampling and feature gather are enqueued (and, under JAX async
+dispatch, executing) while batch ``i``'s GNN forward is still running.
+
+Semantics
+---------
+``depth=1`` reproduces the serial engine bit-for-bit: every stage is
+synchronized inside its timer (via :class:`~repro.utils.timing.StageClock`
+in serial mode) and a batch fully retires before the next one starts —
+including RAIN's cross-batch reuse ordering and the per-batch hit-rate
+accounting.  ``depth>1`` changes *only* the synchronization pattern: the
+same ops are dispatched in the same order with the same RNG stream, so
+logits, hit counts, and batch order are identical (equivalence-tested in
+tests/test_pipeline_executor.py); stage timers measure dispatch time and
+the in-flight wait is booked by ``StageClock.drain`` at retire boundaries.
+
+Stages communicate through a per-batch :class:`BatchContext`; cross-batch
+state (RNG keys, RAIN's reuse map, visit counters) lives in closures of the
+stage functions, which are always invoked in batch order.  The same
+executor drives both the inference engine (runtime/gnn_engine.py) and the
+pre-sampling profiler (core/presample.py), so Eq. 1 stage times and the
+cache-filling visit counts come from one code path.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Iterable, Sequence
+
+from repro.utils.timing import StageClock
+
+__all__ = ["BatchContext", "PipelinedExecutor", "Stage"]
+
+
+class BatchContext:
+    """One mini-batch flowing through the pipeline.
+
+    ``payload`` is the batch input (seed node ids); ``outputs[name]`` holds
+    each completed stage's result.
+    """
+
+    __slots__ = ("index", "payload", "outputs")
+
+    def __init__(self, index: int, payload: Any):
+        self.index = index
+        self.payload = payload
+        self.outputs: dict[str, Any] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """A named pipeline stage.
+
+    ``fn(ctx)`` computes the stage's output from ``ctx.payload`` and
+    earlier stages' ``ctx.outputs``.  ``sync(ctx)`` returns the device
+    value that marks the stage complete: in serial mode the clock blocks on
+    it at the stage boundary; for the final stage it is also what retire
+    drains in overlap mode.
+    """
+
+    name: str
+    fn: Callable[[BatchContext], Any]
+    sync: Callable[[BatchContext], Any] | None = None
+
+
+class PipelinedExecutor:
+    """Run batches through ``stages`` keeping up to ``depth`` in flight.
+
+    ``depth=1`` → serial: dispatch + sync every stage, retire, then start
+    the next batch (the pre-pipeline engine loop).  ``depth=2`` → double
+    buffering: batch ``i`` retires only after batch ``i+1`` has fully
+    dispatched.  ``on_retire(ctx)`` runs once per batch, in order, after
+    the batch's final stage output is ready — the place for host-side
+    accounting (hit counters, logits collection) that would otherwise force
+    a sync mid-pipeline.
+    """
+
+    def __init__(
+        self,
+        stages: Sequence[Stage],
+        *,
+        depth: int = 1,
+        clock: StageClock | None = None,
+        on_retire: Callable[[BatchContext], None] | None = None,
+    ):
+        if depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+        if not stages:
+            raise ValueError("need at least one stage")
+        self.stages = list(stages)
+        self.depth = depth
+        self.clock = clock if clock is not None else StageClock(overlap=depth > 1)
+        self.on_retire = on_retire
+
+    def run(self, payloads: Iterable[Any]) -> list[BatchContext]:
+        """Dispatch every payload through all stages; return retired contexts
+        in batch order.
+
+        Retired contexts come back with ``outputs`` cleared — extraction
+        belongs in ``on_retire``.  Holding every batch's device arrays
+        (blocks, features, logits) until the run ends would grow memory
+        O(num_batches) instead of O(depth) on exactly the long runs
+        pipelining targets."""
+        window: collections.deque[BatchContext] = collections.deque()
+        retired: list[BatchContext] = []
+        for i, payload in enumerate(payloads):
+            ctx = BatchContext(i, payload)
+            for st in self.stages:
+                sync = None
+                if st.sync is not None:
+                    sync = (lambda s=st, c=ctx: s.sync(c))
+                with self.clock.stage(st.name, sync=sync):
+                    ctx.outputs[st.name] = st.fn(ctx)
+            window.append(ctx)
+            while len(window) > self.depth - 1:
+                retired.append(self._retire(window.popleft()))
+        while window:  # drain whatever is still in flight
+            retired.append(self._retire(window.popleft()))
+        return retired
+
+    def _retire(self, ctx: BatchContext) -> BatchContext:
+        if self.clock.overlap:
+            # Drain every stage's sync value, in stage order, attributing
+            # each wait to its own stage — otherwise in-flight work from
+            # earlier stages would be waited on untimed inside on_retire
+            # and the stage totals would under-count the loop's wall clock.
+            for st in self.stages:
+                if st.sync is not None:
+                    self.clock.drain(st.name, st.sync(ctx))
+        if self.on_retire is not None:
+            self.on_retire(ctx)
+        ctx.outputs.clear()
+        return ctx

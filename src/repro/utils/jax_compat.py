@@ -1,0 +1,30 @@
+"""Version-compat shims for JAX APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and renamed its replication-check flag ``check_rep`` → ``check_vma`` along the
+way.  ``shard_map_compat`` resolves whichever spelling this JAX exposes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map_compat"]
+
+
+def _resolve():
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn, "check_vma"
+    from jax.experimental.shard_map import shard_map  # JAX < 0.6
+
+    return shard_map, "check_rep"
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` with the new-style signature on any supported JAX."""
+    fn, flag = _resolve()
+    kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    if check_vma is not None:
+        kwargs[flag] = check_vma
+    return fn(f, **kwargs)

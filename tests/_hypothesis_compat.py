@@ -1,0 +1,67 @@
+"""Shared hypothesis import guard for the property-test modules.
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt).  Test
+modules import the property-testing API through this shim::
+
+    from _hypothesis_compat import given, settings, st
+
+When hypothesis is installed, these are the real thing.  When it is not,
+``given`` turns each property test into a cleanly *skipped* test (instead
+of the whole module erroring at collection), ``settings`` is a no-op
+decorator, and ``st`` is a stub whose strategy constructors are inert —
+plain tests in the same module keep running either way.
+
+``require()`` is available for modules that are property-based end to end
+and prefer one module-level skip.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+SKIP_REASON = "hypothesis not installed (pip install -r requirements-dev.txt)"
+
+try:
+    from hypothesis import HealthCheck, assume, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - exercised when dep absent
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Absorbs any strategy construction (st.lists(st.floats(...), ...))."""
+
+        def __getattr__(self, _name):
+            return self
+
+        def __call__(self, *_a, **_k):
+            return self
+
+    st = _StrategyStub()
+    HealthCheck = _StrategyStub()
+
+    def assume(*_a, **_k):
+        return True
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    def given(*_a, **_k):
+        def deco(fn):
+            # Zero-arg replacement: pytest must not see the property's
+            # parameters, or it would demand fixtures for them.
+            def skipper():
+                pytest.skip(SKIP_REASON)
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+
+def require(*, module_level: bool = True) -> None:
+    """Skip the calling test module (or test) when hypothesis is absent."""
+    if not HAVE_HYPOTHESIS:
+        pytest.skip(SKIP_REASON, allow_module_level=module_level)

@@ -1,8 +1,7 @@
 """Eq. 1 capacity allocation + workload-aware budget."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.allocation import allocate_capacity, available_budget
 
@@ -60,3 +59,62 @@ def test_saturation_spill():
     # both saturate when the budget covers everything
     b = allocate_capacity([1.0], [1.0], 10_000, adj_need_bytes=100, feat_need_bytes=200)
     assert b.adj_bytes == 100 and b.feat_bytes == 200
+
+
+# --------------------------------------------------- allocation invariants
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    ts=st.lists(st.floats(0, 10, allow_nan=False), min_size=1, max_size=8),
+    tf=st.lists(st.floats(0, 10, allow_nan=False), min_size=1, max_size=8),
+    total=st.integers(0, 1 << 40),
+    adj_need=st.one_of(st.none(), st.integers(0, 1 << 40)),
+    feat_need=st.one_of(st.none(), st.integers(0, 1 << 40)),
+)
+def test_allocation_never_exceeds_budget(ts, tf, total, adj_need, feat_need):
+    """Invariant: whatever the needs, adj + feat never exceeds the budget
+    and neither side goes negative."""
+    n = min(len(ts), len(tf))
+    a = allocate_capacity(
+        ts[:n], tf[:n], total, adj_need_bytes=adj_need, feat_need_bytes=feat_need
+    )
+    assert a.adj_bytes >= 0 and a.feat_bytes >= 0
+    assert a.adj_bytes + a.feat_bytes <= total
+    assert a.total_bytes == total
+    if adj_need is not None:
+        assert a.adj_bytes <= adj_need
+    if feat_need is not None:
+        assert a.feat_bytes <= feat_need
+    assert 0.0 <= a.sample_fraction <= 1.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    ts=st.lists(st.floats(0, 10, allow_nan=False), min_size=1, max_size=8),
+    tf=st.lists(st.floats(0, 10, allow_nan=False), min_size=1, max_size=8),
+    total=st.integers(0, 1 << 40),
+    adj_need=st.integers(0, 1 << 40),
+    feat_need=st.integers(0, 1 << 40),
+)
+def test_spill_conserves_budget_with_both_needs(ts, tf, total, adj_need, feat_need):
+    """With both *_need_bytes given, spill is conservative: the split uses
+    exactly min(total, adj_need + feat_need) bytes — nothing is lost to
+    rounding and nothing is invented."""
+    n = min(len(ts), len(tf))
+    a = allocate_capacity(
+        ts[:n], tf[:n], total, adj_need_bytes=adj_need, feat_need_bytes=feat_need
+    )
+    assert a.adj_bytes + a.feat_bytes == min(total, adj_need + feat_need)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    mem=st.integers(0, 1 << 42),
+    peak=st.integers(0, 1 << 42),
+    reserve=st.integers(0, 1 << 42),
+)
+def test_available_budget_clamps_at_zero(mem, peak, reserve):
+    b = available_budget(mem, peak, reserve_bytes=reserve)
+    assert b >= 0
+    assert b == max(mem - peak - reserve, 0)

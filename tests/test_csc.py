@@ -2,8 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.graph.csc import BYTES_PER_ADJ_ELEMENT, CSCGraph, build_adj_cache, two_level_sort
 

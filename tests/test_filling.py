@@ -1,8 +1,7 @@
 """Feature-cache filling (§IV-B): sort-free above-mean selection."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.graph.features import build_feature_cache, plain_feature_store
 

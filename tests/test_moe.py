@@ -89,8 +89,7 @@ def test_shard_map_path_matches_gspmd_on_unit_mesh(n_shared):
     np.testing.assert_allclose(float(aux_got), float(aux_base), rtol=1e-5)
 
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 
 @settings(max_examples=15, deadline=None)

@@ -1,0 +1,209 @@
+"""Pipelined batch executor ≡ serial engine, for every policy (incl. RAIN).
+
+The equivalence suite shares one prepared pipeline (identical caches /
+batch order / params) between a serial (depth=1) and a pipelined (depth>1)
+engine and asserts bit-identical logits, identical adjacency/feature hit
+counts, and identical batch order.  Property tests cover the overlap-aware
+StageClock invariants and InferenceReport stage-time consistency.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.policies import POLICIES
+from repro.runtime.gnn_engine import GNNInferenceEngine, InferenceReport
+from repro.runtime.pipeline import BatchContext, PipelinedExecutor, Stage
+from repro.utils.timing import StageClock
+
+FANOUTS = (3, 2)
+BATCH = 64
+KW = dict(total_cache_bytes=200_000, n_presample=2)
+
+
+def _paired_engines(dataset, policy):
+    """Two engines over the same params and the SAME prepared pipeline, so
+    wall-clock-dependent preparation (Eq. 1 uses measured stage times)
+    cannot diverge between the serial and pipelined runs."""
+    serial = GNNInferenceEngine(dataset, fanouts=FANOUTS, batch_size=BATCH)
+    serial.prepare(policy, **KW)
+    piped = GNNInferenceEngine(
+        dataset, fanouts=FANOUTS, batch_size=BATCH, params=serial.params
+    )
+    piped.pipeline = serial.pipeline
+    return serial, piped
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+@pytest.mark.parametrize("depth", [2, 3])
+def test_depth_equivalence(small_dataset, policy, depth):
+    serial, piped = _paired_engines(small_dataset, policy)
+    r1 = serial.run(max_batches=4, pipeline_depth=1, collect_outputs=True)
+    o1 = serial.last_outputs
+    r2 = piped.run(max_batches=4, pipeline_depth=depth, collect_outputs=True)
+    o2 = piped.last_outputs
+
+    assert r1.num_batches == r2.num_batches
+    assert r2.pipeline_depth == depth
+    # hit accounting identical (adjacency and feature, incl. RAIN reuse)
+    assert (r1.adj_hits, r1.adj_lookups) == (r2.adj_hits, r2.adj_lookups)
+    assert (r1.feat_hits, r1.feat_lookups) == (r2.feat_hits, r2.feat_lookups)
+    # same batches, same order, bit-identical logits
+    assert len(o1) == len(o2) == r1.num_batches
+    for a, b in zip(o1, o2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_rain_reuse_ordering_preserved(small_dataset):
+    """RAIN's cross-batch reuse makes batch i+1's gather depend on batch i;
+    the pipelined run must reproduce the serial hit sequence exactly."""
+    serial, piped = _paired_engines(small_dataset, "rain")
+    r1 = serial.run(max_batches=6, pipeline_depth=1)
+    r2 = piped.run(max_batches=6, pipeline_depth=3)
+    assert r1.feat_hits == r2.feat_hits
+    assert r1.feat_hits > 0  # clustered order actually produces reuse
+
+
+# ------------------------------------------------------------- executor unit
+
+
+def _recording_stages(events):
+    return [
+        Stage("a", lambda c: events.append(("a", c.index)) or c.index * 10),
+        Stage("b", lambda c: events.append(("b", c.index)) or c.outputs["a"] + 1),
+    ]
+
+
+def test_depth1_is_lockstep():
+    events = []
+    values = []
+    ex = PipelinedExecutor(
+        _recording_stages(events),
+        depth=1,
+        on_retire=lambda c: (events.append(("r", c.index)), values.append(c.outputs["b"])),
+    )
+    out = ex.run(range(3))
+    assert events == [
+        ("a", 0), ("b", 0), ("r", 0),
+        ("a", 1), ("b", 1), ("r", 1),
+        ("a", 2), ("b", 2), ("r", 2),
+    ]
+    assert values == [1, 11, 21]
+    # retired contexts are returned emptied: extraction happens in on_retire,
+    # so memory stays O(depth) on long runs
+    assert all(c.outputs == {} for c in out)
+
+
+def test_depth2_overlaps_one_batch():
+    events = []
+    ex = PipelinedExecutor(
+        _recording_stages(events), depth=2, on_retire=lambda c: events.append(("r", c.index))
+    )
+    out = ex.run(range(3))
+    # batch 0 retires only after batch 1 fully dispatched; drain retires 2.
+    assert events == [
+        ("a", 0), ("b", 0),
+        ("a", 1), ("b", 1), ("r", 0),
+        ("a", 2), ("b", 2), ("r", 1),
+        ("r", 2),
+    ]
+    assert [c.index for c in out] == [0, 1, 2]  # retire order == batch order
+
+
+def test_executor_rejects_bad_config():
+    with pytest.raises(ValueError):
+        PipelinedExecutor([Stage("a", lambda c: None)], depth=0)
+    with pytest.raises(ValueError):
+        PipelinedExecutor([], depth=1)
+
+
+def test_batch_context_carries_payload():
+    ctx = BatchContext(3, "payload")
+    assert ctx.index == 3 and ctx.payload == "payload" and ctx.outputs == {}
+
+
+# ----------------------------------------------------- StageClock invariants
+
+
+def _clock_invariants(clock: StageClock):
+    for laps in clock.laps.values():
+        assert all(dt >= 0 for dt in laps)
+    for name, total in clock.totals.items():
+        assert total >= 0
+        assert total >= sum(clock.laps.get(name, [])) - 1e-9
+    all_laps = sum(sum(v) for v in clock.laps.values())
+    assert abs(sum(clock.totals.values()) - (all_laps + clock.drain_seconds)) < 1e-9
+
+
+def test_stage_clock_serial_blocks_on_sync():
+    import jax.numpy as jnp
+
+    clock = StageClock(overlap=False)
+    with clock.stage("s", sync=lambda: jnp.arange(8).sum()):
+        pass
+    assert clock.total("s") > 0
+    assert len(clock.laps["s"]) == 1
+    _clock_invariants(clock)
+
+
+def test_stage_clock_overlap_drain_accounting():
+    import jax.numpy as jnp
+
+    clock = StageClock(overlap=True)
+    for _ in range(3):
+        with clock.stage("s"):
+            v = jnp.arange(128) * 2
+        clock.drain("s", v)
+    assert len(clock.laps["s"]) == 3
+    assert clock.drain_seconds >= 0
+    _clock_invariants(clock)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    secs=st.lists(st.floats(0, 100, allow_nan=False), min_size=3, max_size=3),
+    depth=st.integers(1, 8),
+)
+def test_report_stage_seconds_consistent(secs, depth):
+    """InferenceReport: stage seconds non-negative, total == their sum at
+    any pipeline depth (overlap changes attribution, not the identity)."""
+    rep = InferenceReport(
+        policy="dci",
+        num_batches=4,
+        sample_seconds=secs[0],
+        feature_seconds=secs[1],
+        compute_seconds=secs[2],
+        prep_seconds=0.0,
+        adj_hits=1,
+        adj_lookups=2,
+        feat_hits=1,
+        feat_lookups=2,
+        feat_row_bytes=4,
+        pipeline_depth=depth,
+    )
+    assert rep.sample_seconds >= 0 and rep.feature_seconds >= 0 and rep.compute_seconds >= 0
+    assert abs(rep.total_seconds - sum(secs)) < 1e-9
+    assert rep.total_seconds >= max(secs) - 1e-9
+    assert rep.summary()["pipeline_depth"] == depth
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    plan=st.lists(
+        st.tuples(st.sampled_from(["s", "f", "c"]), st.booleans()), min_size=1, max_size=24
+    )
+)
+def test_stage_clock_invariants_random_schedule(plan):
+    """Random interleavings of stage laps and drains keep the clock's
+    accounting identities intact in overlap mode."""
+    import jax.numpy as jnp
+
+    clock = StageClock(overlap=True)
+    for name, do_drain in plan:
+        with clock.stage(name):
+            v = jnp.ones(16)
+        if do_drain:
+            clock.drain(name, v)
+    _clock_invariants(clock)
+    for name, _ in plan:
+        assert clock.total(name) > 0
