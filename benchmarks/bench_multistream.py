@@ -1,0 +1,213 @@
+"""Multi-stream serving: N streams sharing one DualCache vs N private engines.
+
+The experiment the serving layer (src/repro/runtime/gnn_serve.py) exists
+for.  The same workload — N request streams of ``batches_per_stream``
+batches each — is served two ways:
+
+  * ``private-serial``: each stream gets its own engine with a private
+    cache of budget B/N, prepared from its own presampling run
+    (``n_presample`` batches per stream), then runs its queue serially
+    (pipeline_depth=1).  Cold-start cost = N x (presample + allocate +
+    fill + warmup) + the N runs, back to back.
+  * ``shared-multistream``: ONE cache of budget B is prepared from the
+    union workload (the same total presample budget split across stream
+    seeds and merged), then all N streams interleave through one pipelined
+    executor (round-robin + backpressure admission).
+
+Reported per configuration:
+
+  * cold-start aggregate throughput (seeds/s over prepare + warmup + run)
+    — the serving-system metric.  Sharing wins on it for the paper's own
+    reason: preprocessing is a headline cost (Tables IV, Fig. 10), and the
+    shared cache pays it once instead of N times;
+  * steady-state serve wall (run only) — on this CPU container the
+    pipeline depth only changes the sync pattern (all stages contend for
+    the same cores), so this column is expected ~flat; on an accelerator
+    the overlap shows up here;
+  * aggregate feature/adjacency hit rates and the modeled PCIe/HBM
+    transfer time: one budget-B cache serves every stream's hot set, so
+    hit rates are >= the private-B/N ones.
+
+Acceptance (checked in main, printed as PASS/FAIL):
+  >= 1.2x cold-start aggregate throughput at 4 streams, and shared-cache
+  hit rate >= the private single-stream hit rate.
+
+Output: ``emit`` CSV rows (harness contract ``name,us_per_call,derived``)
+plus ``--json`` rows with the schema documented in docs/BENCHMARKS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.common import CACHE_BYTES, emit, make_engine
+from repro.runtime.gnn_engine import GNNInferenceEngine
+from repro.runtime.gnn_serve import MultiStreamServer, make_stream_batches
+
+N_PRESAMPLE = 8  # per prepared cache (Fig. 11's stabilization point)
+
+
+def _private_serial(dataset, queues, stream_seeds, *, model, fanouts, batch_size, cache_bytes):
+    """N single-stream engines, each with a private cache of cache_bytes/N."""
+    n = len(queues)
+    wall0 = time.perf_counter()
+    run_s = hits = lookups = ahits = alookups = modeled = 0.0
+    seeds_served = 0
+    for sid, queue in enumerate(queues):
+        eng = GNNInferenceEngine(
+            dataset, model=model, fanouts=fanouts, batch_size=batch_size, seed=stream_seeds[sid]
+        )
+        eng.prepare("dci", total_cache_bytes=cache_bytes // n, n_presample=N_PRESAMPLE)
+        rep = eng.run(batches=queue, pipeline_depth=1)
+        run_s += rep.total_seconds
+        hits, lookups = hits + rep.feat_hits, lookups + rep.feat_lookups
+        ahits, alookups = ahits + rep.adj_hits, alookups + rep.adj_lookups
+        modeled += rep.modeled_transfer_seconds()
+        seeds_served += rep.num_batches * batch_size
+    return {
+        "mode": "private-serial",
+        "cold_s": time.perf_counter() - wall0,
+        "serve_s": run_s,
+        "seeds": seeds_served,
+        "feat_hit": hits / max(lookups, 1),
+        "adj_hit": ahits / max(alookups, 1),
+        "modeled_transfer_s": modeled,
+    }
+
+
+def _shared_multistream(
+    dataset, queues, stream_seeds, *, model, fanouts, batch_size, cache_bytes, depth
+):
+    """One shared budget-B cache, one presample/compile, N interleaved streams."""
+    wall0 = time.perf_counter()
+    eng = GNNInferenceEngine(dataset, model=model, fanouts=fanouts, batch_size=batch_size)
+    eng.prepare(
+        "dci",
+        total_cache_bytes=cache_bytes,
+        n_presample=N_PRESAMPLE,
+        stream_seeds=stream_seeds,
+    )
+    server = MultiStreamServer(eng, depth=depth)
+    for sid, queue in enumerate(queues):
+        server.add_stream(queue, seed=stream_seeds[sid])
+    rep = server.run()
+    return {
+        "mode": "shared-multistream",
+        "cold_s": time.perf_counter() - wall0,
+        "serve_s": rep.wall_seconds,
+        "seeds": rep.total_seeds,
+        "feat_hit": rep.feat_hit_rate,
+        "adj_hit": rep.adj_hit_rate,
+        "modeled_transfer_s": rep.modeled_transfer_seconds(),
+        "per_stream_feat_hit": [round(s.feat_hit_rate, 4) for s in rep.streams],
+        "mean_latency_s": round(
+            sum(s.mean_latency_s for s in rep.streams) / len(rep.streams), 5
+        ),
+    }
+
+
+def run(
+    dataset_name="ogbn-products",
+    *,
+    num_streams=4,
+    batches_per_stream=8,
+    batch_size=512,
+    cache_bytes=CACHE_BYTES,
+    depth=2,
+    fanouts=(8, 4, 2),
+    model="graphsage",
+):
+    eng0 = make_engine(dataset_name, model=model, fanouts=fanouts, batch_size=batch_size)
+    dataset = eng0.dataset
+    stream_seeds = list(range(1, num_streams + 1))
+    queues = make_stream_batches(
+        dataset,
+        num_streams=num_streams,
+        batches_per_stream=batches_per_stream,
+        batch_size=batch_size,
+        seed=0,
+    )
+    # Untimed pre-warm of the programs BOTH sides share at these shapes
+    # (sampler, forward, accounting) so neither timed window is charged for
+    # them — otherwise whichever mode runs first pays the process-wide jit
+    # compile and the uplift would partly be a compile-order artifact.  Each
+    # side still pays its own cache-shape-specific gather compile inside its
+    # cold window (hot tables of B/N vs B rows are different programs), which
+    # is honest: private engines really do compile N distinct caches' worth.
+    eng0.prepare("dgl")
+    eng0.warmup(queues[0][0])
+    kw = dict(model=model, fanouts=fanouts, batch_size=batch_size, cache_bytes=cache_bytes)
+    private = _private_serial(dataset, queues, stream_seeds, **kw)
+    shared = _shared_multistream(dataset, queues, stream_seeds, depth=depth, **kw)
+
+    rows = []
+    for r in (private, shared):
+        r.update(
+            dataset=dataset_name,
+            streams=num_streams,
+            batches_per_stream=batches_per_stream,
+            batch_size=batch_size,
+            cache_bytes=cache_bytes,
+            depth=1 if r["mode"] == "private-serial" else depth,
+            cold_throughput_seeds_per_s=r["seeds"] / max(r["cold_s"], 1e-9),
+        )
+        for k in ("cold_s", "serve_s", "modeled_transfer_s", "feat_hit", "adj_hit",
+                  "cold_throughput_seeds_per_s"):
+            r[k] = round(r[k], 5)
+        rows.append(r)
+        emit(
+            f"multistream/{dataset_name}/{num_streams}streams/{r['mode']}",
+            r["cold_s"] / max(num_streams * batches_per_stream, 1) * 1e6,
+            f"cold_tput={r['cold_throughput_seeds_per_s']:.0f};"
+            f"feat_hit={r['feat_hit']:.3f};serve_s={r['serve_s']:.3f}",
+        )
+    uplift = shared["cold_throughput_seeds_per_s"] / max(
+        private["cold_throughput_seeds_per_s"], 1e-9
+    )
+    checks = {
+        "throughput_uplift_vs_private": round(uplift, 3),
+        "uplift_ge_1.2": bool(uplift >= 1.2),
+        "shared_hit_ge_private": bool(shared["feat_hit"] >= private["feat_hit"] - 1e-9),
+    }
+    return rows, checks
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=int, default=4)
+    ap.add_argument("--batches-per-stream", type=int, default=8)
+    ap.add_argument("--batch-size", type=int, default=512)
+    ap.add_argument("--depth", type=int, default=2, help="shared run's pipeline depth")
+    ap.add_argument("--cache-mb", type=float, default=CACHE_BYTES / 1e6)
+    ap.add_argument("--json", default=None, help="also write rows+checks as JSON")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny config for CI: 2 streams x 2 batches, no acceptance thresholds",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        rows, checks = run(
+            num_streams=2, batches_per_stream=2, batch_size=128, depth=2
+        )
+    else:
+        rows, checks = run(
+            num_streams=args.streams,
+            batches_per_stream=args.batches_per_stream,
+            batch_size=args.batch_size,
+            cache_bytes=int(args.cache_mb * 1e6),
+            depth=args.depth,
+        )
+    for r in rows:
+        print(r)
+    status = "PASS" if (checks["uplift_ge_1.2"] and checks["shared_hit_ge_private"]) else "FAIL"
+    print(f"checks ({'smoke: informational' if args.smoke else status}): {checks}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "checks": checks}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

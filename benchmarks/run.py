@@ -23,6 +23,7 @@ from benchmarks import (  # noqa: E402
     bench_redundancy,
     bench_ablation,
     bench_lm_serving_cache,
+    bench_multistream,
 )
 
 
@@ -55,6 +56,9 @@ def main() -> None:
 
     print("# --- DCI-for-LM serving caches (beyond-paper) ---")
     lm_cache = bench_lm_serving_cache.run(budgets=(25_000, 100_000, 400_000))
+
+    print("# --- multi-stream serving: shared vs private caches (beyond-paper) ---")
+    _, ms_checks = bench_multistream.run(num_streams=4, batches_per_stream=4, batch_size=256)
 
     # ---------------- claim checks (directional, scaled datasets) ----------
     checks = []
@@ -128,6 +132,12 @@ def main() -> None:
         (
             "LM cache: embed hit rate monotone in budget (both skews)",
             all(h == sorted(h) for h in by_budget.values()),
+        )
+    )
+    checks.append(
+        (
+            "Multi-stream: shared cache >= 1.2x cold-start throughput + hit rate",
+            ms_checks["uplift_ge_1.2"] and ms_checks["shared_hit_ge_private"],
         )
     )
 

@@ -3,6 +3,22 @@
 Each ``prepare_*`` returns a :class:`PreparedPipeline` — caches (or none),
 an optional batch schedule (RAIN), and the measured preprocessing wall
 time, which is itself a headline metric in the paper (Tables IV, Fig. 10).
+The prepared pipeline is immutable at run time, so one instance can be
+shared by a single engine, by the staged batch executor at any
+``pipeline_depth``, or by every stream of the multi-stream server
+(runtime/gnn_serve.py) simultaneously.
+
+Presampling policies (``dci``/``sci``/``aci``/``ducati``) profile the
+workload before filling.  Two modes:
+
+  - single stream (default): ``n_presample`` batches from one seed — the
+    paper's setup (hit rates stabilize at ~8 batches, Fig. 11);
+  - shared across streams (``stream_seeds=[...]``): the SAME total
+    presampling budget split evenly over the streams' seeds and merged
+    (:func:`repro.core.presample.merge_stats`), so the one shared cache is
+    allocated and filled for the union workload at no extra preprocessing
+    cost — the amortization bench_multistream.py measures against N
+    private per-stream preparations.
 
   - ``dci``     the paper's system: Eq. 1 split + lightweight fill
   - ``sci``     single-cache baseline: whole budget to node features
@@ -22,7 +38,7 @@ import numpy as np
 
 from repro.core.allocation import CacheAllocation, allocate_capacity
 from repro.core.cache import DualCache
-from repro.core.presample import PresampleStats, run_presampling
+from repro.core.presample import PresampleStats, merge_stats, run_presampling
 from repro.graph.datasets import SyntheticGraphDataset
 
 __all__ = ["PreparedPipeline", "prepare", "POLICIES"]
@@ -41,6 +57,50 @@ class PreparedPipeline:
 # ---------------------------------------------------------------- DCI / SCI
 
 
+def _presample_profile(
+    dataset: SyntheticGraphDataset,
+    *,
+    fanouts: tuple[int, ...],
+    batch_size: int,
+    n_presample: int,
+    seed: int,
+    pipeline_depth: int,
+    stream_seeds,
+) -> PresampleStats:
+    """One workload profile, single- or multi-stream.
+
+    With ``stream_seeds`` the total ``n_presample`` budget is split across
+    the streams (remainder batches go to the first streams, so the total
+    is exact) and the per-stream profiles merged — constant preprocessing
+    cost regardless of how many streams share the cache.  Every stream is
+    profiled at least once, so with more streams than budget the total
+    grows to one batch per stream — the floor at which the merged profile
+    still covers every stream's workload."""
+    if not stream_seeds:
+        return run_presampling(
+            dataset,
+            fanouts=fanouts,
+            batch_size=batch_size,
+            n_batches=n_presample,
+            seed=seed,
+            pipeline_depth=pipeline_depth,
+        )
+    base, extra = divmod(n_presample, len(stream_seeds))
+    return merge_stats(
+        [
+            run_presampling(
+                dataset,
+                fanouts=fanouts,
+                batch_size=batch_size,
+                n_batches=max(1, base + (1 if i < extra else 0)),
+                seed=s,
+                pipeline_depth=pipeline_depth,
+            )
+            for i, s in enumerate(stream_seeds)
+        ]
+    )
+
+
 def prepare_dci(
     dataset: SyntheticGraphDataset,
     *,
@@ -50,16 +110,18 @@ def prepare_dci(
     n_presample: int = 8,
     seed: int = 0,
     pipeline_depth: int = 1,
+    stream_seeds=None,
     _feat_only: bool = False,
     _adj_only: bool = False,
 ) -> PreparedPipeline:
-    stats = run_presampling(
+    stats = _presample_profile(
         dataset,
         fanouts=fanouts,
         batch_size=batch_size,
-        n_batches=n_presample,
+        n_presample=n_presample,
         seed=seed,
         pipeline_depth=pipeline_depth,
+        stream_seeds=stream_seeds,
     )
     # Preprocessing cost = steady-state pre-sampling work + allocation +
     # cache filling.  The one-time jit compile inside run_presampling's
@@ -137,6 +199,7 @@ def prepare_ducati(
     n_presample: int = 8,
     seed: int = 0,
     pipeline_depth: int = 1,
+    stream_seeds=None,
 ) -> PreparedPipeline:
     """DUCATI's dual-cache population, adapted to inference.
 
@@ -152,13 +215,14 @@ def prepare_ducati(
     # DUCATI gathers statistics over substantially more batches (epoch-level
     # in training); we follow with 4x DCI's presampling.  Jit-compile time
     # is excluded the same way as prepare_dci.
-    stats = run_presampling(
+    stats = _presample_profile(
         dataset,
         fanouts=fanouts,
         batch_size=batch_size,
-        n_batches=4 * n_presample,
+        n_presample=4 * n_presample,
         seed=seed,
         pipeline_depth=pipeline_depth,
+        stream_seeds=stream_seeds,
     )
     t0 = time.perf_counter() - sum(stats.sample_times) - sum(stats.feature_times)
     row_bytes = dataset.feature_nbytes_per_row()
@@ -290,9 +354,21 @@ POLICIES = {
 
 
 def prepare(policy: str, dataset: SyntheticGraphDataset, **kw) -> PreparedPipeline:
-    """Dispatch to a policy's ``prepare_*``.  Presampling policies accept a
-    ``pipeline_depth`` knob (default 1 = serial, the Eq. 1 timing semantics)
-    forwarded to :func:`repro.core.presample.run_presampling`."""
+    """Dispatch to a policy's ``prepare_*``.
+
+    Presampling policies accept two extra knobs, both forwarded to
+    :func:`repro.core.presample.run_presampling`:
+
+      - ``pipeline_depth`` (default 1 = serial, the Eq. 1 timing
+        semantics; >1 overlaps presample batches through the staged
+        executor);
+      - ``stream_seeds`` (default None): profile the union workload of
+        several request streams, splitting the same total presampling
+        budget across them — used when one cache will be shared by the
+        multi-stream server (runtime/gnn_serve.py).
+
+    ``dgl`` and ``rain`` build no presampled caches; the extra knobs are
+    ignored for them."""
     if policy not in POLICIES:
         raise KeyError(f"unknown policy {policy!r}; have {sorted(POLICIES)}")
     fn = POLICIES[policy]

@@ -12,6 +12,14 @@ filling counts).  ``pipeline_depth=1`` (the default) keeps every stage
 fully synchronized, which is what Eq. 1's stage-time ratio assumes;
 ``depth>1`` overlaps batches, leaving the visit counts unchanged but
 turning the per-stage laps into dispatch times.
+
+Multi-stream serving (runtime/gnn_serve.py) profiles the *union* workload:
+one small presampling run per request stream, combined by
+:func:`merge_stats` — visit counts sum (the shared cache is filled for the
+combined traffic) and stage-time laps concatenate (Eq. 1's ratio then
+reflects every stream's measured mix).  The total presampling budget stays
+constant (Fig. 11's ~8 batches split across streams), which is exactly the
+amortization a shared cache buys over per-stream private preparation.
 """
 
 from __future__ import annotations
@@ -28,7 +36,7 @@ from repro.graph.sampling import device_graph, sample_blocks
 from repro.runtime.pipeline import PipelinedExecutor, Stage
 from repro.utils.timing import StageClock
 
-__all__ = ["PresampleStats", "run_presampling"]
+__all__ = ["PresampleStats", "merge_stats", "run_presampling"]
 
 
 @dataclasses.dataclass
@@ -43,6 +51,26 @@ class PresampleStats:
     @property
     def mean_node_visits(self) -> float:
         return float(self.node_counts.mean())
+
+
+def merge_stats(stats: "list[PresampleStats]") -> PresampleStats:
+    """Combine per-stream presampling profiles into one shared profile.
+
+    Visit counts sum (the shared cache is filled for the union workload),
+    stage-time laps concatenate (Eq. 1's sample:feature ratio then averages
+    over every stream's traffic), and the peak live-workload footprint is
+    the max across streams (streams interleave; only one batch's arrays are
+    materialized per pipeline slot)."""
+    if not stats:
+        raise ValueError("merge_stats needs at least one PresampleStats")
+    return PresampleStats(
+        node_counts=np.sum([s.node_counts for s in stats], axis=0),
+        edge_counts=np.sum([s.edge_counts for s in stats], axis=0),
+        sample_times=[t for s in stats for t in s.sample_times],
+        feature_times=[t for s in stats for t in s.feature_times],
+        peak_workload_bytes=max(s.peak_workload_bytes for s in stats),
+        n_batches=sum(s.n_batches for s in stats),
+    )
 
 
 def _batch_seeds(test_idx: np.ndarray, batch_size: int, i: int) -> np.ndarray:

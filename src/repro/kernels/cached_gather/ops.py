@@ -27,7 +27,22 @@ def cached_feature_gather(
     use_kernel: bool = False,
     interpret: bool = True,
 ) -> jax.Array:
-    """Gather feature rows via DCI's dual-source cache."""
+    """Gather feature rows via DCI's dual-source cache.
+
+    Args:
+      hot_table: ``f32[H, F]`` — the device-resident feature cache
+        (``H >= 1``; row 0 is a placeholder when the cache is empty).
+      host_table: ``f32[N, F]`` — the full host/UVA feature table.
+      indices: ``int32[S]`` — node ids to gather (``0 <= id < N``).
+      positions: ``int32[S]`` — each id's slot in ``hot_table``, or ``-1``
+        for a cache miss (the ``FeatureStore.position_map`` lookup).
+      use_kernel: route through the Pallas kernel (compiled on TPU,
+        ``interpret=True`` for CPU validation) instead of the jnp oracle.
+
+    Returns:
+      ``f32[S, F]`` — row ``i`` is ``hot_table[positions[i]]`` on a hit,
+      ``host_table[indices[i]]`` on a miss.
+    """
     if use_kernel:
         return cached_gather(hot_table, host_table, indices, positions, interpret=interpret)
     return cached_gather_ref(hot_table, host_table, indices, positions)

@@ -37,6 +37,25 @@ def multi_head_attention(
     use_kernel: bool = False,
     interpret: bool = True,
 ) -> jax.Array:
+    """Scaled dot-product attention over batched, multi-head inputs.
+
+    Args:
+      q: ``[B, Hq, Sq, D]`` queries.
+      k, v: ``[B, Hkv, Sk, D]`` keys/values; ``Hq`` must be a multiple of
+        ``Hkv`` (GQA/MQA — kv heads are repeated to match).
+      causal: query ``i`` attends only to key positions ``j <= i``
+        (positions are row indices; query and key sequences are assumed
+        aligned at position 0).
+      window: optional sliding-window width — query ``i`` attends only to
+        keys with ``i - j < window``, i.e. the last ``window`` positions.
+      softcap: optional logit soft-capping ``softcap * tanh(x / softcap)``
+        (Gemma-2 style) applied before the softmax.
+      use_kernel: route through the Pallas flash kernel (compiled on TPU,
+        ``interpret=True`` for CPU validation) instead of the jnp oracle.
+
+    Returns:
+      ``[B, Hq, Sq, D]`` attention outputs.
+    """
     hq = q.shape[1]
     k = _expand_kv(k, hq)
     v = _expand_kv(v, hq)

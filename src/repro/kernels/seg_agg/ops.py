@@ -1,4 +1,9 @@
-"""Public op: padded-neighborhood aggregation (sum/mean)."""
+"""Public op: padded-neighborhood aggregation (sum/mean).
+
+The GNN layers sample a fixed ``fanout`` per destination node, so the
+neighborhood tensor is dense/padded — aggregation is a segment reduction
+with static segment length.
+"""
 
 from __future__ import annotations
 
@@ -17,6 +22,19 @@ def aggregate_neighbors(
     use_kernel: bool = False,
     interpret: bool = True,
 ) -> jax.Array:
+    """Reduce each node's padded neighborhood to one vector.
+
+    Args:
+      nbr_feats: ``f32[S, fanout, F]`` — for each of ``S`` destination
+        nodes, its ``fanout`` sampled neighbors' feature rows.
+      mode: ``"sum"`` or ``"mean"`` (mean divides by the static fanout —
+        sampling is with replacement, so there are no empty slots).
+      use_kernel: route through the Pallas kernel (compiled on TPU,
+        ``interpret=True`` for CPU validation) instead of the jnp oracle.
+
+    Returns:
+      ``f32[S, F]`` — the aggregated neighborhood per destination node.
+    """
     if use_kernel:
         return seg_agg(nbr_feats, mode=mode, interpret=interpret)
     return seg_agg_ref(nbr_feats, mode=mode)

@@ -1,8 +1,16 @@
 """GNN inference driver — the paper's system as a CLI.
 
+Single stream (the paper's setup):
+
     PYTHONPATH=src python -m repro.launch.infer_gnn \
         --dataset ogbn-products --policy dci --fanouts 15,10,5 \
         --batch-size 1024 --cache-mb 2
+
+Multi-stream serving (N request streams sharing one DualCache, batches
+interleaved through one pipelined executor — runtime/gnn_serve.py):
+
+    PYTHONPATH=src python -m repro.launch.infer_gnn \
+        --policy dci --streams 4 --batches-per-stream 8 --pipeline-depth 2
 """
 
 from __future__ import annotations
@@ -13,6 +21,7 @@ import json
 from repro.core.policies import POLICIES
 from repro.graph import load_dataset
 from repro.runtime.gnn_engine import GNNInferenceEngine
+from repro.runtime.gnn_serve import MultiStreamServer, make_stream_batches
 
 
 def main() -> None:
@@ -33,6 +42,27 @@ def main() -> None:
         help="batches kept in flight: 1 = serial (per-stage sync, the paper's "
         "timing), 2+ = overlap batch i+1's sample/gather with batch i's compute",
     )
+    ap.add_argument(
+        "--streams",
+        type=int,
+        default=1,
+        help="number of independent request streams served against ONE shared "
+        "cache (1 = the single-stream engine; >1 = runtime/gnn_serve.py, with "
+        "the presample budget split across stream seeds)",
+    )
+    ap.add_argument(
+        "--batches-per-stream",
+        type=int,
+        default=8,
+        help="queue length per stream in multi-stream mode "
+        "(--max-batches caps it too, so the flag means the same in both modes)",
+    )
+    ap.add_argument(
+        "--max-inflight",
+        type=int,
+        default=None,
+        help="backpressure cap: window slots one stream may occupy (default: depth)",
+    )
     args = ap.parse_args()
 
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
@@ -44,13 +74,34 @@ def main() -> None:
         batch_size=args.batch_size,
         pipeline_depth=args.pipeline_depth,
     )
+    stream_seeds = [eng.seed + s for s in range(args.streams)] if args.streams > 1 else None
     eng.prepare(
         args.policy,
         total_cache_bytes=int(args.cache_mb * 1e6),
         n_presample=args.presample,
+        stream_seeds=stream_seeds,
     )
-    rep = eng.run(max_batches=args.max_batches)
-    print(json.dumps(rep.summary(), indent=1))
+    if args.streams > 1:
+        server = MultiStreamServer(
+            eng, depth=args.pipeline_depth, max_inflight_per_stream=args.max_inflight
+        )
+        per_stream = args.batches_per_stream
+        if args.max_batches is not None:
+            per_stream = min(per_stream, args.max_batches)
+        queues = make_stream_batches(
+            ds,
+            num_streams=args.streams,
+            batches_per_stream=per_stream,
+            batch_size=args.batch_size,
+            seed=eng.seed,
+        )
+        for sid, queue in enumerate(queues):
+            server.add_stream(queue, seed=stream_seeds[sid])
+        rep = server.run()
+        print(json.dumps(rep.summary(), indent=1))
+    else:
+        rep = eng.run(max_batches=args.max_batches)
+        print(json.dumps(rep.summary(), indent=1))
 
 
 if __name__ == "__main__":

@@ -31,11 +31,35 @@ from repro.models import gnn as gnn_models
 from repro.runtime.pipeline import PipelinedExecutor, Stage
 from repro.utils.timing import StageClock
 
-__all__ = ["GNNInferenceEngine", "InferenceReport"]
+__all__ = ["GNNInferenceEngine", "InferenceReport", "StreamRuntime", "stream_stages"]
 
 # Link speeds for the modeled-transfer projection (bytes/s).
 PCIE4_BW = 25e9  # paper's RTX 4090 host link (the UVA miss path)
 HBM_BW = 819e9  # TPU v5e HBM (the cache-hit path)
+
+ADJ_ENTRY_BYTES = 4  # one int32 neighbor id per adjacency lookup
+
+
+def modeled_transfer_seconds(
+    *,
+    feat_lookups: int,
+    feat_hits: int,
+    adj_lookups: int,
+    adj_hits: int,
+    feat_row_bytes: int,
+    slow_bw: float = PCIE4_BW,
+    fast_bw: float = HBM_BW,
+) -> float:
+    """Project byte movement onto a slow (miss) / fast (hit) link pair.
+
+    The one transfer model shared by the per-engine
+    :class:`InferenceReport` and the aggregate multi-stream
+    :class:`~repro.runtime.gnn_serve.ServeReport`."""
+    miss_bytes = (feat_lookups - feat_hits) * feat_row_bytes + (
+        adj_lookups - adj_hits
+    ) * ADJ_ENTRY_BYTES
+    hit_bytes = feat_hits * feat_row_bytes + adj_hits * ADJ_ENTRY_BYTES
+    return miss_bytes / slow_bw + hit_bytes / fast_bw
 
 
 @dataclasses.dataclass
@@ -71,11 +95,15 @@ class InferenceReport:
 
     def modeled_transfer_seconds(self, slow_bw: float = PCIE4_BW, fast_bw: float = HBM_BW) -> float:
         """Project byte movement onto a slow (miss) / fast (hit) link pair."""
-        miss_bytes = (self.feat_lookups - self.feat_hits) * self.feat_row_bytes + (
-            self.adj_lookups - self.adj_hits
-        ) * 4
-        hit_bytes = self.feat_hits * self.feat_row_bytes + self.adj_hits * 4
-        return miss_bytes / slow_bw + hit_bytes / fast_bw
+        return modeled_transfer_seconds(
+            feat_lookups=self.feat_lookups,
+            feat_hits=self.feat_hits,
+            adj_lookups=self.adj_lookups,
+            adj_hits=self.adj_hits,
+            feat_row_bytes=self.feat_row_bytes,
+            slow_bw=slow_bw,
+            fast_bw=fast_bw,
+        )
 
     def summary(self) -> dict:
         return {
@@ -91,6 +119,125 @@ class InferenceReport:
             "feat_hit_rate": round(self.feat_hit_rate, 4),
             "modeled_transfer_s": round(self.modeled_transfer_seconds(), 6),
         }
+
+
+class StreamRuntime:
+    """Cross-batch state and stage logic for ONE stream of mini-batches.
+
+    Owns the stream's RNG key sequence, RAIN's previous-batch reuse state,
+    the hit counters, and (optionally) the collected logits.  The engine
+    runs exactly one ``StreamRuntime``; the multi-stream server
+    (:mod:`repro.runtime.gnn_serve`) runs one per request stream against a
+    single shared :class:`~repro.core.cache.DualCache` — the stage methods
+    only *read* the caches (they are immutable at serve time), so batches
+    from different streams interleave freely while each stream's RNG
+    sequence, reuse ordering, and hit accounting stay bit-identical to a
+    solo run (tested in tests/test_gnn_serve.py).
+
+    Stage methods are invoked in per-stream batch order at any pipeline
+    depth (the executor dispatches in admission order), which is what the
+    mutable ``key`` / ``prev_*`` state relies on.
+    """
+
+    def __init__(
+        self,
+        pipe: PreparedPipeline,
+        params,
+        *,
+        model: str,
+        fanouts: tuple[int, ...],
+        num_nodes: int,
+        key,
+        collect_outputs: bool = False,
+    ):
+        self.pipe = pipe
+        self.params = params
+        self.model = model
+        self.fanouts = tuple(fanouts)
+        self.key = key
+        self.adj_hits = 0
+        self.adj_lookups = 0
+        self.feat_hits = 0
+        self.feat_lookups = 0
+        self.outputs: list[np.ndarray] | None = [] if collect_outputs else None
+        # RAIN cross-batch reuse state (only touched when the policy asks).
+        self._prev_map = np.full(num_nodes, -1, np.int64)
+        self._prev_feats = None
+        self._prev_nodes = None
+
+    # ------------------------------------------------------------- stages
+    def sample(self, ctx):
+        self.key, sub = jax.random.split(self.key)
+        block = sample_blocks(sub, self.pipe.caches.dgraph, jnp.asarray(ctx.payload), self.fanouts)
+        # Dispatch the hit-stat reductions here, in-pipeline: dispatched
+        # at retire time they would queue behind the *next* batch's
+        # stages on the device stream and serialize the pipeline.
+        bh, bt = block.adj_hit_stats()
+        return block, bh, bt
+
+    def feature(self, ctx):
+        store = self.pipe.caches.store
+        block = ctx.outputs["sample"][0]
+        if self.pipe.reuse_prev_batch and self._prev_feats is not None:
+            nodes = np.asarray(block.input_nodes)
+            pos = self._prev_map[nodes]
+            hit_np = pos >= 0
+            reused = self._prev_feats[jnp.asarray(np.maximum(pos, 0))]
+            fresh, _ = store.gather(block.input_nodes)
+            feats = jnp.where(jnp.asarray(hit_np)[:, None], reused, fresh)
+            hit = jnp.asarray(hit_np)
+        else:
+            feats, hit = store.gather(block.input_nodes)
+        if self.pipe.reuse_prev_batch:
+            # The *next* batch's gather reads this state, so it must be
+            # updated here rather than at retire time — with depth > 1
+            # batch i retires only after batch i+1 has dispatched.
+            if self._prev_nodes is not None:
+                self._prev_map[self._prev_nodes] = -1
+            self._prev_nodes = np.asarray(block.input_nodes)
+            self._prev_map[self._prev_nodes] = np.arange(len(self._prev_nodes))
+            self._prev_feats = feats
+        return feats, hit, jnp.sum(hit)
+
+    def compute(self, ctx):
+        feats = ctx.outputs["feature"][0]
+        return gnn_models.forward(self.params, feats, model=self.model, fanouts=self.fanouts)
+
+    def record(self, ctx) -> None:
+        """Host-side accounting; runs per batch, in order, after the batch's
+        stage outputs (incl. the stat scalars) are ready, so the int()
+        conversions only pay a tiny device→host transfer."""
+        _, bh, bt = ctx.outputs["sample"]
+        _, hit, hsum = ctx.outputs["feature"]
+        self.adj_hits += int(bh)
+        self.adj_lookups += int(bt)
+        self.feat_hits += int(hsum)
+        self.feat_lookups += int(hit.shape[0])
+        if self.outputs is not None:
+            self.outputs.append(np.asarray(ctx.outputs["compute"]))
+
+
+def stream_stages(runtime_of) -> list[Stage]:
+    """The sample → feature → compute pipeline over :class:`StreamRuntime`s.
+
+    ``runtime_of(ctx)`` resolves the runtime a batch belongs to: the engine
+    passes a constant (one stream), the serving layer reads it off
+    ``ctx.stream``.  Sync values mirror what each stage leaves in flight —
+    they are what the serial clock blocks on and the overlap clock drains.
+    """
+    return [
+        Stage(
+            "sample",
+            lambda c: runtime_of(c).sample(c),
+            lambda c: (c.outputs["sample"][0].frontiers[-1], c.outputs["sample"][1]),
+        ),
+        Stage(
+            "feature",
+            lambda c: runtime_of(c).feature(c),
+            lambda c: (c.outputs["feature"][0], c.outputs["feature"][2]),
+        ),
+        Stage("compute", lambda c: runtime_of(c).compute(c), lambda c: c.outputs["compute"]),
+    ]
 
 
 class GNNInferenceEngine:
@@ -126,11 +273,14 @@ class GNNInferenceEngine:
         total_cache_bytes: int = 0,
         n_presample: int = 8,
         pipeline_depth: int = 1,
+        stream_seeds: list[int] | None = None,
     ):
         # Presampling defaults to serial (depth=1): its per-stage times feed
         # Eq. 1, and the paper's split assumes fully synchronized stages.
         # Visit counts are depth-invariant, so overlapped presampling only
         # shifts the measured sample:feature ratio toward dispatch cost.
+        # ``stream_seeds`` profiles the union workload of several request
+        # streams (multi-stream serving) at the same total presample budget.
         self.pipeline = prepare(
             policy,
             self.dataset,
@@ -140,6 +290,7 @@ class GNNInferenceEngine:
             n_presample=n_presample,
             seed=self.seed,
             pipeline_depth=pipeline_depth,
+            stream_seeds=stream_seeds,
         )
         return self.pipeline
 
@@ -161,6 +312,19 @@ class GNNInferenceEngine:
             order = order[:max_batches]
         return [arr[i] for i in order]
 
+    def warmup(self, seeds: np.ndarray) -> None:
+        """Trigger compilation outside any timed region (cache array shapes
+        differ per policy/budget, so each prepared pipeline compiles once —
+        shared by every stream that serves against it)."""
+        if self.pipeline is None:
+            raise RuntimeError("call prepare() first")
+        dgraph, store = self.pipeline.caches.dgraph, self.pipeline.caches.store
+        wblock = sample_blocks(jax.random.PRNGKey(self.seed + 1), dgraph, jnp.asarray(seeds), self.fanouts)
+        wfeats, _ = store.gather(wblock.input_nodes)
+        jax.block_until_ready(
+            gnn_models.forward(self.params, wfeats, model=self.model, fanouts=self.fanouts)
+        )
+
     def run(
         self,
         *,
@@ -168,107 +332,44 @@ class GNNInferenceEngine:
         warmup: bool = True,
         pipeline_depth: int | None = None,
         collect_outputs: bool = False,
+        batches: list[np.ndarray] | None = None,
     ) -> InferenceReport:
+        """Run inference over the dataset's test batches (or explicit seed
+        ``batches``) and return the stage-time / hit-rate report.
+
+        ``batches`` overrides the dataset-derived schedule (and RAIN's
+        ``batch_order``) — the serving layer and the equivalence tests use
+        it to run an exact per-stream batch list."""
         if self.pipeline is None:
             raise RuntimeError("call prepare() first")
         pipe = self.pipeline
         depth = self.pipeline_depth if pipeline_depth is None else pipeline_depth
-        dgraph, store = pipe.caches.dgraph, pipe.caches.store
-        key = jax.random.PRNGKey(self.seed + 1)
-
+        if batches is None:
+            batches = self._batches(max_batches)
         if warmup:
-            # Trigger compilation outside the timed region (cache array
-            # shapes differ per policy, so each policy compiles once).
-            wseeds = jnp.asarray(self._batches(1)[0])
-            wblock = sample_blocks(key, dgraph, wseeds, self.fanouts)
-            wfeats, _ = store.gather(wblock.input_nodes)
-            jax.block_until_ready(
-                gnn_models.forward(self.params, wfeats, model=self.model, fanouts=self.fanouts)
-            )
+            self.warmup(batches[0])
 
-        # Cross-batch state: the RNG stream and RAIN's host-side membership
-        # map.  Stage fns run in batch order at any depth, so mutating these
-        # in closures preserves the serial key sequence and reuse ordering.
-        state = {
-            "key": key,
-            "prev_map": np.full(self.dataset.num_nodes, -1, np.int64),
-            "prev_feats": None,
-            "prev_nodes": None,
-        }
-        acc = {"adj_hits": 0, "adj_total": 0, "feat_hits": 0, "feat_total": 0}
-        outputs: list[np.ndarray] | None = [] if collect_outputs else None
-
-        def sample_stage(ctx):
-            state["key"], sub = jax.random.split(state["key"])
-            block = sample_blocks(sub, dgraph, jnp.asarray(ctx.payload), self.fanouts)
-            # Dispatch the hit-stat reductions here, in-pipeline: dispatched
-            # at retire time they would queue behind the *next* batch's
-            # stages on the device stream and serialize the pipeline.
-            bh, bt = block.adj_hit_stats()
-            return block, bh, bt
-
-        def feature_stage(ctx):
-            block = ctx.outputs["sample"][0]
-            if pipe.reuse_prev_batch and state["prev_feats"] is not None:
-                nodes = np.asarray(block.input_nodes)
-                pos = state["prev_map"][nodes]
-                hit_np = pos >= 0
-                reused = state["prev_feats"][jnp.asarray(np.maximum(pos, 0))]
-                fresh, _ = store.gather(block.input_nodes)
-                feats = jnp.where(jnp.asarray(hit_np)[:, None], reused, fresh)
-                hit = jnp.asarray(hit_np)
-            else:
-                feats, hit = store.gather(block.input_nodes)
-            if pipe.reuse_prev_batch:
-                # The *next* batch's gather reads this state, so it must be
-                # updated here rather than at retire time — with depth > 1
-                # batch i retires only after batch i+1 has dispatched.
-                if state["prev_nodes"] is not None:
-                    state["prev_map"][state["prev_nodes"]] = -1
-                state["prev_nodes"] = np.asarray(block.input_nodes)
-                state["prev_map"][state["prev_nodes"]] = np.arange(len(state["prev_nodes"]))
-                state["prev_feats"] = feats
-            return feats, hit, jnp.sum(hit)
-
-        def compute_stage(ctx):
-            feats = ctx.outputs["feature"][0]
-            return gnn_models.forward(self.params, feats, model=self.model, fanouts=self.fanouts)
-
-        def on_retire(ctx):
-            # Host-side accounting; runs per batch, in order, after the
-            # batch's stage outputs (incl. the stat scalars) are ready, so
-            # the int() conversions only pay a tiny device→host transfer.
-            _, bh, bt = ctx.outputs["sample"]
-            _, hit, hsum = ctx.outputs["feature"]
-            acc["adj_hits"] += int(bh)
-            acc["adj_total"] += int(bt)
-            acc["feat_hits"] += int(hsum)
-            acc["feat_total"] += int(hit.shape[0])
-            if outputs is not None:
-                outputs.append(np.asarray(ctx.outputs["compute"]))
-
+        # All cross-batch state (RNG stream, RAIN's reuse map, counters)
+        # lives in the StreamRuntime; stage methods run in batch order at
+        # any depth, preserving the serial key sequence and reuse ordering.
+        rt = StreamRuntime(
+            pipe,
+            self.params,
+            model=self.model,
+            fanouts=self.fanouts,
+            num_nodes=self.dataset.num_nodes,
+            key=jax.random.PRNGKey(self.seed + 1),
+            collect_outputs=collect_outputs,
+        )
         clock = StageClock(overlap=depth > 1)
         executor = PipelinedExecutor(
-            [
-                Stage(
-                    "sample",
-                    sample_stage,
-                    lambda c: (c.outputs["sample"][0].frontiers[-1], c.outputs["sample"][1]),
-                ),
-                Stage(
-                    "feature",
-                    feature_stage,
-                    lambda c: (c.outputs["feature"][0], c.outputs["feature"][2]),
-                ),
-                Stage("compute", compute_stage, lambda c: c.outputs["compute"]),
-            ],
+            stream_stages(lambda c: rt),
             depth=depth,
             clock=clock,
-            on_retire=on_retire,
+            on_retire=rt.record,
         )
-        batches = self._batches(max_batches)
         executor.run(batches)
-        self.last_outputs = outputs
+        self.last_outputs = rt.outputs
 
         return InferenceReport(
             policy=pipe.name,
@@ -277,10 +378,10 @@ class GNNInferenceEngine:
             feature_seconds=clock.total("feature"),
             compute_seconds=clock.total("compute"),
             prep_seconds=pipe.prep_seconds,
-            adj_hits=acc["adj_hits"],
-            adj_lookups=acc["adj_total"],
-            feat_hits=acc["feat_hits"],
-            feat_lookups=acc["feat_total"],
+            adj_hits=rt.adj_hits,
+            adj_lookups=rt.adj_lookups,
+            feat_hits=rt.feat_hits,
+            feat_lookups=rt.feat_lookups,
             feat_row_bytes=self.dataset.feature_nbytes_per_row(),
             pipeline_depth=depth,
         )

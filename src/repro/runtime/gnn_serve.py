@@ -1,0 +1,371 @@
+"""Multi-stream GNN serving over one shared DualCache.
+
+DCI's premise is that a workload-aware dual cache amortizes redundant
+loading across many inference requests — which only pays off when several
+request *streams* actually share it.  This layer runs N independent batch
+streams through ONE :class:`~repro.runtime.pipeline.PipelinedExecutor`
+schedule against a single shared :class:`~repro.core.cache.DualCache`:
+
+  - each stream owns a seed-batch queue, its own RNG stream and RAIN reuse
+    state (a :class:`~repro.runtime.gnn_engine.StreamRuntime`), and its own
+    overlap-aware :class:`~repro.utils.timing.StageClock`;
+  - an admission policy interleaves the queues round-robin with a
+    per-stream in-flight cap (backpressure), mirroring the slot design of
+    :mod:`repro.runtime.serve_engine`: a saturated stream is skipped, not
+    waited on, and admission never stalls batches already in flight;
+  - per-stream hit/latency accounting plus shared aggregate accounting
+    come out in a :class:`ServeReport`.
+
+Because the caches are immutable at serve time and every stream's state is
+private to its ``StreamRuntime``, each stream's outputs, RNG sequence, and
+hit counters are bit-identical to running that stream's batches alone
+(tests/test_gnn_serve.py).  What sharing buys is systemic: one presample +
+allocation + fill + XLA compile amortized over all streams, and one
+budget-B cache serving everyone instead of N private B/N caches — the
+axes benchmarks/bench_multistream.py measures.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.runtime.gnn_engine import (
+    GNNInferenceEngine,
+    PCIE4_BW,
+    HBM_BW,
+    StreamRuntime,
+    modeled_transfer_seconds,
+    stream_stages,
+)
+from repro.runtime.pipeline import PipelinedExecutor
+from repro.utils.timing import StageClock
+
+__all__ = [
+    "MultiStreamServer",
+    "ServeReport",
+    "StreamReport",
+    "StreamState",
+    "make_stream_batches",
+]
+
+
+@dataclasses.dataclass
+class StreamState:
+    """One request stream: queue + per-stream runtime/clock/accounting."""
+
+    stream_id: int
+    seed: int
+    runtime: StreamRuntime
+    clock: StageClock
+    queue: collections.deque  # of np.ndarray seed batches
+    submitted: int = 0  # batches admitted into the pipeline so far
+    retired: int = 0  # batches fully completed so far
+    inflight: int = 0  # batches currently inside the executor window
+    max_inflight_seen: int = 0
+    seeds_served: int = 0
+    latencies: list = dataclasses.field(default_factory=list)
+    _admit_times: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class StreamReport:
+    stream_id: int
+    seed: int
+    num_batches: int
+    num_seeds: int
+    sample_seconds: float
+    feature_seconds: float
+    compute_seconds: float
+    adj_hits: int
+    adj_lookups: int
+    feat_hits: int
+    feat_lookups: int
+    mean_latency_s: float
+    max_latency_s: float
+
+    @property
+    def adj_hit_rate(self) -> float:
+        return self.adj_hits / max(self.adj_lookups, 1)
+
+    @property
+    def feat_hit_rate(self) -> float:
+        return self.feat_hits / max(self.feat_lookups, 1)
+
+    def summary(self) -> dict:
+        return {
+            "stream": self.stream_id,
+            "batches": self.num_batches,
+            "adj_hit_rate": round(self.adj_hit_rate, 4),
+            "feat_hit_rate": round(self.feat_hit_rate, 4),
+            "mean_latency_s": round(self.mean_latency_s, 4),
+            "max_latency_s": round(self.max_latency_s, 4),
+        }
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Aggregate + per-stream outcome of one multi-stream serve run.
+
+    Aggregate hit counters are sums over the per-stream reports (asserted
+    in tests); ``wall_seconds`` is the serve loop's wall clock (warmup and
+    preparation excluded — those are the *amortized* costs the benchmark
+    accounts separately)."""
+
+    policy: str
+    num_streams: int
+    depth: int
+    max_inflight_per_stream: int
+    wall_seconds: float
+    feat_row_bytes: int
+    streams: list[StreamReport]
+
+    @property
+    def total_batches(self) -> int:
+        return sum(s.num_batches for s in self.streams)
+
+    @property
+    def total_seeds(self) -> int:
+        return sum(s.num_seeds for s in self.streams)
+
+    @property
+    def adj_hits(self) -> int:
+        return sum(s.adj_hits for s in self.streams)
+
+    @property
+    def adj_lookups(self) -> int:
+        return sum(s.adj_lookups for s in self.streams)
+
+    @property
+    def feat_hits(self) -> int:
+        return sum(s.feat_hits for s in self.streams)
+
+    @property
+    def feat_lookups(self) -> int:
+        return sum(s.feat_lookups for s in self.streams)
+
+    @property
+    def adj_hit_rate(self) -> float:
+        return self.adj_hits / max(self.adj_lookups, 1)
+
+    @property
+    def feat_hit_rate(self) -> float:
+        return self.feat_hits / max(self.feat_lookups, 1)
+
+    @property
+    def throughput_seeds_per_s(self) -> float:
+        return self.total_seeds / max(self.wall_seconds, 1e-12)
+
+    def modeled_transfer_seconds(self, slow_bw: float = PCIE4_BW, fast_bw: float = HBM_BW) -> float:
+        """Project aggregate byte movement onto a slow-miss / fast-hit link
+        pair (the model shared with
+        :class:`~repro.runtime.gnn_engine.InferenceReport`)."""
+        return modeled_transfer_seconds(
+            feat_lookups=self.feat_lookups,
+            feat_hits=self.feat_hits,
+            adj_lookups=self.adj_lookups,
+            adj_hits=self.adj_hits,
+            feat_row_bytes=self.feat_row_bytes,
+            slow_bw=slow_bw,
+            fast_bw=fast_bw,
+        )
+
+    def summary(self) -> dict:
+        return {
+            "policy": self.policy,
+            "streams": self.num_streams,
+            "depth": self.depth,
+            "batches": self.total_batches,
+            "wall_s": round(self.wall_seconds, 4),
+            "throughput_seeds_per_s": round(self.throughput_seeds_per_s, 1),
+            "adj_hit_rate": round(self.adj_hit_rate, 4),
+            "feat_hit_rate": round(self.feat_hit_rate, 4),
+            "modeled_transfer_s": round(self.modeled_transfer_seconds(), 6),
+            "per_stream": [s.summary() for s in self.streams],
+        }
+
+
+class MultiStreamServer:
+    """Serve N seed-batch streams through one pipelined executor + caches.
+
+    Built on a *prepared* :class:`~repro.runtime.gnn_engine.GNNInferenceEngine`
+    (its ``pipeline`` holds the shared DualCache and the policy metadata;
+    its params are the shared model weights).
+
+    ``depth`` is the executor window (1 = serial, >1 keeps that many
+    batches in flight across streams).  ``max_inflight_per_stream`` is the
+    backpressure cap: round-robin admission skips a stream that already
+    occupies that many window slots, so one deep queue cannot monopolize
+    the pipeline.  When every stream with pending work is at its cap the
+    least-loaded one is admitted anyway — admission must make progress
+    (retires only happen after the next dispatch), so the cap bounds
+    *relative* occupancy rather than deadlocking the window.
+    """
+
+    def __init__(
+        self,
+        engine: GNNInferenceEngine,
+        *,
+        depth: int = 2,
+        max_inflight_per_stream: int | None = None,
+    ):
+        if engine.pipeline is None:
+            raise RuntimeError("prepare() the engine before constructing the server")
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.engine = engine
+        self.depth = depth
+        self.max_inflight = (
+            max_inflight_per_stream if max_inflight_per_stream is not None else depth
+        )
+        if self.max_inflight < 1:
+            raise ValueError("max_inflight_per_stream must be >= 1")
+        self.streams: list[StreamState] = []
+        self.admission_log: list[tuple[int, int]] = []  # (stream_id, per-stream batch idx)
+        self._rr = 0  # round-robin cursor
+
+    # ------------------------------------------------------------- intake
+    def add_stream(
+        self,
+        batches: Sequence[np.ndarray],
+        *,
+        seed: int | None = None,
+        collect_outputs: bool = False,
+    ) -> StreamState:
+        """Register a stream with its full seed-batch queue.
+
+        ``seed`` fixes the stream's RNG: the stream's results are
+        bit-identical to ``GNNInferenceEngine(seed=seed, ...)`` running the
+        same ``batches`` alone against the same prepared pipeline."""
+        sid = len(self.streams)
+        if seed is None:
+            seed = self.engine.seed + sid
+        runtime = StreamRuntime(
+            self.engine.pipeline,
+            self.engine.params,
+            model=self.engine.model,
+            fanouts=self.engine.fanouts,
+            num_nodes=self.engine.dataset.num_nodes,
+            key=jax.random.PRNGKey(seed + 1),
+            collect_outputs=collect_outputs,
+        )
+        state = StreamState(
+            stream_id=sid,
+            seed=seed,
+            runtime=runtime,
+            clock=StageClock(overlap=self.depth > 1),
+            queue=collections.deque(np.asarray(b) for b in batches),
+        )
+        self.streams.append(state)
+        return state
+
+    # ---------------------------------------------------------- admission
+    def _next_stream(self) -> StreamState:
+        """Round-robin over streams with queued work, honoring the in-flight
+        cap; falls back to the least-loaded pending stream when everyone is
+        saturated (see class docstring)."""
+        n = len(self.streams)
+        pending = [s for s in self.streams if s.queue]
+        for off in range(n):
+            s = self.streams[(self._rr + off) % n]
+            if s.queue and s.inflight < self.max_inflight:
+                self._rr = (s.stream_id + 1) % n
+                return s
+        s = min(pending, key=lambda s: (s.inflight, (s.stream_id - self._rr) % n))
+        self._rr = (s.stream_id + 1) % n
+        return s
+
+    def _admission(self):
+        """Lazy (stream, payload) generator for the executor: pulled exactly
+        when a window slot opens, so the in-flight counts it reads are live."""
+        while any(s.queue for s in self.streams):
+            s = self._next_stream()
+            payload = s.queue.popleft()
+            self.admission_log.append((s.stream_id, s.submitted))
+            s._admit_times[s.submitted] = time.perf_counter()
+            s.submitted += 1
+            s.inflight += 1
+            s.max_inflight_seen = max(s.max_inflight_seen, s.inflight)
+            yield (s, payload)
+
+    def _on_retire(self, ctx) -> None:
+        s: StreamState = ctx.stream
+        s.runtime.record(ctx)
+        s.latencies.append(time.perf_counter() - s._admit_times.pop(s.retired))
+        s.seeds_served += int(np.asarray(ctx.payload).shape[0])
+        s.retired += 1
+        s.inflight -= 1
+
+    # ----------------------------------------------------------------- run
+    def run(self, *, warmup: bool = True) -> ServeReport:
+        if not self.streams:
+            raise RuntimeError("add_stream() at least one stream before run()")
+        if warmup:
+            first = next(s for s in self.streams if s.queue)
+            self.engine.warmup(first.queue[0])
+        executor = PipelinedExecutor(
+            stream_stages(lambda c: c.stream.runtime),
+            depth=self.depth,
+            clock_for=lambda c: c.stream.clock,
+            on_retire=self._on_retire,
+        )
+        t0 = time.perf_counter()
+        executor.run_tagged(self._admission())
+        wall = time.perf_counter() - t0
+        return ServeReport(
+            policy=self.engine.pipeline.name,
+            num_streams=len(self.streams),
+            depth=self.depth,
+            max_inflight_per_stream=self.max_inflight,
+            wall_seconds=wall,
+            feat_row_bytes=self.engine.dataset.feature_nbytes_per_row(),
+            streams=[self._stream_report(s) for s in self.streams],
+        )
+
+    def _stream_report(self, s: StreamState) -> StreamReport:
+        rt = s.runtime
+        return StreamReport(
+            stream_id=s.stream_id,
+            seed=s.seed,
+            num_batches=s.retired,
+            num_seeds=s.seeds_served,
+            sample_seconds=s.clock.total("sample"),
+            feature_seconds=s.clock.total("feature"),
+            compute_seconds=s.clock.total("compute"),
+            adj_hits=rt.adj_hits,
+            adj_lookups=rt.adj_lookups,
+            feat_hits=rt.feat_hits,
+            feat_lookups=rt.feat_lookups,
+            mean_latency_s=float(np.mean(s.latencies)) if s.latencies else 0.0,
+            max_latency_s=float(np.max(s.latencies)) if s.latencies else 0.0,
+        )
+
+
+def make_stream_batches(
+    dataset,
+    *,
+    num_streams: int,
+    batches_per_stream: int,
+    batch_size: int,
+    seed: int = 0,
+) -> list[list[np.ndarray]]:
+    """Per-stream seed-batch queues over the dataset's test nodes.
+
+    Each stream draws its batches from its own shuffled permutation of the
+    test set (rng ``seed + stream_id``) — independent request streams over
+    the same graph, with the overlapping hot set that makes a *shared*
+    cache worth more than N private ones."""
+    out: list[list[np.ndarray]] = []
+    need = batches_per_stream * batch_size
+    for sid in range(num_streams):
+        rng = np.random.default_rng(seed + sid)
+        ids = rng.permutation(dataset.test_idx)
+        if len(ids) < need:  # tiny datasets: cycle to fill the queue
+            ids = np.tile(ids, -(-need // max(len(ids), 1)))
+        out.append(list(ids[:need].reshape(batches_per_stream, batch_size)))
+    return out

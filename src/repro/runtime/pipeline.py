@@ -26,6 +26,18 @@ stage functions, which are always invoked in batch order.  The same
 executor drives both the inference engine (runtime/gnn_engine.py) and the
 pre-sampling profiler (core/presample.py), so Eq. 1 stage times and the
 cache-filling visit counts come from one code path.
+
+Multi-stream
+------------
+Batches from several independent request streams can interleave through
+one executor schedule: :meth:`PipelinedExecutor.run_tagged` accepts
+``(stream, payload)`` pairs and stamps the stream onto
+``BatchContext.stream``, and the ``clock_for`` hook routes each batch's
+stage laps *and* its retire-boundary drains to that stream's own
+:class:`~repro.utils.timing.StageClock`.  Stage functions resolve
+per-stream state (RNG, reuse maps, hit counters) through ``ctx.stream``,
+so the serial-equivalence guarantee above holds *per stream* — the
+foundation of the multi-stream serving layer (runtime/gnn_serve.py).
 """
 
 from __future__ import annotations
@@ -43,14 +55,17 @@ class BatchContext:
     """One mini-batch flowing through the pipeline.
 
     ``payload`` is the batch input (seed node ids); ``outputs[name]`` holds
-    each completed stage's result.
+    each completed stage's result.  ``stream`` tags the request stream the
+    batch belongs to (``None`` for single-stream runs); multi-stream stage
+    functions use it to resolve per-stream state.
     """
 
-    __slots__ = ("index", "payload", "outputs")
+    __slots__ = ("index", "payload", "stream", "outputs")
 
-    def __init__(self, index: int, payload: Any):
+    def __init__(self, index: int, payload: Any, stream: Any = None):
         self.index = index
         self.payload = payload
+        self.stream = stream
         self.outputs: dict[str, Any] = {}
 
 
@@ -88,6 +103,7 @@ class PipelinedExecutor:
         *,
         depth: int = 1,
         clock: StageClock | None = None,
+        clock_for: Callable[[BatchContext], StageClock] | None = None,
         on_retire: Callable[[BatchContext], None] | None = None,
     ):
         if depth < 1:
@@ -97,7 +113,16 @@ class PipelinedExecutor:
         self.stages = list(stages)
         self.depth = depth
         self.clock = clock if clock is not None else StageClock(overlap=depth > 1)
+        self.clock_for = clock_for
         self.on_retire = on_retire
+
+    def _clock(self, ctx: BatchContext) -> StageClock:
+        """The clock a batch's laps and drains are booked on: the stream's
+        own clock when ``clock_for`` is set (per-stream accounting), else
+        the executor-wide default."""
+        if self.clock_for is not None:
+            return self.clock_for(ctx)
+        return self.clock
 
     def run(self, payloads: Iterable[Any]) -> list[BatchContext]:
         """Dispatch every payload through all stages; return retired contexts
@@ -108,15 +133,26 @@ class PipelinedExecutor:
         (blocks, features, logits) until the run ends would grow memory
         O(num_batches) instead of O(depth) on exactly the long runs
         pipelining targets."""
+        return self.run_tagged((None, p) for p in payloads)
+
+    def run_tagged(self, items: Iterable[tuple[Any, Any]]) -> list[BatchContext]:
+        """Like :meth:`run` over ``(stream, payload)`` pairs.
+
+        The stream tag is stamped onto each :class:`BatchContext` before
+        its stages run; the pairs may come from a *lazy* admission
+        generator — it is pulled exactly when a window slot is about to be
+        filled, so it can consult live in-flight occupancy (the serving
+        layer's backpressure hook)."""
         window: collections.deque[BatchContext] = collections.deque()
         retired: list[BatchContext] = []
-        for i, payload in enumerate(payloads):
-            ctx = BatchContext(i, payload)
+        for i, (stream, payload) in enumerate(items):
+            ctx = BatchContext(i, payload, stream)
+            clock = self._clock(ctx)
             for st in self.stages:
                 sync = None
                 if st.sync is not None:
                     sync = (lambda s=st, c=ctx: s.sync(c))
-                with self.clock.stage(st.name, sync=sync):
+                with clock.stage(st.name, sync=sync):
                     ctx.outputs[st.name] = st.fn(ctx)
             window.append(ctx)
             while len(window) > self.depth - 1:
@@ -126,14 +162,15 @@ class PipelinedExecutor:
         return retired
 
     def _retire(self, ctx: BatchContext) -> BatchContext:
-        if self.clock.overlap:
+        clock = self._clock(ctx)
+        if clock.overlap:
             # Drain every stage's sync value, in stage order, attributing
             # each wait to its own stage — otherwise in-flight work from
             # earlier stages would be waited on untimed inside on_retire
             # and the stage totals would under-count the loop's wall clock.
             for st in self.stages:
                 if st.sync is not None:
-                    self.clock.drain(st.name, st.sync(ctx))
+                    clock.drain(st.name, st.sync(ctx))
         if self.on_retire is not None:
             self.on_retire(ctx)
         ctx.outputs.clear()

@@ -110,6 +110,44 @@ def test_depth2_overlaps_one_batch():
     assert [c.index for c in out] == [0, 1, 2]  # retire order == batch order
 
 
+def test_run_tagged_stamps_stream_and_routes_clocks():
+    """Tagged runs: ctx.stream carries the tag through to retire, and with
+    clock_for every batch's laps AND retire drains land on its own stream's
+    clock — the per-stream accounting the serving layer builds on."""
+    import jax.numpy as jnp
+
+    class Tag:
+        def __init__(self, name):
+            self.name = name
+            self.clock = StageClock(overlap=True)
+
+    a, b = Tag("a"), Tag("b")
+    seen = []
+    ex = PipelinedExecutor(
+        [Stage("s", lambda c: jnp.arange(8) + c.payload, lambda c: c.outputs["s"])],
+        depth=2,
+        clock_for=lambda c: c.stream.clock,
+        on_retire=lambda c: seen.append((c.stream.name, c.payload)),
+    )
+    ex.run_tagged([(a, 0), (b, 1), (a, 2)])
+    assert seen == [("a", 0), ("b", 1), ("a", 2)]
+    assert len(a.clock.laps["s"]) == 2 and len(b.clock.laps["s"]) == 1
+    # overlap mode: each stream's drains are attributed to its own clock
+    assert a.clock.totals["s"] >= sum(a.clock.laps["s"])
+    assert b.clock.totals["s"] >= sum(b.clock.laps["s"])
+
+
+def test_run_is_run_tagged_with_no_stream():
+    done = []
+    ex = PipelinedExecutor(
+        [Stage("s", lambda c: c.payload)],
+        depth=1,
+        on_retire=lambda c: done.append(c.stream),
+    )
+    ex.run(range(3))
+    assert done == [None, None, None]
+
+
 def test_executor_rejects_bad_config():
     with pytest.raises(ValueError):
         PipelinedExecutor([Stage("a", lambda c: None)], depth=0)
