@@ -8,11 +8,13 @@ Paper claims validated here (directionally, on the scaled stand-ins):
   * hit rates: feature hit high under power-law reuse; adjacency cache
     accelerates the sampling stage that SCI leaves cold.
 
-Beyond-paper axis: every policy runs at pipeline_depth 1 (serial, a device
-sync after every stage — the paper's execution model) and 2 (double
-buffered, batch i+1's sample/gather overlapping batch i's compute), so the
-serial-vs-pipelined wall-clock delta is reported side by side.  Outputs and
-hit rates are identical across depths by construction.
+Beyond-paper axis: every policy runs serially (pipeline_depth 1, a device
+sync after every stage — the paper's execution model), pipelined (depth 2,
+batch i+1's sample/gather overlapping batch i's compute), and
+pipelined+prefetch (depth 2 plus the miss-path prefetch stage staging
+batch i+1's missed host rows during batch i's forward), so the three
+execution modes report side by side.  Outputs and hit rates are identical
+across modes by construction.
 """
 
 from __future__ import annotations
@@ -20,32 +22,32 @@ from __future__ import annotations
 import argparse
 import json
 
-from benchmarks.common import CACHE_BYTES, FANOUTS, emit, make_engine, run_policy_depths
+from benchmarks.common import CACHE_BYTES, FANOUTS, MODES, emit, make_engine, run_policy_modes
 
 POLICIES = ("dgl", "sci", "dci", "rain")
-PIPELINE_DEPTHS = (1, 2)
 
 
 def run(
     datasets=("reddit", "yelp", "amazon", "ogbn-products"),
     models=("graphsage", "gcn"),
-    depths=PIPELINE_DEPTHS,
+    modes=MODES,
 ):
-    if 1 not in depths:
-        raise ValueError("depths must include 1: the serial run is the baseline")
+    labels = [m[0] for m in modes]
+    if "serial" not in labels:
+        raise ValueError("modes must include 'serial': the serial run is the baseline")
     rows = []
     for ds in datasets:
         for model in models:
             reports = {}
             for policy in POLICIES:
                 eng = make_engine(ds, model=model, fanouts=FANOUTS["8,4,2"])
-                reports[policy] = run_policy_depths(
-                    eng, policy, cache_bytes=CACHE_BYTES, depths=depths
+                reports[policy] = run_policy_modes(
+                    eng, policy, cache_bytes=CACHE_BYTES, modes=modes
                 )
-            base = reports["dgl"][1]
-            for policy, by_depth in reports.items():
-                serial = by_depth[1]
-                for depth, rep in by_depth.items():
+            base = reports["dgl"]["serial"]
+            for policy, by_mode in reports.items():
+                serial = by_mode["serial"]
+                for label, rep in by_mode.items():
                     speedup_wall = base.total_seconds / max(rep.total_seconds, 1e-9)
                     speedup_model = base.modeled_transfer_seconds() / max(
                         rep.modeled_transfer_seconds(), 1e-9
@@ -56,8 +58,9 @@ def run(
                             "dataset": ds,
                             "model": model,
                             "policy": policy,
-                            "pipeline_depth": depth,
-                            "mode": "serial" if depth == 1 else "pipelined",
+                            "pipeline_depth": rep.pipeline_depth,
+                            "prefetch": rep.prefetch,
+                            "mode": label,
                             "total_s": round(rep.total_seconds, 4),
                             "speedup_wall_vs_dgl": round(speedup_wall, 3),
                             "speedup_modeled_vs_dgl": round(speedup_model, 3),
@@ -67,7 +70,7 @@ def run(
                         }
                     )
                     emit(
-                        f"end2end/{ds}/{model}/{policy}/depth{depth}",
+                        f"end2end/{ds}/{model}/{policy}/{label}",
                         rep.total_seconds / rep.num_batches * 1e6,
                         f"speedup_modeled={speedup_model:.2f};adj_hit={rep.adj_hit_rate:.2f};"
                         f"feat_hit={rep.feat_hit_rate:.2f};"

@@ -4,10 +4,25 @@
 ``name,us_per_call,derived`` for every benchmark, then a summary of the
 paper-claim checks (directional validation on the scaled stand-in
 datasets; EXPERIMENTS.md maps each check to the paper's numbers).
+
+Regression gate (CI):
+
+    python -m benchmarks.run --write-baseline BENCH_baseline.json
+    python -m benchmarks.run --check-against BENCH_baseline.json
+
+Either flag runs only the *quick* benches (end2end on one dataset/model
+across the serial / pipelined / pipelined+prefetch modes, plus a small
+multi-stream run).  ``--check-against`` compares the machine-independent
+metrics — hit rates, modeled speedups, relative pipeline/uplift ratios,
+and the bit-for-bit invariance booleans — against the committed baseline
+within tolerance bands, and exits nonzero on regression; absolute wall
+times are never compared across machines.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
 
@@ -25,9 +40,145 @@ from benchmarks import (  # noqa: E402
     bench_lm_serving_cache,
     bench_multistream,
 )
+from benchmarks.common import geomean  # noqa: E402
+
+# ------------------------------------------------------- regression gate
+
+# Tolerance bands for --check-against, calibrated on back-to-back runs of
+# the quick benches.  The Eq. 1 capacity split is a function of *measured*
+# presample stage times, so the resulting hit rates (adjacency especially
+# — it gets the smaller, more split-sensitive share) drift a few percent
+# run to run even on one machine; the bands absorb that while still
+# catching real cache-filling regressions (a broken fill moves hit rates
+# by 0.2+).  Wall-clock-derived ratios are gated on a geomean across
+# policies, never per row — per-row wall clocks on shared CI runners
+# jitter far beyond any useful per-row band.
+FEAT_HIT_ABS_TOL = 0.05  # feature hit-rate drift (bulk of the budget, stabler)
+ADJ_HIT_ABS_TOL = 0.10  # adjacency hit-rate drift (split-sensitive share)
+MODELED_REL_TOL = 0.25  # modeled (PCIe/HBM-projected) speedup drift
+PIPELINE_GEOMEAN_FLOOR = 0.75  # per-mode geomean of cur/base pipeline speedups
+UPLIFT_FRACTION = 0.6  # multi-stream uplift must keep this much of baseline
+
+
+def quick_bench() -> dict:
+    """The quick-run rows the regression gate snapshots and compares."""
+    print("# --- quick end2end (serial / pipelined / pipelined+prefetch) ---")
+    e2e = bench_end2end.run(datasets=("ogbn-products",), models=("graphsage",))
+    print("# --- quick multi-stream (shared vs private, +prefetch) ---")
+    ms_rows, ms_checks = bench_multistream.run(
+        num_streams=2, batches_per_stream=2, batch_size=128
+    )
+    return {"end2end": e2e, "multistream": {"rows": ms_rows, "checks": ms_checks}}
+
+
+def _e2e_key(row: dict) -> str:
+    return f"{row['dataset']}/{row['model']}/{row['policy']}/{row['mode']}"
+
+
+def check_against(baseline: dict, current: dict) -> list[tuple[str, bool, str]]:
+    """Compare a quick run against the committed baseline.
+
+    Returns ``(criterion, ok, detail)`` triples — one per compared metric,
+    plus one failure triple per baseline row the current run no longer
+    produces (a silently dropped benchmark must fail the gate)."""
+    results: list[tuple[str, bool, str]] = []
+    cur_e2e = {_e2e_key(r): r for r in current["end2end"]}
+    pipeline_ratios: dict[str, list[float]] = {}
+    for row in baseline["end2end"]:
+        key = _e2e_key(row)
+        cur = cur_e2e.get(key)
+        if cur is None:
+            results.append((f"e2e/{key}", False, "row missing from current run"))
+            continue
+        for metric, tol in (("feat_hit", FEAT_HIT_ABS_TOL), ("adj_hit", ADJ_HIT_ABS_TOL)):
+            diff = abs(cur[metric] - row[metric])
+            results.append(
+                (f"e2e/{key}/{metric}", diff <= tol, f"|{cur[metric]}-{row[metric]}|={diff:.4f}")
+            )
+        base_m, cur_m = row["speedup_modeled_vs_dgl"], cur["speedup_modeled_vs_dgl"]
+        ok = cur_m >= base_m * (1 - MODELED_REL_TOL)
+        results.append((f"e2e/{key}/speedup_modeled", ok, f"{cur_m} vs {base_m}"))
+        pipeline_ratios.setdefault(row["mode"], []).append(
+            cur["pipeline_speedup_vs_serial"] / max(row["pipeline_speedup_vs_serial"], 1e-9)
+        )
+    for mode, ratios in sorted(pipeline_ratios.items()):
+        g = geomean(ratios)
+        results.append(
+            (
+                f"e2e/pipeline_speedup_geomean/{mode}",
+                g >= PIPELINE_GEOMEAN_FLOOR,
+                f"{g:.3f} (floor {PIPELINE_GEOMEAN_FLOOR})",
+            )
+        )
+
+    cur_ms = {r["mode"]: r for r in current["multistream"]["rows"]}
+    for row in baseline["multistream"]["rows"]:
+        cur = cur_ms.get(row["mode"])
+        if cur is None:
+            results.append((f"ms/{row['mode']}", False, "row missing from current run"))
+            continue
+        for metric, tol in (("feat_hit", FEAT_HIT_ABS_TOL), ("adj_hit", ADJ_HIT_ABS_TOL)):
+            diff = abs(cur[metric] - row[metric])
+            results.append((f"ms/{row['mode']}/{metric}", diff <= tol, f"diff={diff:.4f}"))
+    base_checks = baseline["multistream"]["checks"]
+    cur_checks = current["multistream"]["checks"]
+    for flag in ("uplift_ge_1.2", "shared_hit_ge_private", "prefetch_hits_identical"):
+        ok = bool(cur_checks.get(flag)) or not bool(base_checks.get(flag, True))
+        results.append((f"ms/checks/{flag}", ok, str(cur_checks.get(flag))))
+    base_u = base_checks["throughput_uplift_vs_private"]
+    cur_u = cur_checks["throughput_uplift_vs_private"]
+    # The uplift is wall-clock-derived, so a baseline from a faster dev
+    # machine must not raise the bar above the project's own >=1.2
+    # acceptance criterion: keeping 60% of the baseline OR clearing 1.2
+    # both pass.  Losing the 1.2 claim outright is caught by the
+    # uplift_ge_1.2 flag above regardless.
+    floor = min(1.2, base_u * UPLIFT_FRACTION)
+    results.append(
+        (
+            "ms/checks/throughput_uplift",
+            cur_u >= floor,
+            f"{cur_u} vs {base_u} (floor {floor:.3f})",
+        )
+    )
+    return results
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--write-baseline",
+        default=None,
+        metavar="PATH",
+        help="run the quick benches and snapshot their rows as the regression baseline",
+    )
+    ap.add_argument(
+        "--check-against",
+        default=None,
+        metavar="PATH",
+        help="run the quick benches and fail (exit 1) on regression vs this baseline",
+    )
+    args = ap.parse_args()
+
+    if args.write_baseline or args.check_against:
+        print("name,us_per_call,derived")
+        current = quick_bench()
+        if args.write_baseline:
+            with open(args.write_baseline, "w") as f:
+                json.dump({"schema": 1, **current}, f, indent=1)
+            print(f"# baseline written to {args.write_baseline}")
+        if args.check_against:
+            with open(args.check_against) as f:
+                baseline = json.load(f)
+            results = check_against(baseline, current)
+            failed = [r for r in results if not r[1]]
+            print("# --- regression gate ---")
+            for name, ok, detail in results:
+                print(f"check,0.00,{name}={'PASS' if ok else 'FAIL'};{detail}")
+            print(f"# {len(results) - len(failed)}/{len(results)} gate checks passed")
+            if failed:
+                sys.exit(1)
+        return
+
     print("name,us_per_call,derived")
 
     print("# --- Tab.I redundant loading ---")
@@ -138,6 +289,12 @@ def main() -> None:
         (
             "Multi-stream: shared cache >= 1.2x cold-start throughput + hit rate",
             ms_checks["uplift_ge_1.2"] and ms_checks["shared_hit_ge_private"],
+        )
+    )
+    checks.append(
+        (
+            "Prefetch: identical hit accounting with the miss-path prefetch stage",
+            ms_checks["prefetch_hits_identical"],
         )
     )
 

@@ -52,6 +52,11 @@ class PreparedPipeline:
     presample: PresampleStats | None = None
     batch_order: np.ndarray | None = None  # RAIN: inference-order permutation of batches
     reuse_prev_batch: bool = False  # RAIN: reuse previous batch's features
+    # Default execution knobs for runs against this pipeline (overridable
+    # per run; outputs and hit accounting are knob-invariant):
+    prefetch: bool = False  # stage missed host rows for batch i+1 during batch i's compute
+    use_kernel: bool = False  # route gathers through the Pallas cached_gather kernel
+    gather_buffers: int = 2  # kernel VMEM row-tile slots (1 serial, 2 double buffered)
 
 
 # ---------------------------------------------------------------- DCI / SCI
@@ -367,17 +372,31 @@ def prepare(policy: str, dataset: SyntheticGraphDataset, **kw) -> PreparedPipeli
         budget across them — used when one cache will be shared by the
         multi-stream server (runtime/gnn_serve.py).
 
+    Execution knobs (``prefetch``, ``use_kernel``, ``gather_buffers``) are
+    policy-independent: they are recorded on the returned
+    :class:`PreparedPipeline` as the defaults every engine run and every
+    serving stream resolves against, without changing what gets cached.
+
     ``dgl`` and ``rain`` build no presampled caches; the extra knobs are
     ignored for them."""
     if policy not in POLICIES:
         raise KeyError(f"unknown policy {policy!r}; have {sorted(POLICIES)}")
+    exec_kw = {
+        "prefetch": bool(kw.pop("prefetch", False)),
+        "use_kernel": bool(kw.pop("use_kernel", False)),
+        "gather_buffers": int(kw.pop("gather_buffers", 2)),
+    }
+    if exec_kw["gather_buffers"] < 1:
+        raise ValueError(f"gather_buffers must be >= 1, got {exec_kw['gather_buffers']}")
     fn = POLICIES[policy]
     if policy == "dgl":
-        return fn(dataset)
-    if policy == "rain":
-        return fn(
+        pipe = fn(dataset)
+    elif policy == "rain":
+        pipe = fn(
             dataset,
             batch_size=kw["batch_size"],
             seed=kw.get("seed", 0),
         )
-    return fn(dataset, **kw)
+    else:
+        pipe = fn(dataset, **kw)
+    return dataclasses.replace(pipe, **exec_kw)

@@ -11,12 +11,33 @@ bytes moved over the slow path.
 from __future__ import annotations
 
 import dataclasses
+import typing
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["FeatureStore", "build_feature_cache"]
+__all__ = ["FeatureStore", "PrefetchedMisses", "build_feature_cache"]
+
+
+class PrefetchedMisses(typing.NamedTuple):
+    """Missed host rows staged onto the device ahead of their gather.
+
+    ``rows`` is the ``device_put`` buffer: the full ``[S, F]`` row set when
+    every row missed (``idx is None``), else a ``[P, F]`` power-of-two
+    padded pack of just the miss rows.  ``idx`` holds each packed row's
+    position in the batch (pad entries point one past the end and are
+    dropped by the consuming scatter); ``pack_pos`` is the inverse map —
+    each batch row's slot in the pack (0 for hit rows, whose miss source
+    is never read) — so the kernel route can address the pack directly
+    instead of rebuilding a dense miss source.  ``num_miss`` is the
+    unpadded miss count — the staging accounting, so callers need not
+    re-derive the miss mask."""
+
+    rows: jax.Array
+    idx: jax.Array | None
+    pack_pos: jax.Array | None
+    num_miss: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,25 +58,120 @@ class FeatureStore:
     def num_cached(self) -> int:
         return int((self.position_map >= 0).sum())
 
+    def host_np(self) -> np.ndarray:
+        """Host-memory mirror of the full feature table (cached lazily).
+
+        The paper's miss path reads host/UVA memory; this is the array the
+        prefetch stage copies missed rows *from* with ``jax.device_put``.
+        Same float bits as ``host_table``, so a prefetched row is
+        bit-identical to a direct device-side miss gather."""
+        cached = getattr(self, "_host_np", None)
+        if cached is None:
+            cached = np.asarray(self.host_table)
+            object.__setattr__(self, "_host_np", cached)
+        return cached
+
+    def position_np(self) -> np.ndarray:
+        """Host-memory mirror of ``position_map`` (cached lazily) — lets
+        the prefetch stage find the missed rows without a device round
+        trip."""
+        cached = getattr(self, "_position_np", None)
+        if cached is None:
+            cached = np.asarray(self.position_map)
+            object.__setattr__(self, "_position_np", cached)
+        return cached
+
+    def prefetch_misses(self, nodes: np.ndarray) -> PrefetchedMisses:
+        """Stage the missed host rows for a batch onto the device.
+
+        ``jax.device_put`` issues the host→device copy of exactly the
+        rows the gather would otherwise pull across the slow link; under
+        async dispatch it overlaps whatever the device is running (the
+        previous batch's forward, in the pipelined executor).  The miss
+        count varies batch to batch, so the pack is padded to a
+        power-of-two bucket — the consuming scatter then compiles
+        O(log S) programs instead of one per distinct count."""
+        nodes = np.asarray(nodes)
+        miss = np.nonzero(self.position_np()[nodes] < 0)[0].astype(np.int32)
+        if miss.size == nodes.size:
+            # Every row missed (e.g. no cache): the staged buffer IS the
+            # whole row set — no pack, no pad.
+            return PrefetchedMisses(
+                rows=jax.device_put(self.host_np()[nodes]),
+                idx=None,
+                pack_pos=None,
+                num_miss=int(miss.size),
+            )
+        bucket = min(max(1, 1 << int(np.ceil(np.log2(max(miss.size, 1))))), nodes.size)
+        idx = np.full(bucket, nodes.size, np.int32)  # pad → one past the end (dropped)
+        idx[: miss.size] = miss
+        rows = np.zeros((bucket, self.feat_dim), self.host_np().dtype)
+        rows[: miss.size] = self.host_np()[nodes[miss]]
+        pack_pos = np.zeros(nodes.size, np.int32)  # hit rows point at slot 0 (never read)
+        pack_pos[miss] = np.arange(miss.size, dtype=np.int32)
+        return PrefetchedMisses(
+            rows=jax.device_put(rows),
+            idx=jnp.asarray(idx),
+            pack_pos=jnp.asarray(pack_pos),
+            num_miss=int(miss.size),
+        )
+
     def gather(
-        self, indices: jax.Array, *, use_kernel: bool = False
+        self,
+        indices: jax.Array,
+        *,
+        use_kernel: bool = False,
+        gather_buffers: int = 2,
+        prefetched: PrefetchedMisses | None = None,
     ) -> tuple[jax.Array, jax.Array]:
         """Two-source gather. Returns ``(features[S, F], hit[S])``.
 
-        ``use_kernel=True`` routes through the Pallas ``cached_gather``
-        kernel (interpret mode on CPU; compiled on TPU).
+        ``use_kernel=True`` routes through the double-buffered Pallas
+        ``cached_gather`` kernel (compiled on TPU, interpret mode
+        elsewhere) with ``gather_buffers`` VMEM row-tile slots.
+
+        ``prefetched`` (from :meth:`prefetch_misses`) replaces the host
+        table as the miss source: miss rows come from the already-staged
+        pack — scattered over the hot-table gather — instead of
+        re-crossing the slow link inside this stage.  The hit mask — and
+        therefore all hit/miss accounting — is computed from
+        ``position_map`` exactly as in the non-prefetched path, and the
+        output is bit-identical (the staged rows are copies of the same
+        host rows).
         """
         indices = indices.astype(jnp.int32)
         pos = self.position_map[indices]
         hit = pos >= 0
+        s = indices.shape[0]
         if use_kernel:
             from repro.kernels.cached_gather.kernel import cached_gather
 
-            return cached_gather(self.hot_table, self.host_table, indices, pos), hit
+            if prefetched is None:
+                host_src, host_idx = self.host_table, indices
+            elif prefetched.idx is None:  # all-miss: the pack is row-aligned
+                host_src = prefetched.rows
+                host_idx = jnp.arange(s, dtype=jnp.int32)
+            else:
+                # Address the staged pack directly through its inverse map
+                # — no dense [S, F] miss-source rebuild on the gather
+                # stage.  Hit rows point at pack slot 0, which the DMA
+                # kernel never reads (the hit branch copies the hot row).
+                host_src, host_idx = prefetched.rows, prefetched.pack_pos
+            return (
+                cached_gather(
+                    self.hot_table, host_src, host_idx, pos, gather_buffers=gather_buffers
+                ),
+                hit,
+            )
         safe_pos = jnp.maximum(pos, 0)
         cached = self.hot_table[jnp.minimum(safe_pos, self.hot_table.shape[0] - 1)]
-        host = self.host_table[indices]
-        return jnp.where(hit[:, None], cached, host), hit
+        if prefetched is None:
+            return jnp.where(hit[:, None], cached, self.host_table[indices]), hit
+        if prefetched.idx is None:  # all rows missed: straight select
+            return jnp.where(hit[:, None], cached, prefetched.rows), hit
+        # Misses overwrite their rows of the hot gather — S·F + M·F work
+        # instead of the two full gathers + select of the table path.
+        return cached.at[prefetched.idx].set(prefetched.rows, mode="drop"), hit
 
 
 jax.tree_util.register_pytree_node(

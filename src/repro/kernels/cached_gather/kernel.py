@@ -1,17 +1,31 @@
-"""Pallas TPU kernel: DCI's two-source cached row gather.
+"""Pallas TPU kernel: DCI's two-source cached row gather, double buffered.
 
 TPU adaptation of the paper's cache-hit feature load (DESIGN.md §3): the
 row id (``indices``) and cache slot (``positions``) arrays are *scalar
-prefetched* — Pallas knows them before tile DMA, so each grid step DMAs
-exactly one feature-row tile from the right source (hot cache vs full
-table) HBM→VMEM.  The feature axis is tiled at up to 512 lanes (multiples
-of the 128-lane VREG width); rows are the outer grid dimension.
+prefetched* — Pallas knows them before any tile DMA, so the kernel issues
+exactly one manual HBM→VMEM copy per feature-row tile from the right
+source (hot cache on a hit, full host table on a miss), never both.
 
-A hit (`pos >= 0`) reads the hot-table row, a miss reads the host-table
-row.  Addressing happens in the BlockSpec index_map (so no gather
-instruction runs in the body); the body is a select between the two staged
-tiles.  Three scalar operands are prefetched: raw positions (hit test),
-clamped positions (safe hot addressing), clamped indices (host addressing).
+The copy schedule is double buffered (``gather_buffers`` VMEM row-tile
+slots, default 2): row ``i+1``'s HBM→VMEM copy is started while row
+``i``'s tile is being written back, so DMA latency hides behind the
+select/write of the previous row — the same overlap the staged batch
+executor (runtime/pipeline.py) applies one level up across whole batches.
+Completed tiles are written straight into the output batch buffer with a
+VMEM→HBM copy (no intermediate per-source partitions, no concat); a slot
+is only reused once its previous write-back has drained.
+
+Three scalar operands are prefetched: raw positions (hit test), clamped
+positions (safe hot addressing), clamped indices (host addressing).  The
+feature axis is tiled at up to 512 lanes (multiples of the 128-lane VREG
+width) and forms the grid; rows are walked by an inner loop so the slot
+rotation lives in one program.
+
+``interpret=None`` resolves by backend: compiled on TPU, interpret mode
+elsewhere (this CPU container).  Older JAX releases lack DMA semantics in
+interpret mode; :func:`dma_supported` probes once and ``cached_gather``
+falls back to the select-based single-buffered kernel
+(:func:`cached_gather_select`) so the op keeps working there.
 """
 
 from __future__ import annotations
@@ -23,12 +37,160 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["cached_gather"]
+__all__ = ["cached_gather", "cached_gather_select", "default_interpret", "dma_supported"]
 
 LANE = 128
 
 
-def _kernel(idx_ref, pos_raw_ref, pos_clamped_ref, hot_ref, host_ref, out_ref):
+def default_interpret() -> bool:
+    """Compiled on TPU, interpret mode everywhere else (CPU validation)."""
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------- double buffered
+
+
+def _db_kernel(
+    idx_ref,
+    pos_raw_ref,
+    pos_clamped_ref,
+    hot_hbm,
+    host_hbm,
+    out_hbm,
+    scratch,
+    in_sems,
+    out_sems,
+    *,
+    n_rows: int,
+    block_f: int,
+    n_buffers: int,
+):
+    j = pl.program_id(0)
+    col = pl.ds(j * block_f, block_f)
+
+    # The DMA descriptor is rebuilt identically at start and wait time (the
+    # semaphore carries the in-flight state); the hit test picks the source
+    # table, so only the winning row is ever copied.
+    def in_copy(slot, i, op):
+        hit = pos_raw_ref[i] >= 0
+
+        @pl.when(hit)
+        def _():
+            op(
+                pltpu.make_async_copy(
+                    hot_hbm.at[pos_clamped_ref[i], col], scratch.at[slot], in_sems.at[slot]
+                )
+            )
+
+        @pl.when(~hit)
+        def _():
+            op(
+                pltpu.make_async_copy(
+                    host_hbm.at[idx_ref[i], col], scratch.at[slot], in_sems.at[slot]
+                )
+            )
+
+    def out_copy(slot, i):
+        return pltpu.make_async_copy(scratch.at[slot], out_hbm.at[i, col], out_sems.at[slot])
+
+    if n_buffers == 1:  # serial ablation: copy, wait, write back, wait
+        def serial_body(i, _):
+            in_copy(0, i, lambda dma: dma.start())
+            in_copy(0, i, lambda dma: dma.wait())
+            dma = out_copy(0, i)
+            dma.start()
+            dma.wait()
+            return 0
+
+        jax.lax.fori_loop(0, n_rows, serial_body, 0)
+        return
+
+    in_copy(0, 0, lambda dma: dma.start())
+
+    def body(i, _):
+        slot = jax.lax.rem(i, n_buffers)
+        nxt = jax.lax.rem(i + 1, n_buffers)
+
+        @pl.when(i + 1 < n_rows)
+        def _():
+            # Reusing a slot: its previous write-back must have drained
+            # before the incoming copy may overwrite the tile.
+            @pl.when(i + 1 >= n_buffers)
+            def _():
+                out_copy(nxt, i + 1 - n_buffers).wait()
+
+            in_copy(nxt, i + 1, lambda dma: dma.start())
+
+        in_copy(slot, i, lambda dma: dma.wait())
+        out_copy(slot, i).start()
+        return 0
+
+    jax.lax.fori_loop(0, n_rows, body, 0)
+
+    tail = jnp.minimum(n_rows, n_buffers)
+
+    def drain(k, _):
+        i = n_rows - tail + k
+
+        @pl.when(i < n_rows)
+        def _():
+            out_copy(jax.lax.rem(i, n_buffers), i).wait()
+
+        return 0
+
+    jax.lax.fori_loop(0, tail, drain, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "gather_buffers", "interpret"))
+def _cached_gather_db(
+    hot_table: jax.Array,
+    host_table: jax.Array,
+    indices: jax.Array,
+    positions: jax.Array,
+    *,
+    block_f: int,
+    gather_buffers: int,
+    interpret: bool,
+) -> jax.Array:
+    s = indices.shape[0]
+    f = host_table.shape[1]
+    block_f = min(block_f, f)
+    if f % block_f != 0:
+        pad = block_f - f % block_f
+        hot_table = jnp.pad(hot_table, ((0, 0), (0, pad)))
+        host_table = jnp.pad(host_table, ((0, 0), (0, pad)))
+    fp = host_table.shape[1]
+
+    idx = jnp.clip(indices.astype(jnp.int32), 0, host_table.shape[0] - 1)
+    pos_raw = positions.astype(jnp.int32)
+    pos_clamped = jnp.clip(pos_raw, 0, hot_table.shape[0] - 1)
+
+    out = pl.pallas_call(
+        functools.partial(_db_kernel, n_rows=s, block_f=block_f, n_buffers=gather_buffers),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(fp // block_f,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),  # hot table stays in HBM
+                pl.BlockSpec(memory_space=pltpu.ANY),  # host table stays in HBM
+            ],
+            out_specs=pl.BlockSpec(memory_space=pltpu.ANY),  # the batch buffer
+            scratch_shapes=[
+                pltpu.VMEM((gather_buffers, block_f), host_table.dtype),
+                pltpu.SemaphoreType.DMA((gather_buffers,)),
+                pltpu.SemaphoreType.DMA((gather_buffers,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((s, fp), host_table.dtype),
+        interpret=interpret,
+    )(idx, pos_raw, pos_clamped, hot_table, host_table)
+    return out[:, :f]
+
+
+# ------------------------------------------------- select-based (fallback)
+
+
+def _select_kernel(idx_ref, pos_raw_ref, pos_clamped_ref, hot_ref, host_ref, out_ref):
     del idx_ref, pos_clamped_ref
     i = pl.program_id(0)
     hit = pos_raw_ref[i] >= 0
@@ -36,7 +198,7 @@ def _kernel(idx_ref, pos_raw_ref, pos_clamped_ref, hot_ref, host_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
-def cached_gather(
+def cached_gather_select(
     hot_table: jax.Array,  # [H, F]
     host_table: jax.Array,  # [N, F]
     indices: jax.Array,  # int32 [S]
@@ -45,6 +207,10 @@ def cached_gather(
     block_f: int = 512,
     interpret: bool = True,
 ) -> jax.Array:
+    """Single-buffered variant: BlockSpec index_maps stage BOTH candidate
+    tiles per row and the body selects between them — twice the DMA traffic
+    of the double-buffered kernel, but it needs no DMA primitives, so it is
+    the fallback on JAX versions whose interpret mode lacks them."""
     if hot_table.shape[1] != host_table.shape[1]:
         raise ValueError("hot and host tables must share the feature dim")
     s = indices.shape[0]
@@ -62,7 +228,7 @@ def cached_gather(
 
     grid = (s, fp // block_f)
     out = pl.pallas_call(
-        _kernel,
+        _select_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=grid,
@@ -78,3 +244,72 @@ def cached_gather(
         interpret=interpret,
     )(idx, pos_raw, pos_clamped, hot_table, host_table)
     return out[:, :f]
+
+
+# ------------------------------------------------------------- public entry
+
+_DMA_PROBE: bool | None = None
+
+
+def dma_supported() -> bool:
+    """Once per process: can this backend/JAX run the manual-DMA kernel?
+
+    TPU always can; in interpret mode older JAX releases lack DMA
+    semantics, so a tiny probe call decides (and its failure is the
+    fallback signal, not an error)."""
+    global _DMA_PROBE
+    if jax.default_backend() == "tpu":
+        return True
+    if _DMA_PROBE is None:
+        try:
+            hot = jnp.zeros((1, LANE), jnp.float32)
+            host = jnp.ones((2, LANE), jnp.float32)
+            idx = jnp.zeros((2,), jnp.int32)
+            pos = jnp.array([-1, 0], jnp.int32)
+            out = _cached_gather_db(
+                hot, host, idx, pos, block_f=LANE, gather_buffers=2, interpret=True
+            )
+            _DMA_PROBE = bool(out[0, 0] == 1.0 and out[1, 0] == 0.0)
+        except Exception:  # pragma: no cover - old-JAX interpret mode
+            _DMA_PROBE = False
+    return _DMA_PROBE
+
+
+def cached_gather(
+    hot_table: jax.Array,  # [H, F]
+    host_table: jax.Array,  # [N, F]
+    indices: jax.Array,  # int32 [S]
+    positions: jax.Array,  # int32 [S] (slot or -1)
+    *,
+    block_f: int = 512,
+    gather_buffers: int = 2,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Double-buffered two-source gather; see the module docstring.
+
+    ``interpret=None`` resolves by backend (compiled on TPU, interpret
+    elsewhere); ``gather_buffers`` is the number of VMEM row-tile slots
+    (1 = serial copies, 2 = double buffering, the default).  Falls back to
+    :func:`cached_gather_select` where interpret-mode DMA is unavailable.
+    """
+    if hot_table.shape[1] != host_table.shape[1]:
+        raise ValueError("hot and host tables must share the feature dim")
+    if gather_buffers < 1:
+        raise ValueError(f"gather_buffers must be >= 1, got {gather_buffers}")
+    if interpret is None:
+        interpret = default_interpret()
+    if indices.shape[0] == 0:  # nothing to gather; skip the kernel launch
+        return jnp.zeros((0, host_table.shape[1]), host_table.dtype)
+    if not dma_supported():
+        return cached_gather_select(
+            hot_table, host_table, indices, positions, block_f=block_f, interpret=interpret
+        )
+    return _cached_gather_db(
+        hot_table,
+        host_table,
+        indices,
+        positions,
+        block_f=block_f,
+        gather_buffers=gather_buffers,
+        interpret=interpret,
+    )

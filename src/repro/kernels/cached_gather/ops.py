@@ -1,21 +1,21 @@
 """Public op: cached feature gather (kernel on TPU, oracle elsewhere).
 
-On a real TPU deployment ``use_kernel=True`` routes through the Pallas
-kernel (compiled); on this CPU container the kernel runs in interpret mode
-for validation and the oracle is the production path.  Cost note: the
-select-based kernel DMAs both candidate tiles per row; a two-pass
-hit-partitioned variant would halve DMA traffic at the cost of a stable
-partition — recorded as a §Perf candidate.
+``use_kernel=True`` routes through the double-buffered Pallas kernel —
+compiled when the backend is TPU, interpret mode elsewhere (the default is
+resolved per backend by :func:`~repro.kernels.cached_gather.kernel.default_interpret`,
+no longer hardcoded).  The kernel DMAs only the winning source tile per
+row (hit → hot cache, miss → host table) and overlaps row ``i+1``'s copy
+with row ``i``'s write-back via ``gather_buffers`` VMEM slots.
 """
 
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.cached_gather.kernel import cached_gather
+from repro.kernels.cached_gather.kernel import cached_gather, default_interpret
 from repro.kernels.cached_gather.ref import cached_gather_ref
 
-__all__ = ["cached_feature_gather"]
+__all__ = ["cached_feature_gather", "default_interpret"]
 
 
 def cached_feature_gather(
@@ -25,7 +25,8 @@ def cached_feature_gather(
     positions: jax.Array,
     *,
     use_kernel: bool = False,
-    interpret: bool = True,
+    gather_buffers: int = 2,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Gather feature rows via DCI's dual-source cache.
 
@@ -36,13 +37,24 @@ def cached_feature_gather(
       indices: ``int32[S]`` — node ids to gather (``0 <= id < N``).
       positions: ``int32[S]`` — each id's slot in ``hot_table``, or ``-1``
         for a cache miss (the ``FeatureStore.position_map`` lookup).
-      use_kernel: route through the Pallas kernel (compiled on TPU,
-        ``interpret=True`` for CPU validation) instead of the jnp oracle.
+      use_kernel: route through the Pallas kernel instead of the jnp
+        oracle.
+      gather_buffers: VMEM row-tile slots in the kernel (1 = serial
+        copies, 2 = double buffering).
+      interpret: force interpret mode on/off; ``None`` resolves by backend
+        (compiled on TPU, interpret elsewhere).
 
     Returns:
       ``f32[S, F]`` — row ``i`` is ``hot_table[positions[i]]`` on a hit,
       ``host_table[indices[i]]`` on a miss.
     """
     if use_kernel:
-        return cached_gather(hot_table, host_table, indices, positions, interpret=interpret)
+        return cached_gather(
+            hot_table,
+            host_table,
+            indices,
+            positions,
+            gather_buffers=gather_buffers,
+            interpret=interpret,
+        )
     return cached_gather_ref(hot_table, host_table, indices, positions)

@@ -22,7 +22,6 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.launch.mesh import make_production_mesh

@@ -29,7 +29,6 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.analysis.hlo import analyze_hlo
 from repro.launch.mesh import HW, make_production_mesh

@@ -43,6 +43,26 @@ def main() -> None:
         "timing), 2+ = overlap batch i+1's sample/gather with batch i's compute",
     )
     ap.add_argument(
+        "--prefetch",
+        action="store_true",
+        help="stage batch i+1's MISSED host feature rows onto the device "
+        "(jax.device_put) while batch i's forward runs; outputs and hit "
+        "accounting are identical, only where the miss bytes move changes",
+    )
+    ap.add_argument(
+        "--use-kernel",
+        action="store_true",
+        help="route feature gathers through the double-buffered Pallas "
+        "cached_gather kernel (compiled on TPU, interpret mode elsewhere)",
+    )
+    ap.add_argument(
+        "--gather-buffers",
+        type=int,
+        default=2,
+        help="kernel VMEM row-tile slots: 1 = serial copies, 2 = double "
+        "buffering (only meaningful with --use-kernel)",
+    )
+    ap.add_argument(
         "--streams",
         type=int,
         default=1,
@@ -80,6 +100,9 @@ def main() -> None:
         total_cache_bytes=int(args.cache_mb * 1e6),
         n_presample=args.presample,
         stream_seeds=stream_seeds,
+        prefetch=args.prefetch,
+        use_kernel=args.use_kernel,
+        gather_buffers=args.gather_buffers,
     )
     if args.streams > 1:
         server = MultiStreamServer(

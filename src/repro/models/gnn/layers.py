@@ -10,7 +10,6 @@ aggregation is a plain reshape + reduction — MXU-friendly, no ragged ops.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 __all__ = ["sage_layer", "gcn_layer", "split_frontier"]
 

@@ -8,7 +8,6 @@ Pure-JAX functional models: ``init_params`` builds a parameter pytree,
 from __future__ import annotations
 
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ baseline stays paper-naive.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 __all__ = [

@@ -12,8 +12,13 @@ Batch execution is delegated to the staged executor in
 ``depth=1`` is the paper's serial loop (a device sync after every stage —
 the timing semantics of Fig. 1/7), ``depth>1`` keeps that many batches in
 flight so batch *i+1*'s sampling/gather overlap batch *i*'s GNN forward.
-Outputs, hit counts, and batch order are identical at any depth; only the
-synchronization pattern (and therefore wall clock) changes.
+Three further execution knobs — ``prefetch`` (stage batch *i+1*'s missed
+host feature rows onto the device during batch *i*'s forward),
+``use_kernel`` (route gathers through the double-buffered Pallas
+``cached_gather`` kernel), and ``gather_buffers`` (the kernel's VMEM slot
+count) — default from the prepared pipeline.  Outputs, hit counts, and
+batch order are identical under every knob combination; only where the
+bytes move (and therefore wall clock) changes.
 """
 
 from __future__ import annotations
@@ -76,14 +81,23 @@ class InferenceReport:
     feat_lookups: int
     feat_row_bytes: int
     pipeline_depth: int = 1
+    prefetch: bool = False
+    prefetch_seconds: float = 0.0
+    prefetched_rows: int = 0
 
     @property
     def total_seconds(self) -> float:
         # With pipeline_depth > 1 the stage seconds are dispatch times plus
         # each stage's retire-boundary drain, so the sum still tracks the
         # loop's wall clock — overlapped waiting is simply no longer
-        # double-counted across stages.
-        return self.sample_seconds + self.feature_seconds + self.compute_seconds
+        # double-counted across stages.  The prefetch stage (off by
+        # default) books the host→device staging of missed rows.
+        return (
+            self.sample_seconds
+            + self.prefetch_seconds
+            + self.feature_seconds
+            + self.compute_seconds
+        )
 
     @property
     def adj_hit_rate(self) -> float:
@@ -110,7 +124,9 @@ class InferenceReport:
             "policy": self.policy,
             "batches": self.num_batches,
             "pipeline_depth": self.pipeline_depth,
+            "prefetch": self.prefetch,
             "sample_s": round(self.sample_seconds, 4),
+            "prefetch_s": round(self.prefetch_seconds, 4),
             "feature_s": round(self.feature_seconds, 4),
             "compute_s": round(self.compute_seconds, 4),
             "total_s": round(self.total_seconds, 4),
@@ -149,16 +165,26 @@ class StreamRuntime:
         num_nodes: int,
         key,
         collect_outputs: bool = False,
+        prefetch: bool | None = None,
+        use_kernel: bool | None = None,
+        gather_buffers: int | None = None,
     ):
         self.pipe = pipe
         self.params = params
         self.model = model
         self.fanouts = tuple(fanouts)
         self.key = key
+        # Execution knobs default from the prepared pipeline so every
+        # consumer (engine, presampler, serving layer) resolves them the
+        # same way; explicit arguments override per run.
+        self.prefetch = pipe.prefetch if prefetch is None else prefetch
+        self.use_kernel = pipe.use_kernel if use_kernel is None else use_kernel
+        self.gather_buffers = pipe.gather_buffers if gather_buffers is None else gather_buffers
         self.adj_hits = 0
         self.adj_lookups = 0
         self.feat_hits = 0
         self.feat_lookups = 0
+        self.prefetched_rows = 0
         self.outputs: list[np.ndarray] | None = [] if collect_outputs else None
         # RAIN cross-batch reuse state (only touched when the policy asks).
         self._prev_map = np.full(num_nodes, -1, np.int64)
@@ -175,19 +201,40 @@ class StreamRuntime:
         bh, bt = block.adj_hit_stats()
         return block, bh, bt
 
+    def prefetch_stage(self, ctx):
+        """Stage the *missed* host rows for this batch onto the device.
+
+        Sits between ``sample`` and ``feature``: with ``depth > 1`` this
+        runs for batch ``i+1`` while batch ``i``'s GNN forward is still in
+        flight, so the host→device copy of the miss rows hides behind
+        compute — the transfer-inefficiency DCI targets on the miss path.
+        The feature stage then reads misses from the staged buffer; the
+        hit mask (and all accounting) still comes from ``position_map``,
+        so hit/miss counts are bit-identical with prefetch on or off."""
+        store = self.pipe.caches.store
+        nodes = np.asarray(ctx.outputs["sample"][0].input_nodes)
+        staged = store.prefetch_misses(nodes)
+        self.prefetched_rows += staged.num_miss
+        return staged
+
     def feature(self, ctx):
         store = self.pipe.caches.store
         block = ctx.outputs["sample"][0]
+        gather_kw = dict(
+            use_kernel=self.use_kernel,
+            gather_buffers=self.gather_buffers,
+            prefetched=ctx.outputs.get("prefetch"),
+        )
         if self.pipe.reuse_prev_batch and self._prev_feats is not None:
             nodes = np.asarray(block.input_nodes)
             pos = self._prev_map[nodes]
             hit_np = pos >= 0
             reused = self._prev_feats[jnp.asarray(np.maximum(pos, 0))]
-            fresh, _ = store.gather(block.input_nodes)
+            fresh, _ = store.gather(block.input_nodes, **gather_kw)
             feats = jnp.where(jnp.asarray(hit_np)[:, None], reused, fresh)
             hit = jnp.asarray(hit_np)
         else:
-            feats, hit = store.gather(block.input_nodes)
+            feats, hit = store.gather(block.input_nodes, **gather_kw)
         if self.pipe.reuse_prev_batch:
             # The *next* batch's gather reads this state, so it must be
             # updated here rather than at retire time — with depth > 1
@@ -217,13 +264,20 @@ class StreamRuntime:
             self.outputs.append(np.asarray(ctx.outputs["compute"]))
 
 
-def stream_stages(runtime_of) -> list[Stage]:
-    """The sample → feature → compute pipeline over :class:`StreamRuntime`s.
+def stream_stages(runtime_of, *, prefetch: bool = False) -> list[Stage]:
+    """The sample → [prefetch] → feature → compute pipeline over
+    :class:`StreamRuntime`s.
 
     ``runtime_of(ctx)`` resolves the runtime a batch belongs to: the engine
     passes a constant (one stream), the serving layer reads it off
     ``ctx.stream``.  Sync values mirror what each stage leaves in flight —
     they are what the serial clock blocks on and the overlap clock drains.
+
+    ``prefetch=True`` inserts the miss-row staging stage between sample
+    and feature (see :meth:`StreamRuntime.prefetch_stage`); the executor
+    drops the ``None`` placeholder when it is off, so the stage list —
+    and with it the depth=1 serial timing semantics — is unchanged by
+    default.
     """
     return [
         Stage(
@@ -231,6 +285,13 @@ def stream_stages(runtime_of) -> list[Stage]:
             lambda c: runtime_of(c).sample(c),
             lambda c: (c.outputs["sample"][0].frontiers[-1], c.outputs["sample"][1]),
         ),
+        Stage(
+            "prefetch",
+            lambda c: runtime_of(c).prefetch_stage(c),
+            lambda c: c.outputs["prefetch"],
+        )
+        if prefetch
+        else None,
         Stage(
             "feature",
             lambda c: runtime_of(c).feature(c),
@@ -274,6 +335,9 @@ class GNNInferenceEngine:
         n_presample: int = 8,
         pipeline_depth: int = 1,
         stream_seeds: list[int] | None = None,
+        prefetch: bool = False,
+        use_kernel: bool = False,
+        gather_buffers: int = 2,
     ):
         # Presampling defaults to serial (depth=1): its per-stage times feed
         # Eq. 1, and the paper's split assumes fully synchronized stages.
@@ -281,6 +345,9 @@ class GNNInferenceEngine:
         # shifts the measured sample:feature ratio toward dispatch cost.
         # ``stream_seeds`` profiles the union workload of several request
         # streams (multi-stream serving) at the same total presample budget.
+        # ``prefetch`` / ``use_kernel`` / ``gather_buffers`` are recorded on
+        # the prepared pipeline as the default execution knobs for every
+        # run (and every serving stream) against it.
         self.pipeline = prepare(
             policy,
             self.dataset,
@@ -291,6 +358,9 @@ class GNNInferenceEngine:
             seed=self.seed,
             pipeline_depth=pipeline_depth,
             stream_seeds=stream_seeds,
+            prefetch=prefetch,
+            use_kernel=use_kernel,
+            gather_buffers=gather_buffers,
         )
         return self.pipeline
 
@@ -312,15 +382,58 @@ class GNNInferenceEngine:
             order = order[:max_batches]
         return [arr[i] for i in order]
 
-    def warmup(self, seeds: np.ndarray) -> None:
+    def warmup(
+        self,
+        seeds: np.ndarray,
+        *,
+        prefetch: bool | None = None,
+        use_kernel: bool | None = None,
+        gather_buffers: int | None = None,
+    ) -> None:
         """Trigger compilation outside any timed region (cache array shapes
         differ per policy/budget, so each prepared pipeline compiles once —
-        shared by every stream that serves against it)."""
+        shared by every stream that serves against it).  The gather is
+        warmed with the same execution knobs the run will use (prefetch
+        scatter / kernel route compile to different programs)."""
         if self.pipeline is None:
             raise RuntimeError("call prepare() first")
-        dgraph, store = self.pipeline.caches.dgraph, self.pipeline.caches.store
+        pipe = self.pipeline
+        prefetch = pipe.prefetch if prefetch is None else prefetch
+        use_kernel = pipe.use_kernel if use_kernel is None else use_kernel
+        gather_buffers = pipe.gather_buffers if gather_buffers is None else gather_buffers
+        dgraph, store = pipe.caches.dgraph, pipe.caches.store
         wblock = sample_blocks(jax.random.PRNGKey(self.seed + 1), dgraph, jnp.asarray(seeds), self.fanouts)
-        wfeats, _ = store.gather(wblock.input_nodes)
+        prefetched = store.prefetch_misses(np.asarray(wblock.input_nodes)) if prefetch else None
+        wfeats, _ = store.gather(
+            wblock.input_nodes,
+            use_kernel=use_kernel,
+            gather_buffers=gather_buffers,
+            prefetched=prefetched,
+        )
+        if prefetch:
+            # The miss count varies per batch, so the staged pack's padded
+            # bucket size — and with it the consuming gather program —
+            # varies too.  Warm every possible bucket (O(log S) of them)
+            # with synthetic all-pad packs, so no batch's first-of-a-bucket
+            # gather compiles inside a timed run.
+            from repro.graph.features import PrefetchedMisses
+
+            s = int(wblock.input_nodes.shape[0])
+            bucket = 1
+            while bucket <= s:
+                synth = PrefetchedMisses(
+                    rows=jnp.zeros((min(bucket, s), store.feat_dim), store.host_table.dtype),
+                    idx=jnp.full((min(bucket, s),), s, jnp.int32),
+                    pack_pos=jnp.zeros((s,), jnp.int32),
+                    num_miss=0,
+                )
+                store.gather(
+                    wblock.input_nodes,
+                    use_kernel=use_kernel,
+                    gather_buffers=gather_buffers,
+                    prefetched=synth,
+                )
+                bucket <<= 1
         jax.block_until_ready(
             gnn_models.forward(self.params, wfeats, model=self.model, fanouts=self.fanouts)
         )
@@ -333,13 +446,20 @@ class GNNInferenceEngine:
         pipeline_depth: int | None = None,
         collect_outputs: bool = False,
         batches: list[np.ndarray] | None = None,
+        prefetch: bool | None = None,
+        use_kernel: bool | None = None,
+        gather_buffers: int | None = None,
     ) -> InferenceReport:
         """Run inference over the dataset's test batches (or explicit seed
         ``batches``) and return the stage-time / hit-rate report.
 
         ``batches`` overrides the dataset-derived schedule (and RAIN's
         ``batch_order``) — the serving layer and the equivalence tests use
-        it to run an exact per-stream batch list."""
+        it to run an exact per-stream batch list.  ``prefetch`` /
+        ``use_kernel`` / ``gather_buffers`` default from the prepared
+        pipeline; outputs and hit accounting are identical with any
+        combination (equivalence-tested), only where the miss bytes move
+        (and therefore wall clock) changes."""
         if self.pipeline is None:
             raise RuntimeError("call prepare() first")
         pipe = self.pipeline
@@ -347,7 +467,12 @@ class GNNInferenceEngine:
         if batches is None:
             batches = self._batches(max_batches)
         if warmup:
-            self.warmup(batches[0])
+            self.warmup(
+                batches[0],
+                prefetch=prefetch,
+                use_kernel=use_kernel,
+                gather_buffers=gather_buffers,
+            )
 
         # All cross-batch state (RNG stream, RAIN's reuse map, counters)
         # lives in the StreamRuntime; stage methods run in batch order at
@@ -360,10 +485,13 @@ class GNNInferenceEngine:
             num_nodes=self.dataset.num_nodes,
             key=jax.random.PRNGKey(self.seed + 1),
             collect_outputs=collect_outputs,
+            prefetch=prefetch,
+            use_kernel=use_kernel,
+            gather_buffers=gather_buffers,
         )
         clock = StageClock(overlap=depth > 1)
         executor = PipelinedExecutor(
-            stream_stages(lambda c: rt),
+            stream_stages(lambda c: rt, prefetch=rt.prefetch),
             depth=depth,
             clock=clock,
             on_retire=rt.record,
@@ -384,4 +512,7 @@ class GNNInferenceEngine:
             feat_lookups=rt.feat_lookups,
             feat_row_bytes=self.dataset.feature_nbytes_per_row(),
             pipeline_depth=depth,
+            prefetch=rt.prefetch,
+            prefetch_seconds=clock.total("prefetch"),
+            prefetched_rows=rt.prefetched_rows,
         )

@@ -88,6 +88,8 @@ class StreamReport:
     feat_lookups: int
     mean_latency_s: float
     max_latency_s: float
+    prefetch_seconds: float = 0.0
+    prefetched_rows: int = 0
 
     @property
     def adj_hit_rate(self) -> float:
@@ -124,6 +126,7 @@ class ServeReport:
     wall_seconds: float
     feat_row_bytes: int
     streams: list[StreamReport]
+    prefetch: bool = False
 
     @property
     def total_batches(self) -> int:
@@ -180,6 +183,7 @@ class ServeReport:
             "policy": self.policy,
             "streams": self.num_streams,
             "depth": self.depth,
+            "prefetch": self.prefetch,
             "batches": self.total_batches,
             "wall_s": round(self.wall_seconds, 4),
             "throughput_seeds_per_s": round(self.throughput_seeds_per_s, 1),
@@ -205,6 +209,14 @@ class MultiStreamServer:
     least-loaded one is admitted anyway — admission must make progress
     (retires only happen after the next dispatch), so the cap bounds
     *relative* occupancy rather than deadlocking the window.
+
+    ``prefetch`` (default: the prepared pipeline's knob) inserts the
+    miss-row staging stage into the shared schedule.  Per-stream prefetch
+    respects the same backpressure cap automatically: a stream's staged
+    buffers live in its admitted batches' contexts and are released at
+    retire, so a stream can never hold more than its in-flight cap's
+    worth of prefetched buffers — admission (and with it the next
+    ``device_put``) is what the cap throttles.
     """
 
     def __init__(
@@ -213,6 +225,9 @@ class MultiStreamServer:
         *,
         depth: int = 2,
         max_inflight_per_stream: int | None = None,
+        prefetch: bool | None = None,
+        use_kernel: bool | None = None,
+        gather_buffers: int | None = None,
     ):
         if engine.pipeline is None:
             raise RuntimeError("prepare() the engine before constructing the server")
@@ -220,6 +235,10 @@ class MultiStreamServer:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self.engine = engine
         self.depth = depth
+        pipe = engine.pipeline
+        self.prefetch = pipe.prefetch if prefetch is None else prefetch
+        self.use_kernel = pipe.use_kernel if use_kernel is None else use_kernel
+        self.gather_buffers = pipe.gather_buffers if gather_buffers is None else gather_buffers
         self.max_inflight = (
             max_inflight_per_stream if max_inflight_per_stream is not None else depth
         )
@@ -253,6 +272,9 @@ class MultiStreamServer:
             num_nodes=self.engine.dataset.num_nodes,
             key=jax.random.PRNGKey(seed + 1),
             collect_outputs=collect_outputs,
+            prefetch=self.prefetch,
+            use_kernel=self.use_kernel,
+            gather_buffers=self.gather_buffers,
         )
         state = StreamState(
             stream_id=sid,
@@ -307,9 +329,14 @@ class MultiStreamServer:
             raise RuntimeError("add_stream() at least one stream before run()")
         if warmup:
             first = next(s for s in self.streams if s.queue)
-            self.engine.warmup(first.queue[0])
+            self.engine.warmup(
+                first.queue[0],
+                prefetch=self.prefetch,
+                use_kernel=self.use_kernel,
+                gather_buffers=self.gather_buffers,
+            )
         executor = PipelinedExecutor(
-            stream_stages(lambda c: c.stream.runtime),
+            stream_stages(lambda c: c.stream.runtime, prefetch=self.prefetch),
             depth=self.depth,
             clock_for=lambda c: c.stream.clock,
             on_retire=self._on_retire,
@@ -325,6 +352,7 @@ class MultiStreamServer:
             wall_seconds=wall,
             feat_row_bytes=self.engine.dataset.feature_nbytes_per_row(),
             streams=[self._stream_report(s) for s in self.streams],
+            prefetch=self.prefetch,
         )
 
     def _stream_report(self, s: StreamState) -> StreamReport:
@@ -343,6 +371,8 @@ class MultiStreamServer:
             feat_lookups=rt.feat_lookups,
             mean_latency_s=float(np.mean(s.latencies)) if s.latencies else 0.0,
             max_latency_s=float(np.max(s.latencies)) if s.latencies else 0.0,
+            prefetch_seconds=s.clock.total("prefetch"),
+            prefetched_rows=rt.prefetched_rows,
         )
 
 

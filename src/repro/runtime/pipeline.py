@@ -27,6 +27,19 @@ executor drives both the inference engine (runtime/gnn_engine.py) and the
 pre-sampling profiler (core/presample.py), so Eq. 1 stage times and the
 cache-filling visit counts come from one code path.
 
+Prefetch boundary
+-----------------
+Because a batch's stages dispatch back-to-back while *earlier* batches are
+still in flight, any stage inserted between two others is a prefetch hook:
+a stage placed between ``sample`` and ``feature`` runs for batch ``i+1``
+while batch ``i``'s compute occupies the device — the boundary the
+feature-miss prefetch stage (``StreamRuntime.prefetch_stage``) uses to
+``jax.device_put`` missed host rows ahead of the gather that consumes
+them.  Optional stages are passed as ``None`` entries in ``stages`` and
+dropped, so call sites can write ``[sample, prefetch if on else None,
+feature, compute]`` without changing the executor schedule when the knob
+is off.
+
 Multi-stream
 ------------
 Batches from several independent request streams can interleave through
@@ -99,7 +112,7 @@ class PipelinedExecutor:
 
     def __init__(
         self,
-        stages: Sequence[Stage],
+        stages: Sequence[Stage | None],
         *,
         depth: int = 1,
         clock: StageClock | None = None,
@@ -108,6 +121,7 @@ class PipelinedExecutor:
     ):
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+        stages = [st for st in stages if st is not None]  # optional stages, off
         if not stages:
             raise ValueError("need at least one stage")
         self.stages = list(stages)

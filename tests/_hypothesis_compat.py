@@ -19,6 +19,16 @@ from __future__ import annotations
 
 import pytest
 
+__all__ = [
+    "HAVE_HYPOTHESIS",
+    "HealthCheck",
+    "assume",
+    "given",
+    "require",
+    "settings",
+    "st",
+]
+
 SKIP_REASON = "hypothesis not installed (pip install -r requirements-dev.txt)"
 
 try:

@@ -10,6 +10,27 @@ def small_dataset():
 
 
 @pytest.fixture(scope="session")
+def jit_warm(small_dataset):
+    """Compile the presample/sample/gather programs once per process.
+
+    jit compilation is per-process and would otherwise be charged to
+    whichever timing-sensitive test (prep-cost comparisons, stage-time
+    assertions) happens to run first in a cold process.  Tests that
+    compare wall clocks depend on this fixture instead of each warming
+    inline."""
+    from repro.core.policies import prepare
+
+    prepare(
+        "dci",
+        small_dataset,
+        total_cache_bytes=200_000,
+        fanouts=(3, 2),
+        batch_size=64,
+        n_presample=2,
+    )
+
+
+@pytest.fixture(scope="session")
 def tiny_dataset():
     return load_dataset("reddit", scale=0.001, seed=1)
 

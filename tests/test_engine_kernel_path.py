@@ -1,10 +1,10 @@
 """The Pallas cached_gather kernel is a drop-in for the store gather."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.graph.features import build_feature_cache
+from repro.graph.features import build_feature_cache, plain_feature_store
 
 
 def test_store_gather_kernel_parity(small_dataset, rng):
@@ -16,3 +16,40 @@ def test_store_gather_kernel_parity(small_dataset, rng):
     out, hit_k = store.gather(idx, use_kernel=True)
     np.testing.assert_array_equal(np.asarray(hit_ref), np.asarray(hit_k))
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_store_gather_prefetched_parity(small_dataset, rng, use_kernel):
+    """Prefetched miss rows are a bit-exact stand-in for the host table —
+    on the jnp path (scatter over the hot gather) and the kernel path
+    (row-aligned miss source)."""
+    ds = small_dataset
+    counts = rng.integers(0, 6, ds.num_nodes).astype(np.int64)
+    store = build_feature_cache(ds.features, counts, capacity_bytes=200_000)
+    idx_np = rng.integers(0, ds.num_nodes, 512)
+    idx = jnp.asarray(idx_np, jnp.int32)
+    ref, hit_ref = store.gather(idx)
+    staged = store.prefetch_misses(idx_np)
+    out, hit = store.gather(idx, use_kernel=use_kernel, prefetched=staged)
+    np.testing.assert_array_equal(np.asarray(hit_ref), np.asarray(hit))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_store_prefetch_all_miss_and_all_hit(small_dataset, rng):
+    ds = small_dataset
+    # all-miss: the no-cache store stages the whole row set (idx is None)
+    plain = plain_feature_store(ds.features)
+    idx_np = rng.integers(0, ds.num_nodes, 64)
+    staged = plain.prefetch_misses(idx_np)
+    assert staged.idx is None and staged.rows.shape == (64, plain.feat_dim)
+    out, hit = plain.gather(jnp.asarray(idx_np, jnp.int32), prefetched=staged)
+    np.testing.assert_array_equal(np.asarray(out), ds.features[idx_np])
+    assert not bool(np.asarray(hit).any())
+    # all-hit: a store caching everything stages an empty (padded) pack
+    counts = np.ones(ds.num_nodes, np.int64)
+    full = build_feature_cache(ds.features, counts, capacity_bytes=ds.features.nbytes)
+    staged = full.prefetch_misses(idx_np)
+    assert staged.idx is not None and int(np.asarray(staged.idx).min()) == 64  # all pads
+    out, hit = full.gather(jnp.asarray(idx_np, jnp.int32), prefetched=staged)
+    np.testing.assert_array_equal(np.asarray(out), ds.features[idx_np])
+    assert bool(np.asarray(hit).all())

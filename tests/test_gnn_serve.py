@@ -74,6 +74,43 @@ def test_per_stream_serial_equivalence(small_dataset, policy, depth):
             np.testing.assert_array_equal(a, b)
 
 
+def test_serve_prefetch_bit_identical_and_capped(small_dataset):
+    """Prefetch on the shared schedule: outputs and hit accounting are
+    bit-identical to the prefetch-off serve over the SAME prepared
+    pipeline, prefetched rows equal the aggregate misses, and per-stream
+    staging respects the backpressure cap (staged buffers only exist
+    inside admitted in-flight batches)."""
+    engine = _shared_engine(small_dataset)
+    queues = _queues(small_dataset)
+
+    def serve(prefetch):
+        server = MultiStreamServer(
+            engine, depth=2, max_inflight_per_stream=2, prefetch=prefetch
+        )
+        states = [
+            server.add_stream(q, seed=STREAM_SEEDS[i], collect_outputs=True)
+            for i, q in enumerate(queues)
+        ]
+        return server.run(), states
+
+    rep_off, _ = serve(False)
+    rep_on, states = serve(True)
+    assert rep_on.prefetch and not rep_off.prefetch
+    assert (rep_off.feat_hits, rep_off.feat_lookups) == (rep_on.feat_hits, rep_on.feat_lookups)
+    assert (rep_off.adj_hits, rep_off.adj_lookups) == (rep_on.adj_hits, rep_on.adj_lookups)
+    for s_off, s_on in zip(rep_off.streams, rep_on.streams):
+        assert (s_off.feat_hits, s_off.adj_hits) == (s_on.feat_hits, s_on.adj_hits)
+    total_prefetched = sum(s.prefetched_rows for s in rep_on.streams)
+    assert total_prefetched == rep_on.feat_lookups - rep_on.feat_hits
+    for st in states:
+        assert st.max_inflight_seen <= 2  # staged buffers bounded by the cap
+    # and stream outputs match a prefetch-off solo reference run exactly
+    for i, q in enumerate(queues):
+        _, ref_out = _reference_run(engine, q, STREAM_SEEDS[i])
+        for a, b in zip(ref_out, states[i].runtime.outputs):
+            np.testing.assert_array_equal(a, b)
+
+
 def test_single_stream_server_matches_engine(small_dataset):
     engine = _shared_engine(small_dataset)
     (queue,) = _queues(small_dataset, n=1, batches=4)

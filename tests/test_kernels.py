@@ -1,10 +1,16 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.cached_gather.kernel import cached_gather
+from repro.kernels.cached_gather.kernel import (
+    cached_gather,
+    cached_gather_select,
+    default_interpret,
+    dma_supported,
+)
 from repro.kernels.cached_gather.ref import cached_gather_ref
 from repro.kernels.flash_attention.kernel import flash_attention_2d
 from repro.kernels.flash_attention.ref import attention_ref
@@ -36,6 +42,82 @@ def test_cached_gather_all_hits_and_all_misses():
     np.testing.assert_allclose(np.asarray(all_hit), np.asarray(hot[:4]))
     all_miss = cached_gather(hot, host, idx, jnp.full((4,), -1, jnp.int32))
     np.testing.assert_allclose(np.asarray(all_miss), np.asarray(host[:4]))
+
+
+def test_cached_gather_empty_index_set():
+    """S=0: no kernel launch, just the empty batch buffer."""
+    hot = jnp.asarray(RNG.standard_normal((4, 96)), jnp.float32)
+    host = jnp.asarray(RNG.standard_normal((9, 96)), jnp.float32)
+    out = cached_gather(hot, host, jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32))
+    assert out.shape == (0, 96) and out.dtype == host.dtype
+
+
+@pytest.mark.parametrize("f", [96, 130, 250, 602])
+def test_cached_gather_non_vreg_feature_dims(f):
+    """Feature dims that are not multiples of the 128-lane VREG width:
+    pad-and-slice must stay bit-exact for every source row."""
+    hot = jnp.asarray(RNG.standard_normal((6, f)), jnp.float32)
+    host = jnp.asarray(RNG.standard_normal((40, f)), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, 40, 17), jnp.int32)
+    pos = jnp.asarray(RNG.integers(-1, 6, 17), jnp.int32)
+    out = cached_gather(hot, host, idx, pos)
+    ref = cached_gather_ref(hot, host, idx, pos)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("gather_buffers", [1, 2, 3, 4])
+def test_cached_gather_buffer_counts(gather_buffers):
+    """1 slot = serial copies, 2 = double buffering, more = deeper rotation;
+    the slot-reuse waits must keep every variant bit-exact."""
+    hot = jnp.asarray(RNG.standard_normal((8, 160)), jnp.float32)
+    host = jnp.asarray(RNG.standard_normal((64, 160)), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, 64, 33), jnp.int32)
+    pos = jnp.asarray(RNG.integers(-1, 8, 33), jnp.int32)
+    out = cached_gather(hot, host, idx, pos, gather_buffers=gather_buffers)
+    ref = cached_gather_ref(hot, host, idx, pos)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_cached_gather_rejects_bad_buffers():
+    hot = jnp.zeros((1, 8), jnp.float32)
+    host = jnp.zeros((2, 8), jnp.float32)
+    idx = jnp.zeros((2,), jnp.int32)
+    with pytest.raises(ValueError):
+        cached_gather(hot, host, idx, idx, gather_buffers=0)
+
+
+def test_cached_gather_select_fallback_matches_ref():
+    """The select-based fallback (for JAX versions without interpret-mode
+    DMA) must stay parity-tested alongside the double-buffered kernel."""
+    hot = jnp.asarray(RNG.standard_normal((8, 160)), jnp.float32)
+    host = jnp.asarray(RNG.standard_normal((30, 160)), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, 30, 11), jnp.int32)
+    pos = jnp.asarray(RNG.integers(-1, 8, 11), jnp.int32)
+    out = cached_gather_select(hot, host, idx, pos, interpret=True)
+    ref = cached_gather_ref(hot, host, idx, pos)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_interpret_default_resolves_by_backend():
+    assert default_interpret() == (jax.default_backend() != "tpu")
+    # On TPU the DMA path is always available; elsewhere the probe decides
+    # (and on this container's JAX the interpret-mode DMA path exists).
+    assert isinstance(dma_supported(), bool)
+
+
+@pytest.mark.skipif(
+    jax.default_backend() != "tpu", reason="compiled Pallas backend (TPU) not available"
+)
+def test_cached_gather_compiled_matches_interpret():
+    """Where a compiled backend exists, compiled and interpret mode must
+    agree bit-for-bit (same DMA schedule, same select)."""
+    hot = jnp.asarray(RNG.standard_normal((8, 256)), jnp.float32)
+    host = jnp.asarray(RNG.standard_normal((64, 256)), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, 64, 33), jnp.int32)
+    pos = jnp.asarray(RNG.integers(-1, 8, 33), jnp.int32)
+    compiled = cached_gather(hot, host, idx, pos, interpret=False)
+    interpreted = cached_gather(hot, host, idx, pos, interpret=True)
+    np.testing.assert_array_equal(np.asarray(compiled), np.asarray(interpreted))
 
 
 @pytest.mark.parametrize("s,fo,f", [(32, 5, 128), (7, 2, 602), (100, 15, 64), (1, 1, 1)])

@@ -54,6 +54,48 @@ def test_depth_equivalence(small_dataset, policy, depth):
         np.testing.assert_array_equal(a, b)
 
 
+@pytest.mark.parametrize("policy", ["dci", "dgl", "rain"])
+@pytest.mark.parametrize(
+    "depth,prefetch,use_kernel",
+    [(1, True, False), (3, True, False), (2, True, True), (2, False, True)],
+)
+def test_knob_equivalence(small_dataset, policy, depth, prefetch, use_kernel):
+    """The new execution knobs (miss-path prefetch, Pallas kernel route)
+    never change outputs or hit accounting — only where the miss bytes
+    move.  Every combination must match the plain serial run bit for bit."""
+    serial, piped = _paired_engines(small_dataset, policy)
+    r1 = serial.run(max_batches=4, pipeline_depth=1, collect_outputs=True)
+    o1 = serial.last_outputs
+    r2 = piped.run(
+        max_batches=4,
+        pipeline_depth=depth,
+        collect_outputs=True,
+        prefetch=prefetch,
+        use_kernel=use_kernel,
+    )
+    o2 = piped.last_outputs
+    assert r2.prefetch == prefetch
+    assert (r1.adj_hits, r1.adj_lookups) == (r2.adj_hits, r2.adj_lookups)
+    assert (r1.feat_hits, r1.feat_lookups) == (r2.feat_hits, r2.feat_lookups)
+    if prefetch and policy != "rain":
+        # every miss was staged ahead of its gather (RAIN reuses the
+        # previous batch first, so its prefetch count is over-staged)
+        assert r2.prefetched_rows == r2.feat_lookups - r2.feat_hits
+    for a, b in zip(o1, o2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_prefetch_off_keeps_stage_list_and_report_defaults(small_dataset):
+    """The depth=1, prefetch-off path is the pre-prefetch engine exactly:
+    no prefetch stage runs, no prefetch seconds are booked, and the
+    report's knob fields default off."""
+    serial, _ = _paired_engines(small_dataset, "dci")
+    rep = serial.run(max_batches=2, pipeline_depth=1)
+    assert not rep.prefetch
+    assert rep.prefetch_seconds == 0.0
+    assert rep.prefetched_rows == 0
+
+
 def test_rain_reuse_ordering_preserved(small_dataset):
     """RAIN's cross-batch reuse makes batch i+1's gather depend on batch i;
     the pipelined run must reproduce the serial hit sequence exactly."""
@@ -153,6 +195,22 @@ def test_executor_rejects_bad_config():
         PipelinedExecutor([Stage("a", lambda c: None)], depth=0)
     with pytest.raises(ValueError):
         PipelinedExecutor([], depth=1)
+    with pytest.raises(ValueError):  # all-optional, all off
+        PipelinedExecutor([None, None], depth=1)
+
+
+def test_executor_drops_optional_stages():
+    """None entries model optional stages (the prefetch hook off): the
+    schedule must be identical to never listing them."""
+    events = []
+    ex = PipelinedExecutor(
+        [None] + _recording_stages(events) + [None],
+        depth=1,
+        on_retire=lambda c: events.append(("r", c.index)),
+    )
+    assert [s.name for s in ex.stages] == ["a", "b"]
+    ex.run(range(2))
+    assert events == [("a", 0), ("b", 0), ("r", 0), ("a", 1), ("b", 1), ("r", 1)]
 
 
 def test_batch_context_carries_payload():

@@ -50,11 +50,9 @@ def test_rain_batch_order_is_permutation(small_dataset):
     assert pipe.reuse_prev_batch
 
 
-def test_ducati_prep_slower_than_dci(small_dataset):
-    # Warm the presample/fill programs first: jit compile is per-process,
-    # and whichever prepare() runs first in a cold process would otherwise
-    # be charged for it — the comparison is about steady-state prep cost.
-    prepare("dci", small_dataset, **KW)
+def test_ducati_prep_slower_than_dci(small_dataset, jit_warm):
+    # The shared jit_warm fixture has already compiled the presample/fill
+    # programs, so both prepares below measure steady-state prep cost.
     t_dci = prepare("dci", small_dataset, **KW).prep_seconds
     t_duc = prepare("ducati", small_dataset, **KW).prep_seconds
     # DUCATI gathers 4x the statistics + global sorts + curve fits.
