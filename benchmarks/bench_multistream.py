@@ -48,6 +48,7 @@ import json
 import time
 
 from benchmarks.common import CACHE_BYTES, emit, make_engine
+from repro.runtime.cache_refresh import RefreshConfig
 from repro.runtime.gnn_engine import GNNInferenceEngine
 from repro.runtime.gnn_serve import MultiStreamServer, make_stream_batches
 
@@ -83,7 +84,16 @@ def _private_serial(dataset, queues, stream_seeds, *, model, fanouts, batch_size
 
 
 def _shared_multistream(
-    dataset, queues, stream_seeds, *, model, fanouts, batch_size, cache_bytes, depth
+    dataset,
+    queues,
+    stream_seeds,
+    *,
+    model,
+    fanouts,
+    batch_size,
+    cache_bytes,
+    depth,
+    refresh_interval=0,
 ):
     """One shared budget-B cache, one presample/compile, N interleaved streams.
 
@@ -105,28 +115,44 @@ def _shared_multistream(
     )
     prep_s = time.perf_counter() - wall0
     rows = []
-    for prefetch in (False, True):
+    # The refresh row (off unless --refresh-interval is set) runs LAST so
+    # the prefetch-vs-plain pair still observes the untouched epoch-0
+    # cache (a refresh mutates the shared DualCache in place).
+    modes = [("shared-multistream", False, None), ("shared-multistream+prefetch", True, None)]
+    if refresh_interval:
+        modes.append(
+            (
+                "shared-multistream+refresh",
+                False,
+                RefreshConfig(mode="all", interval_batches=refresh_interval),
+            )
+        )
+    for mode, prefetch, refresh in modes:
         t0 = time.perf_counter()
-        server = MultiStreamServer(eng, depth=depth, prefetch=prefetch)
+        server = MultiStreamServer(eng, depth=depth, prefetch=prefetch, refresh=refresh)
         for sid, queue in enumerate(queues):
             server.add_stream(queue, seed=stream_seeds[sid])
         rep = server.run()
-        rows.append(
-            {
-                "mode": "shared-multistream+prefetch" if prefetch else "shared-multistream",
-                "cold_s": prep_s + (time.perf_counter() - t0),
-                "serve_s": rep.wall_seconds,
-                "seeds": rep.total_seeds,
-                "feat_hit": rep.feat_hit_rate,
-                "adj_hit": rep.adj_hit_rate,
-                "modeled_transfer_s": rep.modeled_transfer_seconds(),
-                "per_stream_feat_hit": [round(s.feat_hit_rate, 4) for s in rep.streams],
-                "mean_latency_s": round(
-                    sum(s.mean_latency_s for s in rep.streams) / len(rep.streams), 5
-                ),
-                "prefetched_rows": sum(s.prefetched_rows for s in rep.streams),
-            }
-        )
+        row = {
+            "mode": mode,
+            "cold_s": prep_s + (time.perf_counter() - t0),
+            "serve_s": rep.wall_seconds,
+            "seeds": rep.total_seeds,
+            "feat_hit": rep.feat_hit_rate,
+            "adj_hit": rep.adj_hit_rate,
+            "modeled_transfer_s": rep.modeled_transfer_seconds(),
+            "per_stream_feat_hit": [round(s.feat_hit_rate, 4) for s in rep.streams],
+            "mean_latency_s": round(
+                sum(s.mean_latency_s for s in rep.streams) / len(rep.streams), 5
+            ),
+            "prefetched_rows": sum(s.prefetched_rows for s in rep.streams),
+        }
+        if rep.epochs is not None:
+            # With refresh on, per-epoch rates are the story — a lifetime
+            # aggregate would average away exactly the adaptation.
+            row["per_epoch"] = rep.epochs
+            row["refresh_count"] = len(rep.refresh_events)
+        rows.append(row)
     return rows
 
 
@@ -140,6 +166,7 @@ def run(
     depth=2,
     fanouts=(8, 4, 2),
     model="graphsage",
+    refresh_interval=0,
 ):
     eng0 = make_engine(dataset_name, model=model, fanouts=fanouts, batch_size=batch_size)
     dataset = eng0.dataset
@@ -162,10 +189,13 @@ def run(
     eng0.warmup(queues[0][0])
     kw = dict(model=model, fanouts=fanouts, batch_size=batch_size, cache_bytes=cache_bytes)
     private = _private_serial(dataset, queues, stream_seeds, **kw)
-    shared, shared_pf = _shared_multistream(dataset, queues, stream_seeds, depth=depth, **kw)
+    shared_rows = _shared_multistream(
+        dataset, queues, stream_seeds, depth=depth, refresh_interval=refresh_interval, **kw
+    )
+    shared, shared_pf = shared_rows[0], shared_rows[1]
 
     rows = []
-    for r in (private, shared, shared_pf):
+    for r in (private, *shared_rows):
         r.update(
             dataset=dataset_name,
             streams=num_streams,
@@ -212,6 +242,13 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=512)
     ap.add_argument("--depth", type=int, default=2, help="shared run's pipeline depth")
     ap.add_argument("--cache-mb", type=float, default=CACHE_BYTES / 1e6)
+    ap.add_argument(
+        "--refresh-interval",
+        type=int,
+        default=0,
+        help="add a shared-multistream+refresh row (online refresh every N "
+        "retired batches) reporting per-epoch hit rates; 0 = off",
+    )
     ap.add_argument("--json", default=None, help="also write rows+checks as JSON")
     ap.add_argument(
         "--smoke",
@@ -230,6 +267,7 @@ def main() -> None:
             batch_size=args.batch_size,
             cache_bytes=int(args.cache_mb * 1e6),
             depth=args.depth,
+            refresh_interval=args.refresh_interval,
         )
     for r in rows:
         print(r)

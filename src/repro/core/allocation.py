@@ -17,7 +17,13 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["CacheAllocation", "allocate_capacity", "available_budget", "DEFAULT_RESERVE_BYTES"]
+__all__ = [
+    "CacheAllocation",
+    "allocate_capacity",
+    "available_budget",
+    "reallocate_capacity",
+    "DEFAULT_RESERVE_BYTES",
+]
 
 DEFAULT_RESERVE_BYTES = 1 << 30  # 1 GB, the paper's reference reserve
 
@@ -79,4 +85,30 @@ def allocate_capacity(
         adj_bytes=adj,
         feat_bytes=feat,
         sample_fraction=frac,
+    )
+
+
+def reallocate_capacity(
+    base: CacheAllocation,
+    sample_times: list[float],
+    feature_times: list[float],
+    *,
+    adj_need_bytes: int | None = None,
+    feat_need_bytes: int | None = None,
+) -> CacheAllocation:
+    """Eq. 1 re-run at serve time: same total budget, measured stage ratio.
+
+    The online cache-refresh subsystem (runtime/cache_refresh.py) calls
+    this with the *serve-time* stage laps — pre-sampling laps plus the
+    runtime telemetry window — so the adj/feat split follows the workload
+    as it drifts instead of staying frozen at the preprocessing-time
+    ratio.  The total budget is the one decision that does NOT move: it
+    was sized against device memory (available_budget), which serving
+    does not change."""
+    return allocate_capacity(
+        sample_times,
+        feature_times,
+        base.total_bytes,
+        adj_need_bytes=adj_need_bytes,
+        feat_need_bytes=feat_need_bytes,
     )

@@ -1,31 +1,80 @@
-"""DualCache — the runtime bundle of DCI's two caches.
+"""DualCache — the runtime bundle of DCI's two caches, versioned by epoch.
 
 ``DualCache`` owns the device-resident adjacency cache (inside
 ``DeviceGraph``) and the feature cache (inside ``FeatureStore``) plus the
 allocation that produced them.  It is what the inference engine actually
 runs against; policies (core/policies.py) are factories for it.
+
+Since the online refresh subsystem (runtime/cache_refresh.py) it is a
+*versioned, mutable-by-delta* runtime object rather than a frozen value:
+``refresh()`` swaps in a new allocation's worth of cache contents as an
+incremental delta (only changed feature rows / adjacency segments move,
+never the O(N)/O(E) host structures) and bumps ``epoch``.  Consumers read
+``caches.dgraph`` / ``caches.store`` at stage-dispatch time, so every
+stream picks up the new epoch at its next batch without coordination.
+Refreshes never change sampled blocks, gathered rows, or logits — the
+two-level sort order and the host feature table are frozen at build time —
+only hit accounting and byte movement (tests/test_cache_refresh.py).
+Without refresh enabled nothing mutates and the object behaves exactly
+like the former frozen dataclass.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.allocation import CacheAllocation
-from repro.graph.csc import build_adj_cache, two_level_sort
+from repro.graph.csc import (
+    AdjCache,
+    AdjRefreshStats,
+    build_adj_cache,
+    node_visit_totals,
+    refresh_adj_cache,
+    two_level_sort,
+)
 from repro.graph.datasets import SyntheticGraphDataset
-from repro.graph.features import FeatureStore, build_feature_cache, plain_feature_store
+from repro.graph.features import (
+    FeatureRefreshStats,
+    FeatureStore,
+    build_feature_cache,
+    plain_feature_store,
+    refresh_feature_cache,
+)
 from repro.graph.sampling import DeviceGraph, device_graph
 
-__all__ = ["DualCache"]
+__all__ = ["DualCache", "CacheRefreshDelta"]
 
 
 @dataclasses.dataclass(frozen=True)
+class CacheRefreshDelta:
+    """One epoch transition: what moved, and what it cost."""
+
+    epoch: int  # the epoch this delta produced
+    allocation: CacheAllocation
+    feat: FeatureRefreshStats
+    adj: AdjRefreshStats
+
+    @property
+    def changed(self) -> bool:
+        return self.feat.changed or self.adj.changed
+
+
+@dataclasses.dataclass
 class DualCache:
     dgraph: DeviceGraph
     store: FeatureStore
     allocation: CacheAllocation | None
+    epoch: int = 0
+    # Frozen refresh context, captured by ``build``: the host CSC, the
+    # two-level-sorted row order, and the host-side adjacency cache the
+    # delta re-fill copies unchanged segments from.  ``None`` for cacheless
+    # builds (``none()``), which have nothing to refresh.
+    _graph: object | None = dataclasses.field(default=None, repr=False)
+    _sorted_row: np.ndarray | None = dataclasses.field(default=None, repr=False)
+    _adj_cache: AdjCache | None = dataclasses.field(default=None, repr=False)
 
     @property
     def adj_cached_elements(self) -> int:
@@ -34,6 +83,10 @@ class DualCache:
     @property
     def feat_cached_rows(self) -> int:
         return self.store.num_cached
+
+    @property
+    def refreshable(self) -> bool:
+        return self._graph is not None and self._sorted_row is not None
 
     @classmethod
     def build(
@@ -49,7 +102,14 @@ class DualCache:
         adj_cache = build_adj_cache(dataset.graph, sorted_row, node_totals, allocation.adj_bytes)
         dgraph = device_graph(dataset.graph, sorted_row_index=sorted_row, adj_cache=adj_cache)
         store = build_feature_cache(dataset.features, node_counts, allocation.feat_bytes)
-        return cls(dgraph=dgraph, store=store, allocation=allocation)
+        return cls(
+            dgraph=dgraph,
+            store=store,
+            allocation=allocation,
+            _graph=dataset.graph,
+            _sorted_row=sorted_row,
+            _adj_cache=adj_cache,
+        )
 
     @classmethod
     def none(cls, dataset: SyntheticGraphDataset) -> "DualCache":
@@ -58,4 +118,57 @@ class DualCache:
             dgraph=device_graph(dataset.graph),
             store=plain_feature_store(dataset.features),
             allocation=None,
+        )
+
+    # ------------------------------------------------------------- refresh
+    def refresh(
+        self,
+        *,
+        allocation: CacheAllocation,
+        node_counts: np.ndarray,
+        edge_counts: np.ndarray,
+    ) -> CacheRefreshDelta:
+        """Swap both caches to a new allocation/ranking as a delta re-fill.
+
+        No full ``build``: the two-level sort is never re-run, unchanged
+        feature rows stay device-resident in their slots, unchanged
+        adjacency segments are copied from the previous cache, and the
+        O(E) device arrays are untouched.  In-flight batches that already
+        dispatched against the previous epoch's arrays keep them alive
+        (JAX arrays are immutable) and retire normally — the swap is a
+        pointer flip on this object, visible to the next stage dispatch.
+        """
+        if not self.refreshable:
+            raise ValueError("this DualCache was built without refresh context (none())")
+        node_totals = node_visit_totals(self._graph, edge_counts)
+        new_adj, adj_stats = refresh_adj_cache(
+            self._graph, self._sorted_row, self._adj_cache, node_totals, allocation.adj_bytes
+        )
+        new_store, feat_stats = refresh_feature_cache(
+            self.store, node_counts, allocation.feat_bytes
+        )
+        cache_row = new_adj.cache_row_index
+        # Pad the device copy to a grow-only power-of-two physical size:
+        # the sampler's programs specialize on this array's SHAPE, so an
+        # exact-size copy would force a sample_blocks recompile on every
+        # epoch (and the recompile would land inside the next window's
+        # sample lap, feeding back into the Eq. 1 ratio).  Padded tail
+        # entries are never read — the hit test is ``r < cached_len``.
+        phys = max(self.dgraph.cache_row_index.shape[0], 1)
+        while phys < cache_row.shape[0]:
+            phys *= 2
+        if cache_row.shape[0] < phys:
+            cache_row = np.concatenate([cache_row, np.zeros(phys - cache_row.shape[0], np.int32)])
+        self.dgraph = dataclasses.replace(
+            self.dgraph,
+            cache_ptr=jnp.asarray(new_adj.cache_ptr, jnp.int32),
+            cache_row_index=jnp.asarray(cache_row, jnp.int32),
+            cached_len=jnp.asarray(new_adj.cached_len, jnp.int32),
+        )
+        self.store = new_store
+        self.allocation = allocation
+        self._adj_cache = new_adj
+        self.epoch += 1
+        return CacheRefreshDelta(
+            epoch=self.epoch, allocation=allocation, feat=feat_stats, adj=adj_stats
         )

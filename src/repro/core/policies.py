@@ -3,10 +3,12 @@
 Each ``prepare_*`` returns a :class:`PreparedPipeline` — caches (or none),
 an optional batch schedule (RAIN), and the measured preprocessing wall
 time, which is itself a headline metric in the paper (Tables IV, Fig. 10).
-The prepared pipeline is immutable at run time, so one instance can be
-shared by a single engine, by the staged batch executor at any
-``pipeline_depth``, or by every stream of the multi-stream server
-(runtime/gnn_serve.py) simultaneously.
+The prepared pipeline is a shared runtime object: one instance serves a
+single engine, the staged batch executor at any ``pipeline_depth``, or
+every stream of the multi-stream server (runtime/gnn_serve.py)
+simultaneously.  Its caches are immutable by default; the online refresh
+subsystem (runtime/cache_refresh.py) may swap them to a new epoch as a
+delta re-fill, which consumers pick up at their next stage dispatch.
 
 Presampling policies (``dci``/``sci``/``aci``/``ducati``) profile the
 workload before filling.  Two modes:
@@ -381,6 +383,11 @@ def prepare(policy: str, dataset: SyntheticGraphDataset, **kw) -> PreparedPipeli
     ignored for them."""
     if policy not in POLICIES:
         raise KeyError(f"unknown policy {policy!r}; have {sorted(POLICIES)}")
+    if kw.get("pipeline_depth") == "auto":
+        # "auto" sizes the RUN-time executor window (the engine resolves it
+        # from a measured compute:prep probe); presampling stays serial —
+        # Eq. 1's stage-time ratio assumes fully synchronized stages.
+        kw["pipeline_depth"] = 1
     exec_kw = {
         "prefetch": bool(kw.pop("prefetch", False)),
         "use_kernel": bool(kw.pop("use_kernel", False)),

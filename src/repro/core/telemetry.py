@@ -1,0 +1,127 @@
+"""Serve-time workload telemetry — the runtime half of DCI's profile.
+
+DCI profiles the workload once, before serving, with ~8 pre-sampling
+batches (core/presample.py).  Long-lived multi-stream serving breaks that
+assumption: the seed distribution drifts and streams join/leave, so the
+pre-sampled visit counts and the Eq. 1 stage-time ratio go stale.  This
+module accumulates the same three signals the presampler measures — but
+from the *live* serve path, at retire time, out of accounting the executor
+already produces:
+
+  * per-node feature visit AND miss counts (from the gather's hit mask);
+  * per-element adjacency fetch counts (from the sampler's edge slots);
+  * per-batch sample/feature stage laps (from the stream StageClocks).
+
+``WorkloadTelemetry`` is windowed: the refresh manager
+(runtime/cache_refresh.py) snapshots a window, folds it into its decayed
+history, and resets it.  Recording costs one device→host transfer of the
+hit mask and edge slots per batch, so it is only attached when a refresh
+mode is enabled — the default serve path records nothing and stays
+bit-for-bit identical to a telemetry-free build.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["TelemetryWindow", "WorkloadTelemetry"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryWindow:
+    """An immutable snapshot of one accumulation window."""
+
+    node_counts: np.ndarray  # int64[N] feature-row visits
+    node_miss_counts: np.ndarray  # int64[N] feature-row misses (drift signal)
+    edge_counts: np.ndarray  # int64[E] adjacency-element fetches
+    sample_times: list[float]
+    feature_times: list[float]
+    batches: int
+
+    @property
+    def feat_lookups(self) -> int:
+        return int(self.node_counts.sum())
+
+    @property
+    def feat_misses(self) -> int:
+        return int(self.node_miss_counts.sum())
+
+    @property
+    def miss_rate(self) -> float:
+        return self.feat_misses / max(self.feat_lookups, 1)
+
+
+class WorkloadTelemetry:
+    """Mutable per-window accumulator fed from the executor's retire path.
+
+    One instance can be shared by several streams (the counts are the
+    union workload — exactly what the shared cache is filled for); stage
+    laps are pulled from each stream's own clock by :meth:`pull_times`
+    with per-clock cursors, so laps are never double-counted across
+    windows.
+    """
+
+    def __init__(self, num_nodes: int, num_edges: int):
+        self.num_nodes = num_nodes
+        self.num_edges = num_edges
+        self._lap_cursors: dict[int, dict[str, int]] = {}
+        self.reset()
+
+    def reset(self) -> None:
+        """Start a new accumulation window (lap cursors persist)."""
+        self.node_counts = np.zeros(self.num_nodes, np.int64)
+        self.node_miss_counts = np.zeros(self.num_nodes, np.int64)
+        self.edge_counts = np.zeros(self.num_edges, np.int64)
+        self.sample_times: list[float] = []
+        self.feature_times: list[float] = []
+        self.batches = 0
+
+    # ---------------------------------------------------------- recording
+    def observe_batch(self, nodes, feat_hit, edge_slots) -> None:
+        """Fold one retired batch's accounting into the current window.
+
+        ``nodes`` is the batch's input frontier, ``feat_hit`` the gather's
+        boolean hit mask over it, ``edge_slots`` the per-layer global
+        adjacency positions the sampler touched.  All three already exist
+        on the retire path — telemetry adds the host conversion and two
+        scatter-adds, nothing new on the device."""
+        nodes = np.asarray(nodes)
+        hit = np.asarray(feat_hit)
+        np.add.at(self.node_counts, nodes, 1)
+        miss_nodes = nodes[~hit]
+        if miss_nodes.size:
+            np.add.at(self.node_miss_counts, miss_nodes, 1)
+        for slots in edge_slots:
+            idx = np.asarray(slots).reshape(-1)
+            # A zero-degree node at the CSC tail emits slot == num_edges;
+            # the presample path's JAX scatter drops out-of-bounds indices
+            # silently — match it (np.add.at would raise instead).
+            np.add.at(self.edge_counts, idx[idx < self.num_edges], 1)
+        self.batches += 1
+
+    def pull_times(self, clock) -> None:
+        """Append the clock's NEW sample/feature laps since the last pull.
+
+        In serial mode (depth=1) laps are fully synchronized stage times —
+        the exact Eq. 1 semantics.  At depth>1 they are dispatch times;
+        the ratio still tracks where host-side prep time goes, which is
+        the signal the re-allocation needs (documented in
+        docs/ARCHITECTURE.md)."""
+        cursors = self._lap_cursors.setdefault(id(clock), {"sample": 0, "feature": 0})
+        for name, out in (("sample", self.sample_times), ("feature", self.feature_times)):
+            laps = clock.laps.get(name, [])
+            out.extend(laps[cursors[name] :])
+            cursors[name] = len(laps)
+
+    # ----------------------------------------------------------- snapshot
+    def snapshot(self) -> TelemetryWindow:
+        return TelemetryWindow(
+            node_counts=self.node_counts.copy(),
+            node_miss_counts=self.node_miss_counts.copy(),
+            edge_counts=self.edge_counts.copy(),
+            sample_times=list(self.sample_times),
+            feature_times=list(self.feature_times),
+            batches=self.batches,
+        )

@@ -10,6 +10,7 @@ bytes moved over the slow path.
 
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import typing
 
@@ -17,7 +18,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["FeatureStore", "PrefetchedMisses", "build_feature_cache"]
+__all__ = [
+    "FeatureStore",
+    "FeatureRefreshStats",
+    "PrefetchedMisses",
+    "build_feature_cache",
+    "refresh_feature_cache",
+]
+
+# One shared worker for the host-side miss-row pack: the numpy fancy-index
+# copy is the heavy part of prefetch staging, and a single worker keeps the
+# packs ordered (packs are consumed in submission order by the batch that
+# requested them) while the submitting thread builds the index arrays and
+# issues their device transfers concurrently.
+_PACK_POOL = concurrent.futures.ThreadPoolExecutor(
+    max_workers=1, thread_name_prefix="dci-miss-pack"
+)
 
 
 class PrefetchedMisses(typing.NamedTuple):
@@ -81,7 +97,7 @@ class FeatureStore:
             object.__setattr__(self, "_position_np", cached)
         return cached
 
-    def prefetch_misses(self, nodes: np.ndarray) -> PrefetchedMisses:
+    def prefetch_misses(self, nodes: np.ndarray, *, pack_in_thread: bool = True) -> PrefetchedMisses:
         """Stage the missed host rows for a batch onto the device.
 
         ``jax.device_put`` issues the host→device copy of exactly the
@@ -90,12 +106,19 @@ class FeatureStore:
         previous batch's forward, in the pipelined executor).  The miss
         count varies batch to batch, so the pack is padded to a
         power-of-two bucket — the consuming scatter then compiles
-        O(log S) programs instead of one per distinct count."""
+        O(log S) programs instead of one per distinct count.
+
+        ``pack_in_thread`` (default on) runs the heavy part of the pack —
+        the numpy fancy-index copy of the miss rows and its ``device_put``
+        — on a worker thread while the calling thread builds the
+        ``idx``/``pack_pos`` index arrays and issues THEIR device
+        transfers; the call joins before returning, so the result (and
+        everything downstream) is bit-identical either way."""
         nodes = np.asarray(nodes)
         miss = np.nonzero(self.position_np()[nodes] < 0)[0].astype(np.int32)
         if miss.size == nodes.size:
             # Every row missed (e.g. no cache): the staged buffer IS the
-            # whole row set — no pack, no pad.
+            # whole row set — no pack, no pad, nothing to overlap.
             return PrefetchedMisses(
                 rows=jax.device_put(self.host_np()[nodes]),
                 idx=None,
@@ -103,16 +126,22 @@ class FeatureStore:
                 num_miss=int(miss.size),
             )
         bucket = min(max(1, 1 << int(np.ceil(np.log2(max(miss.size, 1))))), nodes.size)
+
+        def pack_rows():
+            rows = np.zeros((bucket, self.feat_dim), self.host_np().dtype)
+            rows[: miss.size] = self.host_np()[nodes[miss]]
+            return jax.device_put(rows)
+
+        rows_future = _PACK_POOL.submit(pack_rows) if pack_in_thread else None
         idx = np.full(bucket, nodes.size, np.int32)  # pad → one past the end (dropped)
         idx[: miss.size] = miss
-        rows = np.zeros((bucket, self.feat_dim), self.host_np().dtype)
-        rows[: miss.size] = self.host_np()[nodes[miss]]
         pack_pos = np.zeros(nodes.size, np.int32)  # hit rows point at slot 0 (never read)
         pack_pos[miss] = np.arange(miss.size, dtype=np.int32)
+        idx, pack_pos = jnp.asarray(idx), jnp.asarray(pack_pos)
         return PrefetchedMisses(
-            rows=jax.device_put(rows),
-            idx=jnp.asarray(idx),
-            pack_pos=jnp.asarray(pack_pos),
+            rows=rows_future.result() if rows_future is not None else pack_rows(),
+            idx=idx,
+            pack_pos=pack_pos,
             num_miss=int(miss.size),
         )
 
@@ -181,29 +210,22 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def build_feature_cache(
-    features: np.ndarray,
-    node_counts: np.ndarray,
-    capacity_bytes: int,
-) -> FeatureStore:
-    """DCI's sort-free feature-cache fill (paper §IV-B).
+def select_hot_rows(node_counts: np.ndarray, budget_rows: int) -> np.ndarray:
+    """DCI's sort-free hot-row selection (paper §IV-B).
 
     Select nodes with ``visits > mean`` directly (no global argsort); if
     capacity remains, top up with below-mean *visited* nodes, then with
-    anything else.  This is the lightweight part: O(N) passes, no O(N log N)
-    sort over all nodes.
+    anything else.  O(N) passes; only the (small, under power-law
+    workloads) above-mean subset is ever sorted.  Shared by the build-time
+    fill and the serve-time delta refresh, so both rank rows identically.
     """
-    n, f = features.shape
-    row_bytes = f * features.dtype.itemsize
-    budget_rows = min(max(int(capacity_bytes) // row_bytes, 0), n)
-
+    n = node_counts.shape[0]
+    budget_rows = min(max(int(budget_rows), 0), n)
     counts = node_counts.astype(np.float64)
     mean = counts.mean() if n else 0.0
     hot = np.nonzero(counts > mean)[0]
     if hot.shape[0] > budget_rows:
         # More above-mean nodes than capacity: keep the hottest among them.
-        # (Sorting only the above-mean subset keeps this cheap — the subset
-        # is small under power-law workloads.)
         hot = hot[np.argsort(-counts[hot], kind="stable")[:budget_rows]]
     elif hot.shape[0] < budget_rows:
         rest = np.nonzero(counts <= mean)[0]
@@ -211,6 +233,19 @@ def build_feature_cache(
         cold = rest[counts[rest] == 0]
         top_up = np.concatenate([visited, cold])[: budget_rows - hot.shape[0]]
         hot = np.concatenate([hot, top_up])
+    return hot
+
+
+def build_feature_cache(
+    features: np.ndarray,
+    node_counts: np.ndarray,
+    capacity_bytes: int,
+) -> FeatureStore:
+    """DCI's sort-free feature-cache fill (paper §IV-B)."""
+    n, f = features.shape
+    row_bytes = f * features.dtype.itemsize
+    budget_rows = min(max(int(capacity_bytes) // row_bytes, 0), n)
+    hot = select_hot_rows(node_counts, budget_rows)
 
     position_map = np.full(n, -1, np.int32)
     position_map[hot] = np.arange(hot.shape[0], dtype=np.int32)
@@ -219,6 +254,124 @@ def build_feature_cache(
         host_table=jnp.asarray(features),
         hot_table=jnp.asarray(hot_table),
         position_map=jnp.asarray(position_map),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureRefreshStats:
+    """What a delta re-fill actually moved (the bounded-pause accounting)."""
+
+    rows_kept: int  # hot rows that stayed in their slots — zero bytes moved
+    rows_inserted: int  # new hot rows scattered into freed slots
+    rows_evicted: int  # old hot rows whose slots were reused / invalidated
+    physical_rows: int  # device hot-table rows after the refresh
+    budget_rows: int  # logical capacity the new allocation pays for
+
+    @property
+    def changed(self) -> bool:
+        return bool(self.rows_inserted or self.rows_evicted)
+
+
+def refresh_feature_cache(
+    store: FeatureStore,
+    node_counts: np.ndarray,
+    capacity_bytes: int,
+) -> tuple[FeatureStore, FeatureRefreshStats]:
+    """Incremental re-fill: move only the rows whose hotness changed.
+
+    Re-runs the sort-free selection on the UPDATED ``node_counts`` (merged
+    presample + runtime telemetry), then applies the difference against
+    the live store as a delta:
+
+      * rows in both the old and new hot set KEEP their slots — no copy,
+        no position_map write, no recompile;
+      * evicted rows get ``position_map[v] = -1`` (their slots are freed;
+        stale table rows are never read again);
+      * inserted rows are packed once host-side and applied as ONE device
+        scatter into the freed slots.
+
+    The device hot table only grows (and only when the new budget exceeds
+    its physical rows); shrinking budgets reuse the existing array with a
+    smaller logical occupancy, so repeated refreshes at a stable split
+    compile nothing new.  ``host_table`` is shared with the old store, so
+    gathered feature rows stay bit-identical across epochs — a refresh
+    changes hit accounting and byte movement, never outputs.
+    """
+    features = store.host_np()
+    n, f = features.shape
+    row_bytes = f * features.dtype.itemsize
+    budget_rows = min(max(int(capacity_bytes) // row_bytes, 0), n)
+
+    old_pos = store.position_np()
+    new_hot = select_hot_rows(node_counts, budget_rows)
+    in_new = np.zeros(n, bool)
+    in_new[new_hot] = True
+    old_nodes = np.nonzero(old_pos >= 0)[0]
+    kept_mask = in_new[old_nodes]
+    kept_nodes = old_nodes[kept_mask]
+    evicted_nodes = old_nodes[~kept_mask]
+    in_old = np.zeros(n, bool)
+    in_old[old_nodes] = True
+    inserted_nodes = new_hot[~in_old[new_hot]]
+
+    physical = store.hot_table.shape[0]
+    needed = kept_nodes.shape[0] + inserted_nodes.shape[0]
+    hot_table = store.hot_table
+    if needed > physical:
+        # Grow by appending zero rows; kept rows stay device-resident —
+        # the host never re-uploads them.  Growth doubles (capped at the
+        # node count) so a sequence of refreshes compiles O(log N) gather
+        # programs, not one per epoch; shrinking budgets reuse the array
+        # with lower logical occupancy and compile nothing.
+        grow_to = min(max(needed, 2 * physical), max(n, needed))
+        hot_table = jnp.concatenate(
+            [hot_table, jnp.zeros((grow_to - physical, f), hot_table.dtype)]
+        )
+        physical = grow_to
+
+    # Free slots = every physical slot not held by a kept row; inserts fill
+    # them in ascending order (deterministic given the same inputs).
+    occupied = np.zeros(physical, bool)
+    occupied[old_pos[kept_nodes]] = True
+    free_slots = np.nonzero(~occupied)[0][: inserted_nodes.shape[0]].astype(np.int32)
+
+    new_pos_np = old_pos.copy()
+    new_pos_np[evicted_nodes] = -1
+    new_pos_np[inserted_nodes] = free_slots
+
+    def pow2_pad(idx: np.ndarray, fill: int) -> jnp.ndarray:
+        # The delta scatters compile per index-array shape; padding the
+        # delta to a power-of-two bucket (pad entries point out of range
+        # and are dropped) keeps repeated refreshes to O(log N) compiled
+        # programs instead of one per distinct delta size.
+        bucket = 1 << int(np.ceil(np.log2(max(idx.size, 1))))
+        out = np.full(bucket, fill, np.int32)
+        out[: idx.size] = idx
+        return jnp.asarray(out)
+
+    position_map = store.position_map
+    if evicted_nodes.size:
+        position_map = position_map.at[pow2_pad(evicted_nodes, n)].set(-1, mode="drop")
+    if inserted_nodes.size:
+        ins = pow2_pad(inserted_nodes, n)
+        slots = pow2_pad(free_slots, physical)
+        position_map = position_map.at[ins].set(slots, mode="drop")
+        rows = np.zeros((slots.shape[0], f), features.dtype)
+        rows[: inserted_nodes.size] = features[inserted_nodes]
+        hot_table = hot_table.at[slots].set(jnp.asarray(rows), mode="drop")
+    new_store = FeatureStore(
+        host_table=store.host_table, hot_table=hot_table, position_map=position_map
+    )
+    # Carry the host mirrors forward: host rows are unchanged, and the new
+    # position map is already known host-side — no device round trip.
+    object.__setattr__(new_store, "_host_np", features)
+    object.__setattr__(new_store, "_position_np", new_pos_np)
+    return new_store, FeatureRefreshStats(
+        rows_kept=int(kept_nodes.shape[0]),
+        rows_inserted=int(inserted_nodes.shape[0]),
+        rows_evicted=int(evicted_nodes.shape[0]),
+        physical_rows=int(physical),
+        budget_rows=int(budget_rows),
     )
 
 

@@ -20,8 +20,14 @@ import json
 
 from repro.core.policies import POLICIES
 from repro.graph import load_dataset
+from repro.runtime.cache_refresh import MODES as REFRESH_MODES, RefreshConfig
 from repro.runtime.gnn_engine import GNNInferenceEngine
 from repro.runtime.gnn_serve import MultiStreamServer, make_stream_batches
+
+
+def _depth(value: str):
+    """--pipeline-depth accepts an int or 'auto' (measured compute:prep)."""
+    return "auto" if value == "auto" else int(value)
 
 
 def main() -> None:
@@ -37,10 +43,27 @@ def main() -> None:
     ap.add_argument("--max-batches", type=int, default=None)
     ap.add_argument(
         "--pipeline-depth",
-        type=int,
+        type=_depth,
         default=1,
         help="batches kept in flight: 1 = serial (per-stage sync, the paper's "
-        "timing), 2+ = overlap batch i+1's sample/gather with batch i's compute",
+        "timing), 2+ = overlap batch i+1's sample/gather with batch i's compute, "
+        "'auto' = derive the window from a measured compute:prep probe",
+    )
+    ap.add_argument(
+        "--refresh-mode",
+        default="off",
+        choices=REFRESH_MODES,
+        help="online cache refresh: 'interval' re-allocates (Eq. 1 on the "
+        "measured serve-time stage ratio) and delta re-fills every "
+        "--refresh-interval retired batches; 'events' refreshes on stream "
+        "join/leave; 'all' does both.  Off (default) keeps the caches "
+        "immutable — bit-for-bit the pre-refresh system",
+    )
+    ap.add_argument(
+        "--refresh-interval",
+        type=int,
+        default=8,
+        help="retired batches between interval refreshes (interval/all modes)",
     )
     ap.add_argument(
         "--prefetch",
@@ -104,9 +127,17 @@ def main() -> None:
         use_kernel=args.use_kernel,
         gather_buffers=args.gather_buffers,
     )
+    refresh = (
+        RefreshConfig(mode=args.refresh_mode, interval_batches=args.refresh_interval)
+        if args.refresh_mode != "off"
+        else None
+    )
     if args.streams > 1:
         server = MultiStreamServer(
-            eng, depth=args.pipeline_depth, max_inflight_per_stream=args.max_inflight
+            eng,
+            depth=args.pipeline_depth,
+            max_inflight_per_stream=args.max_inflight,
+            refresh=refresh,
         )
         per_stream = args.batches_per_stream
         if args.max_batches is not None:
@@ -123,7 +154,7 @@ def main() -> None:
         rep = server.run()
         print(json.dumps(rep.summary(), indent=1))
     else:
-        rep = eng.run(max_batches=args.max_batches)
+        rep = eng.run(max_batches=args.max_batches, refresh=refresh)
         print(json.dumps(rep.summary(), indent=1))
 
 

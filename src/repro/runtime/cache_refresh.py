@@ -1,0 +1,299 @@
+"""Online cache refresh: serve-time re-allocation + delta re-fill.
+
+DCI allocates and fills both caches once, from pre-sampling statistics
+(§IV-A Eq. 1, §IV-B).  Long-lived serving breaks the one-shot assumption:
+the seed distribution drifts and request streams join/leave, so the
+pre-sampled ranking goes stale and hit rates decay.  This module closes
+the loop at serve time:
+
+  telemetry window          re-allocation               delta re-fill
+  (core/telemetry.py)  ──►  Eq. 1 on measured     ──►  DualCache.refresh
+  miss/visit counts,        serve-time stage ratio      (epoch += 1, only
+  stage laps                (core/allocation.py)        changed rows/segments
+                                                        move)
+
+``CacheRefreshManager`` owns the loop.  It keeps a *decayed history* of
+visit counts seeded from the preparation-time presample profile: each
+refresh folds the latest telemetry window in as
+
+    history = history_decay * history + window_counts
+
+so sustained drift re-ranks the caches within a few windows while
+one-window noise cannot evict the steady hot set.  Stage-time history is
+blended the same way, so the Eq. 1 split follows the measured serve-time
+sample:feature ratio.
+
+Refresh triggers (``RefreshConfig.mode``):
+
+  * ``interval`` — every ``interval_batches`` retired batches;
+  * ``events``   — on stream join/leave (the serving layer's hooks);
+  * ``all``      — both; ``off`` — never (the default; the serve path then
+    records no telemetry and is bit-for-bit identical to a refresh-free
+    build).
+
+A refresh runs *between* batch dispatches (the executor's retire path), so
+up to ``depth-1`` in-flight batches may straddle an epoch boundary: they
+keep the previous epoch's (immutable) device arrays and retire normally,
+while the next dispatched stage reads the new epoch.  That is safe because
+a refresh never changes sampled blocks or gathered rows — the two-level
+sort order and the host tables are frozen at build time — only hit
+accounting and byte movement (pinned by tests/test_cache_refresh.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.allocation import reallocate_capacity
+from repro.core.cache import CacheRefreshDelta
+from repro.core.presample import run_presampling
+from repro.core.telemetry import WorkloadTelemetry
+from repro.graph.csc import BYTES_PER_ADJ_ELEMENT
+
+__all__ = ["RefreshConfig", "RefreshEvent", "CacheRefreshManager"]
+
+MODES = ("off", "interval", "events", "all")
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshConfig:
+    """Knobs for the online refresh loop (CLI: --refresh-mode/-interval)."""
+
+    mode: str = "off"  # off | interval | events | all
+    interval_batches: int = 0  # refresh period, in retired batches
+    history_decay: float = 0.5  # weight of prior counts per refresh
+    min_window_batches: int = 1  # skip interval refreshes on thinner windows
+    join_presample_batches: int = 2  # presample budget for a joining stream
+    # Bounded re-allocation: the adj share may move at most this fraction
+    # of the total budget per refresh.  Serve-time stage laps are noisier
+    # than the synchronized presample profile (and at depth>1 they are
+    # dispatch times), so an unclamped Eq. 1 re-run can slosh the whole
+    # budget between the caches on one noisy window; the step bound turns
+    # that into a damped walk toward the measured ratio.  None = unclamped.
+    max_split_step: float | None = 0.15
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"refresh mode must be one of {MODES}, got {self.mode!r}")
+        if self.mode in ("interval", "all") and self.interval_batches < 1:
+            raise ValueError("interval/all refresh modes need interval_batches >= 1")
+        if not 0.0 <= self.history_decay <= 1.0:
+            raise ValueError("history_decay must be in [0, 1]")
+        if self.max_split_step is not None and not 0.0 < self.max_split_step <= 1.0:
+            raise ValueError("max_split_step must be in (0, 1] or None")
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "off"
+
+    @property
+    def on_interval(self) -> bool:
+        return self.mode in ("interval", "all")
+
+    @property
+    def on_events(self) -> bool:
+        return self.mode in ("events", "all")
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshEvent:
+    """One completed refresh: trigger, outcome, and pause cost."""
+
+    epoch: int
+    reason: str  # "interval" | "stream-join" | "stream-leave" | "manual"
+    delta: CacheRefreshDelta
+    pause_seconds: float  # wall time the re-allocation + delta re-fill took
+    window_batches: int  # telemetry batches folded into this refresh
+    window_miss_rate: float  # feature miss rate of the folded window
+
+    def summary(self) -> dict:
+        return {
+            "epoch": self.epoch,
+            "reason": self.reason,
+            "pause_s": round(self.pause_seconds, 4),
+            "window_batches": self.window_batches,
+            "window_miss_rate": round(self.window_miss_rate, 4),
+            "adj_bytes": self.delta.allocation.adj_bytes,
+            "feat_bytes": self.delta.allocation.feat_bytes,
+            "feat_rows_inserted": self.delta.feat.rows_inserted,
+            "feat_rows_evicted": self.delta.feat.rows_evicted,
+            "feat_rows_kept": self.delta.feat.rows_kept,
+            "adj_nodes_changed": self.delta.adj.nodes_changed,
+            "adj_elements_regathered": self.delta.adj.elements_regathered,
+        }
+
+
+class CacheRefreshManager:
+    """Drives telemetry → Eq. 1 re-allocation → DualCache delta re-fills.
+
+    One manager per served pipeline.  The engine/serving layer calls
+    :meth:`note_retired` once per retired batch (the interval trigger) and
+    the stream hooks on membership changes (the event trigger); both
+    funnel into :meth:`refresh`.
+    """
+
+    def __init__(self, pipeline, dataset, *, fanouts, batch_size, config: RefreshConfig):
+        if not config.enabled:
+            raise ValueError("CacheRefreshManager needs an enabled RefreshConfig")
+        if not pipeline.caches.refreshable:
+            raise ValueError(
+                f"policy {pipeline.name!r} built no refreshable caches; online refresh "
+                "needs a presampled dual cache (dci/sci/aci/ducati)"
+            )
+        self.pipeline = pipeline
+        self.dataset = dataset
+        self.fanouts = tuple(fanouts)
+        self.batch_size = batch_size
+        self.config = config
+        self.telemetry = WorkloadTelemetry(dataset.num_nodes, dataset.graph.num_edges)
+        self.events: list[RefreshEvent] = []
+        self._clocks: list = []
+        self._retired_since_refresh = 0
+        # Decayed count/stage-time history, seeded from the preparation
+        # profile so the first refresh starts from the same ranking the
+        # build used.
+        stats = pipeline.presample
+        if stats is not None:
+            self._node_counts = stats.node_counts.astype(np.float64)
+            self._edge_counts = stats.edge_counts.astype(np.float64)
+            self._sample_s = float(sum(stats.sample_times))
+            self._feature_s = float(sum(stats.feature_times))
+        else:
+            self._node_counts = np.zeros(dataset.num_nodes, np.float64)
+            self._edge_counts = np.zeros(dataset.graph.num_edges, np.float64)
+            self._sample_s = self._feature_s = 0.0
+        # Per-seed presample contributions for join/leave re-merging
+        # (populated on join; initial streams' individual profiles were
+        # merged away during preparation, so a leave before any join
+        # relies on decay).  Each entry is decayed in lockstep with the
+        # history, so a leave subtracts exactly the remnant of the join
+        # that is still IN the history — not the original raw counts.
+        self._stream_stats: dict[int, dict] = {}
+
+    # ----------------------------------------------------------- triggers
+    def register_clock(self, clock) -> None:
+        """Track a stream's StageClock so its laps feed the Eq. 1 ratio."""
+        if clock not in self._clocks:
+            self._clocks.append(clock)
+
+    def note_retired(self) -> RefreshEvent | None:
+        """Interval trigger: called once per retired batch."""
+        if not self.config.on_interval:
+            return None
+        self._retired_since_refresh += 1
+        if self._retired_since_refresh < self.config.interval_batches:
+            return None
+        if self.telemetry.batches < self.config.min_window_batches:
+            return None
+        return self.refresh("interval")
+
+    def on_stream_join(self, seed: int) -> RefreshEvent | None:
+        """A stream joined at serve time: presample its seed, fold the
+        profile into the merged history, and (in event modes) refresh so
+        the shared cache serves the NEW union workload."""
+        stats = run_presampling(
+            self.dataset,
+            fanouts=self.fanouts,
+            batch_size=self.batch_size,
+            n_batches=self.config.join_presample_batches,
+            seed=seed,
+        )
+        self._stream_stats[seed] = {
+            "node_counts": stats.node_counts.astype(np.float64),
+            "edge_counts": stats.edge_counts.astype(np.float64),
+            "sample_s": float(sum(stats.sample_times)),
+            "feature_s": float(sum(stats.feature_times)),
+        }
+        self._node_counts += stats.node_counts
+        self._edge_counts += stats.edge_counts
+        self._sample_s += float(sum(stats.sample_times))
+        self._feature_s += float(sum(stats.feature_times))
+        if not self.config.on_events:
+            return None
+        return self.refresh("stream-join")
+
+    def on_stream_leave(self, seed: int) -> RefreshEvent | None:
+        """A stream left: subtract what REMAINS of its join-time presample
+        contribution (the stored profile is decayed in lockstep with the
+        history, so shared hot nodes' counts from other streams are
+        untouched) and refresh; departed live traffic also washes out of
+        the decayed history over subsequent windows."""
+        remnant = self._stream_stats.pop(seed, None)
+        if remnant is not None:
+            self._node_counts = np.maximum(self._node_counts - remnant["node_counts"], 0.0)
+            self._edge_counts = np.maximum(self._edge_counts - remnant["edge_counts"], 0.0)
+            self._sample_s = max(self._sample_s - remnant["sample_s"], 0.0)
+            self._feature_s = max(self._feature_s - remnant["feature_s"], 0.0)
+        if not self.config.on_events:
+            return None
+        return self.refresh("stream-leave")
+
+    def _clamp_step(self, current, desired):
+        """Bound the per-refresh budget move (see RefreshConfig.max_split_step)."""
+        from repro.core.allocation import CacheAllocation
+
+        step = self.config.max_split_step
+        total = desired.total_bytes
+        if step is None or total <= 0:
+            return desired
+        bound = int(step * total)
+        adj = int(min(max(desired.adj_bytes, current.adj_bytes - bound), current.adj_bytes + bound))
+        adj = max(0, min(adj, total, self.dataset.graph.num_edges * BYTES_PER_ADJ_ELEMENT))
+        feat = min(total - adj, self.dataset.features.nbytes)
+        return CacheAllocation(
+            total_bytes=total,
+            adj_bytes=adj,
+            feat_bytes=feat,
+            sample_fraction=desired.sample_fraction,
+        )
+
+    # ------------------------------------------------------------ refresh
+    def refresh(self, reason: str = "manual") -> RefreshEvent:
+        """Fold the current telemetry window into history, re-run Eq. 1 on
+        the measured stage ratio, and apply the delta re-fill."""
+        t0 = time.perf_counter()
+        for clock in self._clocks:
+            self.telemetry.pull_times(clock)
+        window = self.telemetry.snapshot()
+        self.telemetry.reset()
+        self._retired_since_refresh = 0
+        decay = self.config.history_decay
+        if window.batches:
+            self._node_counts = decay * self._node_counts + window.node_counts
+            self._edge_counts = decay * self._edge_counts + window.edge_counts
+            self._sample_s = decay * self._sample_s + float(sum(window.sample_times))
+            self._feature_s = decay * self._feature_s + float(sum(window.feature_times))
+            # Decay the recorded per-stream join contributions in lockstep,
+            # so a later leave subtracts only what the history still holds.
+            for remnant in self._stream_stats.values():
+                remnant["node_counts"] *= decay
+                remnant["edge_counts"] *= decay
+                remnant["sample_s"] *= decay
+                remnant["feature_s"] *= decay
+        caches = self.pipeline.caches
+        allocation = reallocate_capacity(
+            caches.allocation,
+            [self._sample_s],
+            [self._feature_s],
+            adj_need_bytes=self.dataset.graph.num_edges * BYTES_PER_ADJ_ELEMENT,
+            feat_need_bytes=self.dataset.features.nbytes,
+        )
+        allocation = self._clamp_step(caches.allocation, allocation)
+        delta = caches.refresh(
+            allocation=allocation,
+            node_counts=self._node_counts,
+            edge_counts=self._edge_counts,
+        )
+        event = RefreshEvent(
+            epoch=delta.epoch,
+            reason=reason,
+            delta=delta,
+            pause_seconds=time.perf_counter() - t0,
+            window_batches=window.batches,
+            window_miss_rate=window.miss_rate,
+        )
+        self.events.append(event)
+        return event

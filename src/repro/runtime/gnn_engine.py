@@ -24,6 +24,7 @@ bytes move (and therefore wall clock) changes.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +37,14 @@ from repro.models import gnn as gnn_models
 from repro.runtime.pipeline import PipelinedExecutor, Stage
 from repro.utils.timing import StageClock
 
-__all__ = ["GNNInferenceEngine", "InferenceReport", "StreamRuntime", "stream_stages"]
+__all__ = [
+    "GNNInferenceEngine",
+    "InferenceReport",
+    "StreamRuntime",
+    "auto_pipeline_depth",
+    "stream_stages",
+    "summarize_epoch_counters",
+]
 
 # Link speeds for the modeled-transfer projection (bytes/s).
 PCIE4_BW = 25e9  # paper's RTX 4090 host link (the UVA miss path)
@@ -84,6 +92,10 @@ class InferenceReport:
     prefetch: bool = False
     prefetch_seconds: float = 0.0
     prefetched_rows: int = 0
+    # Online-refresh accounting (empty/None when refresh is off, keeping
+    # the report — and every baseline comparison over it — unchanged):
+    refresh_events: list = dataclasses.field(default_factory=list)
+    epoch_hits: dict | None = None  # epoch -> per-epoch hit-rate summary
 
     @property
     def total_seconds(self) -> float:
@@ -120,7 +132,7 @@ class InferenceReport:
         )
 
     def summary(self) -> dict:
-        return {
+        out = {
             "policy": self.policy,
             "batches": self.num_batches,
             "pipeline_depth": self.pipeline_depth,
@@ -135,6 +147,13 @@ class InferenceReport:
             "feat_hit_rate": round(self.feat_hit_rate, 4),
             "modeled_transfer_s": round(self.modeled_transfer_seconds(), 6),
         }
+        if self.refresh_events:
+            # Per-epoch rates replace the single lifetime aggregate as the
+            # headline when the cache changed mid-run — a lifetime mean
+            # hides exactly the recovery a refresh exists to produce.
+            out["refresh_events"] = [e.summary() for e in self.refresh_events]
+            out["per_epoch"] = self.epoch_hits
+        return out
 
 
 class StreamRuntime:
@@ -185,6 +204,15 @@ class StreamRuntime:
         self.feat_hits = 0
         self.feat_lookups = 0
         self.prefetched_rows = 0
+        # Per-cache-epoch hit counters: epoch -> [adj_hits, adj_lookups,
+        # feat_hits, feat_lookups, batches].  With refresh off everything
+        # lands in epoch 0 and the lifetime counters above tell the whole
+        # story; with refresh on the split is what the drift benchmark and
+        # serve reports surface.
+        self.epoch_counters: dict[int, list[int]] = {}
+        # Serve-time telemetry sink (set by the refresh manager); None in
+        # the default path, which then records nothing at retire.
+        self.telemetry = None
         self.outputs: list[np.ndarray] | None = [] if collect_outputs else None
         # RAIN cross-batch reuse state (only touched when the policy asks).
         self._prev_map = np.full(num_nodes, -1, np.int64)
@@ -193,6 +221,10 @@ class StreamRuntime:
 
     # ------------------------------------------------------------- stages
     def sample(self, ctx):
+        # Stamp the cache epoch the batch dispatches against — retire-time
+        # accounting attributes its hits to this epoch even if a refresh
+        # lands while the batch is still in flight.
+        ctx.epoch = self.pipe.caches.epoch
         self.key, sub = jax.random.split(self.key)
         block = sample_blocks(sub, self.pipe.caches.dgraph, jnp.asarray(ctx.payload), self.fanouts)
         # Dispatch the hit-stat reductions here, in-pipeline: dispatched
@@ -254,14 +286,27 @@ class StreamRuntime:
         """Host-side accounting; runs per batch, in order, after the batch's
         stage outputs (incl. the stat scalars) are ready, so the int()
         conversions only pay a tiny device→host transfer."""
-        _, bh, bt = ctx.outputs["sample"]
+        block, bh, bt = ctx.outputs["sample"]
         _, hit, hsum = ctx.outputs["feature"]
-        self.adj_hits += int(bh)
-        self.adj_lookups += int(bt)
-        self.feat_hits += int(hsum)
-        self.feat_lookups += int(hit.shape[0])
+        bh, bt, hsum, lookups = int(bh), int(bt), int(hsum), int(hit.shape[0])
+        self.adj_hits += bh
+        self.adj_lookups += bt
+        self.feat_hits += hsum
+        self.feat_lookups += lookups
+        per_epoch = self.epoch_counters.setdefault(ctx.epoch, [0, 0, 0, 0, 0])
+        per_epoch[0] += bh
+        per_epoch[1] += bt
+        per_epoch[2] += hsum
+        per_epoch[3] += lookups
+        per_epoch[4] += 1
+        if self.telemetry is not None:
+            self.telemetry.observe_batch(block.input_nodes, hit, block.edge_slots)
         if self.outputs is not None:
             self.outputs.append(np.asarray(ctx.outputs["compute"]))
+
+    def epoch_hit_rates(self) -> dict[int, dict]:
+        """Per-epoch hit-rate summary (one entry per cache epoch served)."""
+        return summarize_epoch_counters(self.epoch_counters)
 
 
 def stream_stages(runtime_of, *, prefetch: bool = False) -> list[Stage]:
@@ -301,6 +346,35 @@ def stream_stages(runtime_of, *, prefetch: bool = False) -> list[Stage]:
     ]
 
 
+def summarize_epoch_counters(counters: dict[int, list[int]]) -> dict[int, dict]:
+    """Per-epoch hit-rate summary from ``[adj_hits, adj_lookups, feat_hits,
+    feat_lookups, batches]`` counter lists (the StreamRuntime layout) —
+    shared by the per-stream and the serve-aggregate reports."""
+    return {
+        epoch: {
+            "batches": c[4],
+            "adj_hit_rate": round(c[0] / max(c[1], 1), 4),
+            "feat_hit_rate": round(c[2] / max(c[3], 1), 4),
+        }
+        for epoch, c in sorted(counters.items())
+    }
+
+
+def auto_pipeline_depth(prep_seconds: float, compute_seconds: float, *, max_depth: int = 4) -> int:
+    """Pick an executor window from the measured compute:prep ratio.
+
+    The pipeline hides batch *i+1*'s preparation (sample + gather) behind
+    batch *i*'s forward, so ``depth=2`` already wins everything when
+    compute >= prep.  When prep dominates, a deeper window keeps the
+    device fed across several short forwards — roughly one extra slot per
+    compute-sized chunk of prep — saturating at ``max_depth`` (beyond
+    that the run is prep-bound and more slots only hold memory).
+    """
+    if compute_seconds <= 0.0:
+        return 2
+    return max(2, min(max_depth, 1 + round(prep_seconds / compute_seconds)))
+
+
 class GNNInferenceEngine:
     def __init__(
         self,
@@ -311,7 +385,7 @@ class GNNInferenceEngine:
         batch_size: int = 1024,
         seed: int = 0,
         params=None,
-        pipeline_depth: int = 1,
+        pipeline_depth: int | str = 1,
     ):
         self.dataset = dataset
         self.model = model
@@ -325,6 +399,7 @@ class GNNInferenceEngine:
         )
         self.pipeline: PreparedPipeline | None = None
         self.last_outputs: list[np.ndarray] | None = None
+        self._auto_depth: int | None = None  # resolved "auto" depth, cached
 
     # ------------------------------------------------------------ prepare
     def prepare(
@@ -438,6 +513,50 @@ class GNNInferenceEngine:
             gnn_models.forward(self.params, wfeats, model=self.model, fanouts=self.fanouts)
         )
 
+    # ------------------------------------------------------ adaptive depth
+    def resolve_pipeline_depth(self, depth=None, *, seeds=None) -> int:
+        """Resolve the ``pipeline_depth`` knob, including ``"auto"``.
+
+        ``"auto"`` probes ONE serial batch against the prepared pipeline
+        (after an untimed warmup, so compilation is excluded) and derives
+        the window from the measured compute:prep ratio — the same
+        decomposition bench_breakdown's serial rows report.  The probe
+        uses its own RNG stream, so the run it sizes is unaffected; the
+        result is cached on the engine."""
+        if depth is None:
+            depth = self.pipeline_depth
+        if depth != "auto":
+            return int(depth)
+        if self._auto_depth is None:
+            if self.pipeline is None:
+                raise RuntimeError("call prepare() before resolving pipeline_depth='auto'")
+            if seeds is None:
+                seeds = self._batches(1)[0]
+            sample_s, feature_s, compute_s = self._probe_stage_seconds(np.asarray(seeds))
+            self._auto_depth = auto_pipeline_depth(sample_s + feature_s, compute_s)
+        return self._auto_depth
+
+    def _probe_stage_seconds(self, seeds: np.ndarray) -> tuple[float, float, float]:
+        """Fully synchronized per-stage seconds for one batch (best of 2)."""
+        self.warmup(seeds)
+        pipe = self.pipeline
+        best = None
+        for rep in range(2):
+            key = jax.random.PRNGKey(self.seed + 1000 + rep)
+            t0 = time.perf_counter()
+            block = sample_blocks(key, pipe.caches.dgraph, jnp.asarray(seeds), self.fanouts)
+            jax.block_until_ready(block.frontiers[-1])
+            t1 = time.perf_counter()
+            feats, _ = pipe.caches.store.gather(block.input_nodes)
+            jax.block_until_ready(feats)
+            t2 = time.perf_counter()
+            out = gnn_models.forward(self.params, feats, model=self.model, fanouts=self.fanouts)
+            jax.block_until_ready(out)
+            t3 = time.perf_counter()
+            lap = (t1 - t0, t2 - t1, t3 - t2)
+            best = lap if best is None or sum(lap) < sum(best) else best
+        return best
+
     def run(
         self,
         *,
@@ -449,6 +568,7 @@ class GNNInferenceEngine:
         prefetch: bool | None = None,
         use_kernel: bool | None = None,
         gather_buffers: int | None = None,
+        refresh=None,
     ) -> InferenceReport:
         """Run inference over the dataset's test batches (or explicit seed
         ``batches``) and return the stage-time / hit-rate report.
@@ -459,13 +579,24 @@ class GNNInferenceEngine:
         ``use_kernel`` / ``gather_buffers`` default from the prepared
         pipeline; outputs and hit accounting are identical with any
         combination (equivalence-tested), only where the miss bytes move
-        (and therefore wall clock) changes."""
+        (and therefore wall clock) changes.
+
+        ``pipeline_depth`` additionally accepts ``"auto"`` (derive the
+        window from a measured compute:prep probe, see
+        :meth:`resolve_pipeline_depth`).  ``refresh`` takes a
+        :class:`~repro.runtime.cache_refresh.RefreshConfig`: an interval
+        mode re-allocates and delta re-fills the caches every N retired
+        batches from live telemetry.  Outputs are bit-identical with
+        refresh on or off (refreshes move bytes, not values); hit
+        accounting then comes per epoch via ``report.epoch_hits``."""
         if self.pipeline is None:
             raise RuntimeError("call prepare() first")
         pipe = self.pipeline
-        depth = self.pipeline_depth if pipeline_depth is None else pipeline_depth
         if batches is None:
             batches = self._batches(max_batches)
+        depth = self.resolve_pipeline_depth(
+            pipeline_depth, seeds=batches[0] if batches else None
+        )
         if warmup:
             self.warmup(
                 batches[0],
@@ -490,11 +621,33 @@ class GNNInferenceEngine:
             gather_buffers=gather_buffers,
         )
         clock = StageClock(overlap=depth > 1)
+        manager = None
+        if refresh is not None and refresh.enabled:
+            from repro.runtime.cache_refresh import CacheRefreshManager
+
+            manager = CacheRefreshManager(
+                pipe,
+                self.dataset,
+                fanouts=self.fanouts,
+                batch_size=self.batch_size,
+                config=refresh,
+            )
+            manager.register_clock(clock)
+            rt.telemetry = manager.telemetry
+
+        def on_retire(ctx):
+            # Retire runs between batch dispatches, so an interval refresh
+            # lands here: in-flight batches keep the old epoch's arrays,
+            # the next dispatch reads the new epoch.
+            rt.record(ctx)
+            if manager is not None:
+                manager.note_retired()
+
         executor = PipelinedExecutor(
             stream_stages(lambda c: rt, prefetch=rt.prefetch),
             depth=depth,
             clock=clock,
-            on_retire=rt.record,
+            on_retire=on_retire,
         )
         executor.run(batches)
         self.last_outputs = rt.outputs
@@ -515,4 +668,6 @@ class GNNInferenceEngine:
             prefetch=rt.prefetch,
             prefetch_seconds=clock.total("prefetch"),
             prefetched_rows=rt.prefetched_rows,
+            refresh_events=list(manager.events) if manager is not None else [],
+            epoch_hits=rt.epoch_hit_rates() if manager is not None else None,
         )

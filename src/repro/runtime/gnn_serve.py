@@ -16,13 +16,25 @@ schedule against a single shared :class:`~repro.core.cache.DualCache`:
   - per-stream hit/latency accounting plus shared aggregate accounting
     come out in a :class:`ServeReport`.
 
-Because the caches are immutable at serve time and every stream's state is
-private to its ``StreamRuntime``, each stream's outputs, RNG sequence, and
-hit counters are bit-identical to running that stream's batches alone
-(tests/test_gnn_serve.py).  What sharing buys is systemic: one presample +
-allocation + fill + XLA compile amortized over all streams, and one
-budget-B cache serving everyone instead of N private B/N caches — the
-axes benchmarks/bench_multistream.py measures.
+Because every stream's state is private to its ``StreamRuntime``, each
+stream's outputs, RNG sequence, and hit counters are bit-identical to
+running that stream's batches alone (tests/test_gnn_serve.py).  What
+sharing buys is systemic: one presample + allocation + fill + XLA compile
+amortized over all streams, and one budget-B cache serving everyone
+instead of N private B/N caches — the axes
+benchmarks/bench_multistream.py measures.
+
+Online refresh (``refresh=RefreshConfig(...)``) closes the loop for
+long-lived serving: retire-path telemetry feeds a
+:class:`~repro.runtime.cache_refresh.CacheRefreshManager` that
+periodically (and on stream join/leave — :meth:`MultiStreamServer.add_stream`
+after serving has started, :meth:`MultiStreamServer.remove_stream`)
+re-runs Eq. 1 on the measured serve-time stage ratio and swaps the shared
+``DualCache`` to a new epoch as a delta re-fill.  Outputs stay
+bit-identical (a refresh moves bytes, never values — the serial-
+equivalence guarantee is unchanged); hit accounting is then reported per
+epoch.  With refresh off the caches never mutate and the serve path is
+bit-for-bit the pre-refresh system.
 """
 
 from __future__ import annotations
@@ -42,6 +54,7 @@ from repro.runtime.gnn_engine import (
     StreamRuntime,
     modeled_transfer_seconds,
     stream_stages,
+    summarize_epoch_counters,
 )
 from repro.runtime.pipeline import PipelinedExecutor
 from repro.utils.timing import StageClock
@@ -90,6 +103,7 @@ class StreamReport:
     max_latency_s: float
     prefetch_seconds: float = 0.0
     prefetched_rows: int = 0
+    epoch_hits: dict | None = None  # per-cache-epoch rates (refresh on)
 
     @property
     def adj_hit_rate(self) -> float:
@@ -100,7 +114,7 @@ class StreamReport:
         return self.feat_hits / max(self.feat_lookups, 1)
 
     def summary(self) -> dict:
-        return {
+        out = {
             "stream": self.stream_id,
             "batches": self.num_batches,
             "adj_hit_rate": round(self.adj_hit_rate, 4),
@@ -108,6 +122,9 @@ class StreamReport:
             "mean_latency_s": round(self.mean_latency_s, 4),
             "max_latency_s": round(self.max_latency_s, 4),
         }
+        if self.epoch_hits is not None:
+            out["per_epoch"] = self.epoch_hits
+        return out
 
 
 @dataclasses.dataclass
@@ -127,6 +144,9 @@ class ServeReport:
     feat_row_bytes: int
     streams: list[StreamReport]
     prefetch: bool = False
+    # Online-refresh accounting (refresh off → empty/None, summary as before):
+    refresh_events: list = dataclasses.field(default_factory=list)
+    epochs: dict | None = None  # aggregate per-epoch hit rates across streams
 
     @property
     def total_batches(self) -> int:
@@ -179,7 +199,7 @@ class ServeReport:
         )
 
     def summary(self) -> dict:
-        return {
+        out = {
             "policy": self.policy,
             "streams": self.num_streams,
             "depth": self.depth,
@@ -192,6 +212,12 @@ class ServeReport:
             "modeled_transfer_s": round(self.modeled_transfer_seconds(), 6),
             "per_stream": [s.summary() for s in self.streams],
         }
+        if self.epochs is not None:
+            # With refresh on, the lifetime aggregate above hides the
+            # post-refresh recovery — the per-epoch split is the headline.
+            out["per_epoch"] = self.epochs
+            out["refresh_events"] = [e.summary() for e in self.refresh_events]
+        return out
 
 
 class MultiStreamServer:
@@ -223,19 +249,34 @@ class MultiStreamServer:
         self,
         engine: GNNInferenceEngine,
         *,
-        depth: int = 2,
+        depth: int | str = 2,
         max_inflight_per_stream: int | None = None,
         prefetch: bool | None = None,
         use_kernel: bool | None = None,
         gather_buffers: int | None = None,
+        refresh=None,
     ):
         if engine.pipeline is None:
             raise RuntimeError("prepare() the engine before constructing the server")
+        if depth == "auto":
+            depth = engine.resolve_pipeline_depth("auto")
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self.engine = engine
         self.depth = depth
         pipe = engine.pipeline
+        self.refresh_manager = None
+        if refresh is not None and refresh.enabled:
+            from repro.runtime.cache_refresh import CacheRefreshManager
+
+            self.refresh_manager = CacheRefreshManager(
+                pipe,
+                engine.dataset,
+                fanouts=engine.fanouts,
+                batch_size=engine.batch_size,
+                config=refresh,
+            )
+        self._started = False  # join/leave events fire only once serving began
         self.prefetch = pipe.prefetch if prefetch is None else prefetch
         self.use_kernel = pipe.use_kernel if use_kernel is None else use_kernel
         self.gather_buffers = pipe.gather_buffers if gather_buffers is None else gather_buffers
@@ -260,7 +301,14 @@ class MultiStreamServer:
 
         ``seed`` fixes the stream's RNG: the stream's results are
         bit-identical to ``GNNInferenceEngine(seed=seed, ...)`` running the
-        same ``batches`` alone against the same prepared pipeline."""
+        same ``batches`` alone against the same prepared pipeline.
+
+        With online refresh enabled, a stream added AFTER serving has
+        started is a serve-time join: the refresh manager presamples the
+        new seed, re-merges it into the workload history, and (in event
+        modes) applies an incremental refresh so the shared cache serves
+        the new union workload.  Existing streams observe only the epoch
+        bump — their outputs stay serial-equivalent."""
         sid = len(self.streams)
         if seed is None:
             seed = self.engine.seed + sid
@@ -284,6 +332,22 @@ class MultiStreamServer:
             queue=collections.deque(np.asarray(b) for b in batches),
         )
         self.streams.append(state)
+        if self.refresh_manager is not None:
+            runtime.telemetry = self.refresh_manager.telemetry
+            self.refresh_manager.register_clock(state.clock)
+            if self._started:
+                self.refresh_manager.on_stream_join(seed)
+        return state
+
+    def remove_stream(self, stream_id: int) -> StreamState:
+        """Serve-time leave: drop the stream's remaining queue (batches
+        already in flight still retire normally) and, with refresh
+        enabled, re-merge the workload without it and refresh the shared
+        cache incrementally."""
+        state = self.streams[stream_id]
+        state.queue.clear()
+        if self.refresh_manager is not None and self._started:
+            self.refresh_manager.on_stream_leave(state.seed)
         return state
 
     # ---------------------------------------------------------- admission
@@ -322,11 +386,16 @@ class MultiStreamServer:
         s.seeds_served += int(np.asarray(ctx.payload).shape[0])
         s.retired += 1
         s.inflight -= 1
+        if self.refresh_manager is not None:
+            # Retire runs between dispatches, so an interval refresh lands
+            # here — in-flight batches keep the old epoch's arrays.
+            self.refresh_manager.note_retired()
 
     # ----------------------------------------------------------------- run
     def run(self, *, warmup: bool = True) -> ServeReport:
         if not self.streams:
             raise RuntimeError("add_stream() at least one stream before run()")
+        self._started = True
         if warmup:
             first = next(s for s in self.streams if s.queue)
             self.engine.warmup(
@@ -353,7 +422,21 @@ class MultiStreamServer:
             feat_row_bytes=self.engine.dataset.feature_nbytes_per_row(),
             streams=[self._stream_report(s) for s in self.streams],
             prefetch=self.prefetch,
+            refresh_events=(
+                list(self.refresh_manager.events) if self.refresh_manager is not None else []
+            ),
+            epochs=self._aggregate_epochs() if self.refresh_manager is not None else None,
         )
+
+    def _aggregate_epochs(self) -> dict[int, dict]:
+        """Sum per-epoch counters across streams — the shared cache's view."""
+        totals: dict[int, list[int]] = {}
+        for s in self.streams:
+            for epoch, c in s.runtime.epoch_counters.items():
+                agg = totals.setdefault(epoch, [0, 0, 0, 0, 0])
+                for i, v in enumerate(c):
+                    agg[i] += v
+        return summarize_epoch_counters(totals)
 
     def _stream_report(self, s: StreamState) -> StreamReport:
         rt = s.runtime
@@ -373,6 +456,7 @@ class MultiStreamServer:
             max_latency_s=float(np.max(s.latencies)) if s.latencies else 0.0,
             prefetch_seconds=s.clock.total("prefetch"),
             prefetched_rows=rt.prefetched_rows,
+            epoch_hits=rt.epoch_hit_rates() if self.refresh_manager is not None else None,
         )
 
 

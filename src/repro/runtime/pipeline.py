@@ -70,15 +70,21 @@ class BatchContext:
     ``payload`` is the batch input (seed node ids); ``outputs[name]`` holds
     each completed stage's result.  ``stream`` tags the request stream the
     batch belongs to (``None`` for single-stream runs); multi-stream stage
-    functions use it to resolve per-stream state.
+    functions use it to resolve per-stream state.  ``epoch`` is the cache
+    epoch the batch ran against (stamped by the first stage that reads the
+    caches — see ``StreamRuntime.sample``): under online refresh
+    (runtime/cache_refresh.py) an epoch boundary can fall between two
+    in-flight batches, and retire-time accounting attributes each batch to
+    the epoch it actually dispatched against.
     """
 
-    __slots__ = ("index", "payload", "stream", "outputs")
+    __slots__ = ("index", "payload", "stream", "epoch", "outputs")
 
     def __init__(self, index: int, payload: Any, stream: Any = None):
         self.index = index
         self.payload = payload
         self.stream = stream
+        self.epoch = 0
         self.outputs: dict[str, Any] = {}
 
 

@@ -3,7 +3,12 @@
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.allocation import allocate_capacity, available_budget
+from repro.core.allocation import (
+    CacheAllocation,
+    allocate_capacity,
+    available_budget,
+    reallocate_capacity,
+)
 
 
 def test_eq1_proportional_split():
@@ -59,6 +64,46 @@ def test_saturation_spill():
     # both saturate when the budget covers everything
     b = allocate_capacity([1.0], [1.0], 10_000, adj_need_bytes=100, feat_need_bytes=200)
     assert b.adj_bytes == 100 and b.feat_bytes == 200
+
+
+def test_spill_zero_total_budget():
+    """A zero budget is legal (no memory left after the workload): both
+    sides get nothing, whatever the needs and ratio say."""
+    a = allocate_capacity([5.0], [1.0], 0, adj_need_bytes=100, feat_need_bytes=100)
+    assert a.adj_bytes == 0 and a.feat_bytes == 0 and a.total_bytes == 0
+    b = allocate_capacity([5.0], [1.0], 0)  # and with no needs given
+    assert b.adj_bytes == 0 and b.feat_bytes == 0
+
+
+def test_spill_both_needs_saturated():
+    """Budget exceeding adj_need + feat_need saturates BOTH caches and
+    leaves the remainder unallocated (Fig. 9: all strategies coincide
+    once everything fits)."""
+    a = allocate_capacity([1.0], [3.0], 1_000_000, adj_need_bytes=300, feat_need_bytes=500)
+    assert a.adj_bytes == 300 and a.feat_bytes == 500
+    # the extreme ratios saturate identically
+    b = allocate_capacity([1.0], [0.0], 1_000_000, adj_need_bytes=300, feat_need_bytes=500)
+    c = allocate_capacity([0.0], [1.0], 1_000_000, adj_need_bytes=300, feat_need_bytes=500)
+    assert (b.adj_bytes, b.feat_bytes) == (c.adj_bytes, c.feat_bytes) == (300, 500)
+
+
+def test_feat_spill_with_unbounded_adj():
+    """feat_need spill with adj_need=None: the feature excess must flow to
+    the adjacency cache UNCAPPED (no adj_need to clamp it)."""
+    # feature dominates -> Eq.1 gives feat 900; feat only holds 100 bytes
+    a = allocate_capacity([1.0], [9.0], 1000, feat_need_bytes=100)
+    assert a.feat_bytes == 100
+    assert a.adj_bytes == 900  # 100 base + 800 spill, no cap
+    assert a.adj_bytes + a.feat_bytes == 1000
+
+
+def test_reallocate_keeps_total_and_follows_new_ratio():
+    """Serve-time Eq. 1 re-run: same budget, new measured ratio."""
+    base = allocate_capacity([1.0], [1.0], 1000)
+    again = reallocate_capacity(base, [3.0], [1.0], adj_need_bytes=10_000)
+    assert isinstance(again, CacheAllocation)
+    assert again.total_bytes == base.total_bytes == 1000
+    assert again.adj_bytes == 750 and again.feat_bytes == 250
 
 
 # --------------------------------------------------- allocation invariants

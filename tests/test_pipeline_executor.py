@@ -60,9 +60,12 @@ def test_depth_equivalence(small_dataset, policy, depth):
     [(1, True, False), (3, True, False), (2, True, True), (2, False, True)],
 )
 def test_knob_equivalence(small_dataset, policy, depth, prefetch, use_kernel):
-    """The new execution knobs (miss-path prefetch, Pallas kernel route)
-    never change outputs or hit accounting — only where the miss bytes
-    move.  Every combination must match the plain serial run bit for bit."""
+    """The execution knobs (miss-path prefetch, Pallas kernel route, and
+    an explicitly-disabled refresh config) never change outputs or hit
+    accounting — only where the miss bytes move.  Every combination must
+    match the plain serial run bit for bit."""
+    from repro.runtime.cache_refresh import RefreshConfig
+
     serial, piped = _paired_engines(small_dataset, policy)
     r1 = serial.run(max_batches=4, pipeline_depth=1, collect_outputs=True)
     o1 = serial.last_outputs
@@ -72,17 +75,48 @@ def test_knob_equivalence(small_dataset, policy, depth, prefetch, use_kernel):
         collect_outputs=True,
         prefetch=prefetch,
         use_kernel=use_kernel,
+        refresh=RefreshConfig(mode="off"),
     )
     o2 = piped.last_outputs
     assert r2.prefetch == prefetch
     assert (r1.adj_hits, r1.adj_lookups) == (r2.adj_hits, r2.adj_lookups)
     assert (r1.feat_hits, r1.feat_lookups) == (r2.feat_hits, r2.feat_lookups)
+    # refresh off: no epochs, no events, no cache mutation — the report
+    # (and therefore every baseline comparison over it) is unchanged
+    assert r2.refresh_events == [] and r2.epoch_hits is None
+    assert piped.pipeline.caches.epoch == 0
     if prefetch and policy != "rain":
         # every miss was staged ahead of its gather (RAIN reuses the
         # previous batch first, so its prefetch count is over-staged)
         assert r2.prefetched_rows == r2.feat_lookups - r2.feat_hits
     for a, b in zip(o1, o2):
         np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("depth,prefetch", [(1, False), (2, True)])
+def test_knob_equivalence_refresh_on_outputs_identical(small_dataset, depth, prefetch):
+    """Even with refresh ENABLED mid-run, outputs stay bit-identical to the
+    serial refresh-free run — a refresh re-ranks the caches (bytes), never
+    the values; only hit accounting may differ, reported per epoch."""
+    from repro.runtime.cache_refresh import RefreshConfig
+
+    serial, piped = _paired_engines(small_dataset, "dci")
+    r1 = serial.run(max_batches=6, pipeline_depth=1, collect_outputs=True)
+    o1 = serial.last_outputs
+    r2 = piped.run(
+        max_batches=6,
+        pipeline_depth=depth,
+        collect_outputs=True,
+        prefetch=prefetch,
+        refresh=RefreshConfig(mode="interval", interval_batches=2),
+    )
+    assert piped.pipeline.caches.epoch >= 1 and len(r2.refresh_events) >= 1
+    assert r1.num_batches == r2.num_batches
+    for a, b in zip(o1, piped.last_outputs):
+        np.testing.assert_array_equal(a, b)
+    if prefetch:
+        # staged-row accounting still matches the (per-epoch) misses
+        assert r2.prefetched_rows == r2.feat_lookups - r2.feat_hits
 
 
 def test_prefetch_off_keeps_stage_list_and_report_defaults(small_dataset):
