@@ -12,11 +12,14 @@ on the same workload.  The pipelined+prefetch rows additionally stage each
 batch's MISSED host feature rows onto the device during the previous
 batch's forward (the DCI miss-path transfer, moved off the critical path).
 
-``--quick`` runs one dataset across the fan-out sweep and gates on the
-prefetch mode keeping up with plain pipelining: geomean throughput ratio
-pipelined+prefetch / pipelined >= NOISE_FLOOR (CPU wall clocks at this
-scale jitter a few percent; on an accelerator the ratio is the win
-itself).  Exit is nonzero on failure — the CI hook.
+``--quick`` runs one dataset across the fan-out sweep and gates on two
+ratios: (1) the prefetch mode keeping up with plain pipelining — geomean
+throughput ratio pipelined+prefetch / pipelined >= NOISE_FLOOR (CPU wall
+clocks at this scale jitter a few percent; on an accelerator the ratio is
+the win itself) — and (2) the unique-frontier dedup paying for itself on
+the kernel route: feature-stage geomean speedup pipelined+kernel+dedup
+over pipelined+kernel >= DEDUP_FLOOR, with gathered rows cut by the
+measured duplication factor.  Exit is nonzero on failure — the CI hook.
 """
 
 from __future__ import annotations
@@ -25,12 +28,30 @@ import argparse
 import json
 import sys
 
-from benchmarks.common import FANOUTS, MODES, emit, geomean, make_engine, run_policy_modes
+from benchmarks.common import (
+    CACHE_BYTES,
+    FANOUTS,
+    KERNEL_MODES,
+    MODES,
+    emit,
+    geomean,
+    make_engine,
+    run_policy_modes,
+)
 
 # Quick-gate tolerance: prefetch must not cost throughput beyond wall-clock
 # noise.  The gate is geomean across workloads, so one noisy cell cannot
 # fail it alone.
 NOISE_FLOOR = 0.9
+# Dedup gate: the unique-frontier feature stage must be at least as fast
+# as the duplicate-carrying kernel route (geomean across the fan-out
+# sweep).  The measured reduction is severalfold, so 1.0 is a regression
+# floor, not a noise band.
+DEDUP_FLOOR = 1.0
+# Contained workload for the kernel-route comparison: the manual-DMA
+# kernel in interpret mode walks rows in an XLA while loop, so the full
+# benchmark batch size would dominate CI time without changing the ratio.
+DEDUP_BATCH = 128
 
 
 def run(datasets=("reddit", "ogbn-products"), modes=MODES) -> list[dict]:
@@ -65,6 +86,8 @@ def run(datasets=("reddit", "ogbn-products"), modes=MODES) -> list[dict]:
                         "total_s": rep.total_seconds,
                         "batches_per_s": rep.num_batches / max(rep.total_seconds, 1e-9),
                         "overlap_speedup_vs_serial": round(overlap_speedup, 3),
+                        "rows_gathered": rep.gathered_rows,
+                        "duplication_factor": round(rep.duplication_factor, 2),
                     }
                 )
                 emit(
@@ -74,6 +97,64 @@ def run(datasets=("reddit", "ogbn-products"), modes=MODES) -> list[dict]:
                     f"overlap_speedup={overlap_speedup:.2f}",
                 )
     return rows
+
+
+def run_dedup(dataset="ogbn-products", fanouts=FANOUTS, batch_size=DEDUP_BATCH) -> list[dict]:
+    """Kernel-route comparison: per-row DMA tiles vs dedup + row-block tiles.
+
+    One row per fan-out, policy ``dci`` (a populated dual cache is what
+    makes the sorted-run hit blocks contiguous).  Reports the feature-stage
+    seconds of both modes, the measured duplication factor, and the
+    unique/gathered row counts the dedup mode actually moved.
+    """
+    rows = []
+    for fo_name, fo in fanouts.items():
+        eng = make_engine(dataset, fanouts=fo, batch_size=batch_size)
+        by_mode = run_policy_modes(eng, "dci", cache_bytes=CACHE_BYTES, modes=KERNEL_MODES)
+        kernel = by_mode["pipelined+kernel"]
+        dedup = by_mode["pipelined+kernel+dedup"]
+        feature_speedup = kernel.feature_seconds / max(dedup.feature_seconds, 1e-9)
+        row = {
+            "dataset": dataset,
+            "fanout": fo_name,
+            "feat_lookups": dedup.feat_lookups,
+            "unique_rows": dedup.unique_rows,
+            "rows_gathered": dedup.gathered_rows,
+            "duplication_factor": round(dedup.duplication_factor, 2),
+            "kernel_feature_s": round(kernel.feature_seconds, 4),
+            "dedup_feature_s": round(dedup.feature_seconds, 4),
+            "feature_speedup": round(feature_speedup, 3),
+            "hits_identical": (kernel.feat_hits, kernel.feat_lookups)
+            == (dedup.feat_hits, dedup.feat_lookups),
+        }
+        rows.append(row)
+        emit(
+            f"breakdown-dedup/{dataset}/{fo_name}",
+            dedup.feature_seconds / dedup.num_batches * 1e6,
+            f"feature_speedup={feature_speedup:.2f};"
+            f"dup_factor={row['duplication_factor']};"
+            f"unique_rows={row['unique_rows']};gathered={row['rows_gathered']}",
+        )
+    return rows
+
+
+def dedup_gate(rows, floor: float = DEDUP_FLOOR) -> tuple[float, bool]:
+    """Geomean feature-stage speedup of dedup+kernel over kernel, plus the
+    row-reduction invariants.
+
+    Passes when (1) the geomean speedup clears ``floor``, (2) every row
+    actually gathered at most ``feat_lookups / duplication_factor`` rows
+    modulo the pow2 bucket padding (gathered <= 2x unique), and (3) hit
+    accounting was identical between the modes."""
+    if not rows:
+        raise ValueError("need at least one dedup row to gate")
+    g = geomean(r["feature_speedup"] for r in rows)
+    reduced = all(
+        r["unique_rows"] < r["feat_lookups"] and r["rows_gathered"] <= 2 * r["unique_rows"]
+        for r in rows
+    )
+    identical = all(r["hits_identical"] for r in rows)
+    return g, g >= floor and reduced and identical
 
 
 def prefetch_gate(rows, noise_floor: float = NOISE_FLOOR) -> tuple[float, bool]:
@@ -99,22 +180,34 @@ def main() -> None:
         "--quick",
         action="store_true",
         help="one dataset across the fan-out sweep + the prefetch-vs-pipelined "
-        "throughput gate (nonzero exit on regression)",
+        "throughput gate and the dedup+kernel-vs-kernel feature-stage gate "
+        "(nonzero exit on regression)",
     )
     args = ap.parse_args()
     rows = run(datasets=("ogbn-products",)) if args.quick else run()
     for r in rows:
         print(r)
+    dedup_rows = run_dedup() if args.quick else []
+    for r in dedup_rows:
+        print(r)
     if args.json:
         with open(args.json, "w") as f:
-            json.dump(rows, f, indent=1)
+            json.dump({"breakdown": rows, "dedup": dedup_rows} if dedup_rows else rows, f, indent=1)
     if args.quick:
+        failed = False
         ratio, ok = prefetch_gate(rows)
         print(
             f"check,0.00,prefetch_vs_pipelined_geomean={ratio:.3f};"
             f"floor={NOISE_FLOOR};{'PASS' if ok else 'FAIL'}"
         )
-        if not ok:
+        failed |= not ok
+        ratio, ok = dedup_gate(dedup_rows)
+        print(
+            f"check,0.00,dedup_vs_kernel_feature_geomean={ratio:.3f};"
+            f"floor={DEDUP_FLOOR};{'PASS' if ok else 'FAIL'}"
+        )
+        failed |= not ok
+        if failed:
             sys.exit(1)
 
 

@@ -60,6 +60,7 @@ def run(
                             "policy": policy,
                             "pipeline_depth": rep.pipeline_depth,
                             "prefetch": rep.prefetch,
+                            "dedup": rep.dedup,
                             "mode": label,
                             "total_s": round(rep.total_seconds, 4),
                             "speedup_wall_vs_dgl": round(speedup_wall, 3),

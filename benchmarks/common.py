@@ -70,11 +70,23 @@ def run_policy(
 
 # Execution modes reported side by side: the paper's serial loop, the
 # staged executor, and the staged executor with the miss-path prefetch
-# stage.  Each entry is (label, pipeline_depth, prefetch).
+# stage.  Each entry is (label, run_kwargs) — run_kwargs are passed to
+# ``GNNInferenceEngine.run`` verbatim, so modes can toggle any execution
+# knob (depth, prefetch, use_kernel, dedup) without changing the plumbing.
 MODES = (
-    ("serial", 1, False),
-    ("pipelined", 2, False),
-    ("pipelined+prefetch", 2, True),
+    ("serial", dict(pipeline_depth=1)),
+    ("pipelined", dict(pipeline_depth=2)),
+    ("pipelined+prefetch", dict(pipeline_depth=2, prefetch=True)),
+)
+
+# The kernel-route pair the dedup gate compares: identical Pallas gather
+# path, with and without the unique-frontier dedup (sorted-run row-block
+# tiles).  Kept separate from MODES — the DMA kernel in interpret mode is
+# orders slower than a native gather, so these run on their own contained
+# workload rather than inside every end-to-end sweep.
+KERNEL_MODES = (
+    ("pipelined+kernel", dict(pipeline_depth=2, use_kernel=True)),
+    ("pipelined+kernel+dedup", dict(pipeline_depth=2, use_kernel=True, dedup=True)),
 )
 
 
@@ -82,22 +94,25 @@ def run_policy_modes(
     engine: GNNInferenceEngine,
     policy: str,
     cache_bytes: int = CACHE_BYTES,
-    modes: tuple[tuple[str, int, bool], ...] = MODES,
+    modes=MODES,
     **kw,
 ):
-    """Prepare once, then run each (depth, prefetch) execution mode.
+    """Prepare once, then run each (label, run_kwargs) execution mode.
 
     Outputs and hit rates are mode-invariant (equivalence-tested), so the
     reports differ only in where the miss bytes move and how the stages
-    overlap.  The throwaway runs compile both gather programs (with and
-    without the prefetch buffer) outside the timed windows, so compile
-    time isn't charged to whichever mode runs first.
+    overlap.  The throwaway runs compile every distinct knob combination's
+    programs (prefetch scatter, kernel route, dedup buckets) outside the
+    timed windows, so compile time isn't charged to whichever mode runs
+    first.
     """
     engine.prepare(policy, total_cache_bytes=cache_bytes, **kw)
-    engine.run(max_batches=2)
-    if any(prefetch for _, _, prefetch in modes):
-        engine.run(max_batches=2, prefetch=True)
-    return {
-        label: engine.run(max_batches=MAX_BATCHES, pipeline_depth=depth, prefetch=prefetch)
-        for label, depth, prefetch in modes
-    }
+    seen = set()
+    for _, mkw in modes:
+        knobs = tuple(
+            sorted((k, v) for k, v in mkw.items() if k != "pipeline_depth")
+        )
+        if knobs not in seen:
+            seen.add(knobs)
+            engine.run(max_batches=2, **{k: v for k, v in mkw.items() if k != "pipeline_depth"})
+    return {label: engine.run(max_batches=MAX_BATCHES, **mkw) for label, mkw in modes}

@@ -227,6 +227,9 @@ def main() -> None:
     print("# --- Fig.1 time breakdown ---")
     breakdown = bench_breakdown.run(datasets=("reddit", "ogbn-products"))
 
+    print("# --- unique-frontier dedup: row-block kernel vs per-row kernel ---")
+    dedup_rows = bench_breakdown.run_dedup()
+
     print("# --- Fig.2 single-cache saturation ---")
     capacity = bench_cache_capacity.run()
 
@@ -273,6 +276,24 @@ def main() -> None:
     # not the paper's synchronized Fig. 1 decomposition.
     prep_ok = all(r["prep_frac"] > 0.5 for r in breakdown if r["pipeline_depth"] == 1)
     checks.append(("Fig.1 prep time >50% of total", prep_ok))
+    by_dup = {
+        (r["batch_size"], r["fanout"]): r["duplication_factor"] for r in redundancy
+    }
+    checks.append(
+        (
+            "Dedup: within-batch duplication > 1 and grows with fan-out",
+            all(d > 1.0 for d in by_dup.values())
+            and by_dup[(256, "2,2,2")] < by_dup[(256, "15,10,5")],
+        )
+    )
+    dedup_geomean, dedup_ok = bench_breakdown.dedup_gate(dedup_rows)
+    checks.append(
+        (
+            "Dedup: unique-frontier kernel gathers fewer rows, feature stage "
+            f"no slower (geomean {dedup_geomean:.2f})",
+            dedup_ok,
+        )
+    )
     sat = [r["feat_hit"] for r in capacity]
     checks.append(("Fig.2 hit rate monotone in capacity", sat == sorted(sat)))
     piped = [r["pipeline_speedup_vs_serial"] for r in end2end if r["mode"] == "pipelined"]

@@ -1,0 +1,133 @@
+"""Advisory trend report over the benchmark gate-outcome history.
+
+The regression gate (benchmarks/run.py --check-against --gate-history)
+passes or fails each metric within a tolerance band and appends every
+outcome's detail string to a JSON history file.  A metric can therefore
+drift steadily INSIDE its band — shedding a fraction of a percent per run
+— without ever failing.  This script reads that history and flags exactly
+that pattern: metrics whose numeric value moved monotonically across the
+trailing window of runs while still passing.
+
+    python scripts/plot_gate_history.py gate_history.json [--window 4]
+
+Wired into CI as an ADVISORY step (continue-on-error): a flagged drift
+prints a WARN line and the run stays green; ``--strict`` turns flags into
+a nonzero exit for local use.  An ASCII sparkline per flagged metric
+stands in for a plot — this runs on headless CI runners.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+FLOAT_RE = re.compile(r"-?\d+\.\d+(?:[eE][-+]?\d+)?|-?\d+(?:[eE][-+]?\d+)?")
+SPARK = "▁▂▃▄▅▆▇█"
+
+
+def first_float(detail: str) -> float | None:
+    """The leading numeric value of a detail string — the current metric.
+
+    Gate details lead with the current measurement ("|0.83-0.85|=0.02",
+    "1.52 vs 1.6", "0.971 (floor 0.75)"); trailing numbers are baselines
+    or bands, so only the first is a comparable series."""
+    m = FLOAT_RE.search(detail)
+    return float(m.group(0)) if m else None
+
+
+def sparkline(values: list[float]) -> str:
+    lo, hi = min(values), max(values)
+    if hi == lo:
+        return SPARK[0] * len(values)
+    return "".join(SPARK[int((v - lo) / (hi - lo) * (len(SPARK) - 1))] for v in values)
+
+
+def series_by_check(history: list[dict]) -> dict[str, list[tuple[float, bool]]]:
+    """check name -> [(value, ok)] across records, keeping record order."""
+    out: dict[str, list[tuple[float, bool]]] = {}
+    for record in history:
+        for check in record.get("checks", []):
+            value = first_float(check.get("detail", ""))
+            if value is None:
+                continue
+            out.setdefault(check["name"], []).append((value, bool(check.get("ok"))))
+    return out
+
+
+def monotone_drifts(
+    series: dict[str, list[tuple[float, bool]]], window: int
+) -> list[dict]:
+    """Metrics strictly monotone over the trailing ``window`` records.
+
+    Only PASSING records count — a failing metric already blocks the gate,
+    the drift report exists for movement the bands still absorb.  Flat
+    segments break monotonicity (a stable metric is not drifting)."""
+    flags = []
+    for name, points in series.items():
+        tail = points[-window:]
+        if len(tail) < window or not all(ok for _, ok in tail):
+            continue
+        values = [v for v, _ in tail]
+        diffs = [b - a for a, b in zip(values, values[1:])]
+        if all(d > 0 for d in diffs) or all(d < 0 for d in diffs):
+            flags.append(
+                {
+                    "name": name,
+                    "direction": "up" if diffs[0] > 0 else "down",
+                    "values": values,
+                    "total_move": values[-1] - values[0],
+                }
+            )
+    return flags
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("history", help="gate-history JSON (benchmarks/run.py --gate-history)")
+    ap.add_argument(
+        "--window",
+        type=int,
+        default=4,
+        help="trailing records a metric must move monotonically across to flag",
+    )
+    ap.add_argument(
+        "--strict",
+        action="store_true",
+        help="exit nonzero when any drift is flagged (CI keeps this off: advisory)",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.history) as f:
+            history = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        # Advisory tool: a missing/corrupt history (first run, cache miss)
+        # reports and exits clean rather than failing the pipeline.
+        print(f"no readable gate history at {args.history}: {e}")
+        return 0
+    if not isinstance(history, list) or not history:
+        print("gate history is empty — nothing to trend yet")
+        return 0
+
+    series = series_by_check(history)
+    flags = monotone_drifts(series, args.window)
+    print(
+        f"gate history: {len(history)} record(s), {len(series)} numeric metric(s), "
+        f"window={args.window}"
+    )
+    for flag in sorted(flags, key=lambda x: -abs(x["total_move"])):
+        values = flag["values"]
+        print(
+            f"WARN drift-{flag['direction']} {flag['name']}: "
+            f"{values[0]:g} -> {values[-1]:g} "
+            f"({flag['total_move']:+g} over {len(values)} runs)  {sparkline(values)}"
+        )
+    if not flags:
+        print("no monotone drift inside the tolerance bands")
+    return 1 if flags and args.strict else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

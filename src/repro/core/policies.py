@@ -59,6 +59,7 @@ class PreparedPipeline:
     prefetch: bool = False  # stage missed host rows for batch i+1 during batch i's compute
     use_kernel: bool = False  # route gathers through the Pallas cached_gather kernel
     gather_buffers: int = 2  # kernel VMEM row-tile slots (1 serial, 2 double buffered)
+    dedup: bool = False  # gather/prefetch/model on sorted-unique frontiers only
 
 
 # ---------------------------------------------------------------- DCI / SCI
@@ -374,10 +375,14 @@ def prepare(policy: str, dataset: SyntheticGraphDataset, **kw) -> PreparedPipeli
         budget across them — used when one cache will be shared by the
         multi-stream server (runtime/gnn_serve.py).
 
-    Execution knobs (``prefetch``, ``use_kernel``, ``gather_buffers``) are
-    policy-independent: they are recorded on the returned
+    Execution knobs (``prefetch``, ``use_kernel``, ``gather_buffers``,
+    ``dedup``) are policy-independent: they are recorded on the returned
     :class:`PreparedPipeline` as the defaults every engine run and every
     serving stream resolves against, without changing what gets cached.
+    ``dedup`` routes the feature path through sorted-unique frontiers
+    (gather each distinct row once, expand through the inverse map); like
+    the others it never changes outputs or hit accounting, only how many
+    rows move.
 
     ``dgl`` and ``rain`` build no presampled caches; the extra knobs are
     ignored for them."""
@@ -392,6 +397,7 @@ def prepare(policy: str, dataset: SyntheticGraphDataset, **kw) -> PreparedPipeli
         "prefetch": bool(kw.pop("prefetch", False)),
         "use_kernel": bool(kw.pop("use_kernel", False)),
         "gather_buffers": int(kw.pop("gather_buffers", 2)),
+        "dedup": bool(kw.pop("dedup", False)),
     }
     if exec_kw["gather_buffers"] < 1:
         raise ValueError(f"gather_buffers must be >= 1, got {exec_kw['gather_buffers']}")

@@ -10,7 +10,9 @@ already produces:
 
   * per-node feature visit AND miss counts (from the gather's hit mask);
   * per-element adjacency fetch counts (from the sampler's edge slots);
-  * per-batch sample/feature stage laps (from the stream StageClocks).
+  * per-batch sample/feature/compute stage laps (from the stream
+    StageClocks — sample:feature feeds the Eq. 1 split, prep:compute
+    feeds the refresh-aware ``pipeline_depth="auto"`` re-derivation).
 
 ``WorkloadTelemetry`` is windowed: the refresh manager
 (runtime/cache_refresh.py) snapshots a window, folds it into its decayed
@@ -18,6 +20,12 @@ history, and resets it.  Recording costs one device→host transfer of the
 hit mask and edge slots per batch, so it is only attached when a refresh
 mode is enabled — the default serve path records nothing and stays
 bit-for-bit identical to a telemetry-free build.
+
+Deduped batches (the unique-frontier feature path) record through the same
+entry point with ``multiplicities``: counts are scatter-added once per
+UNIQUE node, weighted by how often the batch visited it, which produces
+bit-identical counters to the per-visit form at a fraction of the scatter
+width.
 """
 
 from __future__ import annotations
@@ -27,6 +35,8 @@ import dataclasses
 import numpy as np
 
 __all__ = ["TelemetryWindow", "WorkloadTelemetry"]
+
+STAGE_LAPS = ("sample", "feature", "compute")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +48,7 @@ class TelemetryWindow:
     edge_counts: np.ndarray  # int64[E] adjacency-element fetches
     sample_times: list[float]
     feature_times: list[float]
+    compute_times: list[float]
     batches: int
 
     @property
@@ -60,7 +71,8 @@ class WorkloadTelemetry:
     union workload — exactly what the shared cache is filled for); stage
     laps are pulled from each stream's own clock by :meth:`pull_times`
     with per-clock cursors, so laps are never double-counted across
-    windows.
+    windows.  ``miss_rate`` is maintained as two running scalars so the
+    SLO trigger can poll it per retired batch without an O(N) reduction.
     """
 
     def __init__(self, num_nodes: int, num_edges: int):
@@ -76,23 +88,46 @@ class WorkloadTelemetry:
         self.edge_counts = np.zeros(self.num_edges, np.int64)
         self.sample_times: list[float] = []
         self.feature_times: list[float] = []
+        self.compute_times: list[float] = []
         self.batches = 0
+        self._lookups = 0
+        self._misses = 0
 
     # ---------------------------------------------------------- recording
-    def observe_batch(self, nodes, feat_hit, edge_slots) -> None:
+    def observe_batch(self, nodes, feat_hit, edge_slots, *, multiplicities=None) -> None:
         """Fold one retired batch's accounting into the current window.
 
         ``nodes`` is the batch's input frontier, ``feat_hit`` the gather's
         boolean hit mask over it, ``edge_slots`` the per-layer global
         adjacency positions the sampler touched.  All three already exist
         on the retire path — telemetry adds the host conversion and two
-        scatter-adds, nothing new on the device."""
+        scatter-adds, nothing new on the device.
+
+        With ``multiplicities``, ``nodes``/``feat_hit`` cover only the
+        batch's UNIQUE input nodes and ``multiplicities[i]`` is how many
+        frontier positions visited ``nodes[i]`` — the deduped feature
+        path's form.  Every counter (visits, misses, the running
+        lookup/miss scalars) comes out bit-identical to the per-visit
+        call, because a node's hit bit is the same for every one of its
+        visits in a batch.
+        """
         nodes = np.asarray(nodes)
         hit = np.asarray(feat_hit)
-        np.add.at(self.node_counts, nodes, 1)
-        miss_nodes = nodes[~hit]
-        if miss_nodes.size:
-            np.add.at(self.node_miss_counts, miss_nodes, 1)
+        if multiplicities is None:
+            np.add.at(self.node_counts, nodes, 1)
+            miss_nodes = nodes[~hit]
+            if miss_nodes.size:
+                np.add.at(self.node_miss_counts, miss_nodes, 1)
+            self._lookups += int(nodes.size)
+            self._misses += int(miss_nodes.size)
+        else:
+            mult = np.asarray(multiplicities, np.int64)
+            np.add.at(self.node_counts, nodes, mult)
+            miss = ~hit
+            if miss.any():
+                np.add.at(self.node_miss_counts, nodes[miss], mult[miss])
+            self._lookups += int(mult.sum())
+            self._misses += int(mult[miss].sum())
         for slots in edge_slots:
             idx = np.asarray(slots).reshape(-1)
             # A zero-degree node at the CSC tail emits slot == num_edges;
@@ -102,18 +137,41 @@ class WorkloadTelemetry:
         self.batches += 1
 
     def pull_times(self, clock) -> None:
-        """Append the clock's NEW sample/feature laps since the last pull.
+        """Append the clock's NEW stage laps since the last pull.
 
         In serial mode (depth=1) laps are fully synchronized stage times —
         the exact Eq. 1 semantics.  At depth>1 they are dispatch times;
         the ratio still tracks where host-side prep time goes, which is
         the signal the re-allocation needs (documented in
-        docs/ARCHITECTURE.md)."""
-        cursors = self._lap_cursors.setdefault(id(clock), {"sample": 0, "feature": 0})
-        for name, out in (("sample", self.sample_times), ("feature", self.feature_times)):
+        docs/ARCHITECTURE.md).  Compute laps feed the refresh-aware
+        ``pipeline_depth="auto"`` re-derivation, not the Eq. 1 split.
+        """
+        cursors = self._lap_cursors.setdefault(
+            id(clock), {name: 0 for name in STAGE_LAPS}
+        )
+        for name, out in (
+            ("sample", self.sample_times),
+            ("feature", self.feature_times),
+            ("compute", self.compute_times),
+        ):
             laps = clock.laps.get(name, [])
             out.extend(laps[cursors[name] :])
             cursors[name] = len(laps)
+
+    # ----------------------------------------------------------- live view
+    @property
+    def feat_lookups(self) -> int:
+        return self._lookups
+
+    @property
+    def feat_misses(self) -> int:
+        return self._misses
+
+    @property
+    def miss_rate(self) -> float:
+        """Feature miss rate of the window accumulated SO FAR — the live
+        signal the SLO-aware refresh trigger polls per retired batch."""
+        return self._misses / max(self._lookups, 1)
 
     # ----------------------------------------------------------- snapshot
     def snapshot(self) -> TelemetryWindow:
@@ -123,5 +181,6 @@ class WorkloadTelemetry:
             edge_counts=self.edge_counts.copy(),
             sample_times=list(self.sample_times),
             feature_times=list(self.feature_times),
+            compute_times=list(self.compute_times),
             batches=self.batches,
         )

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.graph.sampling import pow2_bucket
+
 __all__ = [
     "FeatureStore",
     "FeatureRefreshStats",
@@ -97,7 +99,13 @@ class FeatureStore:
             object.__setattr__(self, "_position_np", cached)
         return cached
 
-    def prefetch_misses(self, nodes: np.ndarray, *, pack_in_thread: bool = True) -> PrefetchedMisses:
+    def prefetch_misses(
+        self,
+        nodes: np.ndarray,
+        *,
+        pack_in_thread: bool = True,
+        num_live: int | None = None,
+    ) -> PrefetchedMisses:
         """Stage the missed host rows for a batch onto the device.
 
         ``jax.device_put`` issues the host→device copy of exactly the
@@ -108,6 +116,13 @@ class FeatureStore:
         power-of-two bucket — the consuming scatter then compiles
         O(log S) programs instead of one per distinct count.
 
+        ``num_live`` marks a live prefix: positions at and beyond it are
+        padding (the deduped frontier's pow2 bucket tail) whose gathered
+        values are never read, so their misses are not staged — the pack
+        holds exactly the DISTINCT missed rows.  The consuming gather
+        still covers all of ``nodes``; pad miss rows read pack slot 0,
+        which only ever lands in unread pad output rows.
+
         ``pack_in_thread`` (default on) runs the heavy part of the pack —
         the numpy fancy-index copy of the miss rows and its ``device_put``
         — on a worker thread while the calling thread builds the
@@ -115,7 +130,8 @@ class FeatureStore:
         transfers; the call joins before returning, so the result (and
         everything downstream) is bit-identical either way."""
         nodes = np.asarray(nodes)
-        miss = np.nonzero(self.position_np()[nodes] < 0)[0].astype(np.int32)
+        live = nodes if num_live is None else nodes[:num_live]
+        miss = np.nonzero(self.position_np()[live] < 0)[0].astype(np.int32)
         if miss.size == nodes.size:
             # Every row missed (e.g. no cache): the staged buffer IS the
             # whole row set — no pack, no pad, nothing to overlap.
@@ -125,7 +141,7 @@ class FeatureStore:
                 pack_pos=None,
                 num_miss=int(miss.size),
             )
-        bucket = min(max(1, 1 << int(np.ceil(np.log2(max(miss.size, 1))))), nodes.size)
+        bucket = pow2_bucket(miss.size, nodes.size)
 
         def pack_rows():
             rows = np.zeros((bucket, self.feat_dim), self.host_np().dtype)
@@ -152,6 +168,7 @@ class FeatureStore:
         use_kernel: bool = False,
         gather_buffers: int = 2,
         prefetched: PrefetchedMisses | None = None,
+        row_block: int | None = None,
     ) -> tuple[jax.Array, jax.Array]:
         """Two-source gather. Returns ``(features[S, F], hit[S])``.
 
@@ -167,13 +184,20 @@ class FeatureStore:
         ``position_map`` exactly as in the non-prefetched path, and the
         output is bit-identical (the staged rows are copies of the same
         host rows).
+
+        ``row_block`` (with ``use_kernel``) selects the row-block kernel
+        variant: sorted-run index sets (deduped frontiers) collapse to one
+        DMA descriptor per ``row_block`` consecutive source rows instead
+        of one per row.  Correct for any index order — broken runs fall
+        back to per-row copies inside the kernel — so the output stays
+        bit-identical to every other route.
         """
         indices = indices.astype(jnp.int32)
         pos = self.position_map[indices]
         hit = pos >= 0
         s = indices.shape[0]
         if use_kernel:
-            from repro.kernels.cached_gather.kernel import cached_gather
+            from repro.kernels.cached_gather.kernel import cached_gather, cached_gather_blocks
 
             if prefetched is None:
                 host_src, host_idx = self.host_table, indices
@@ -186,6 +210,18 @@ class FeatureStore:
                 # stage.  Hit rows point at pack slot 0, which the DMA
                 # kernel never reads (the hit branch copies the hot row).
                 host_src, host_idx = prefetched.rows, prefetched.pack_pos
+            if row_block is not None and row_block > 1:
+                return (
+                    cached_gather_blocks(
+                        self.hot_table,
+                        host_src,
+                        host_idx,
+                        pos,
+                        row_block=row_block,
+                        gather_buffers=gather_buffers,
+                    ),
+                    hit,
+                )
             return (
                 cached_gather(
                     self.hot_table, host_src, host_idx, pos, gather_buffers=gather_buffers
@@ -245,7 +281,13 @@ def build_feature_cache(
     n, f = features.shape
     row_bytes = f * features.dtype.itemsize
     budget_rows = min(max(int(capacity_bytes) // row_bytes, 0), n)
-    hot = select_hot_rows(node_counts, budget_rows)
+    # Slots are assigned in ascending NODE-ID order (selection — which
+    # rows get cached — is unchanged): consecutive hot node ids land in
+    # consecutive hot-table slots, so a sorted deduped frontier's hit
+    # positions form the contiguous runs the row-block gather kernel
+    # collapses to one DMA each.  Outputs and hit accounting are invariant
+    # to slot order — gathers always go through ``position_map``.
+    hot = np.sort(select_hot_rows(node_counts, budget_rows))
 
     position_map = np.full(n, -1, np.int32)
     position_map[hot] = np.arange(hot.shape[0], dtype=np.int32)
@@ -312,7 +354,12 @@ def refresh_feature_cache(
     evicted_nodes = old_nodes[~kept_mask]
     in_old = np.zeros(n, bool)
     in_old[old_nodes] = True
-    inserted_nodes = new_hot[~in_old[new_hot]]
+    # Ascending insert order mirrors the build-time id-ordered slot
+    # assignment: freed slots are filled lowest-id-first, preserving what
+    # run contiguity the surviving layout still allows (kept rows pin
+    # their slots, so contiguity degrades gracefully across epochs rather
+    # than resetting).
+    inserted_nodes = np.sort(new_hot[~in_old[new_hot]])
 
     physical = store.hot_table.shape[0]
     needed = kept_nodes.shape[0] + inserted_nodes.shape[0]
@@ -344,8 +391,7 @@ def refresh_feature_cache(
         # delta to a power-of-two bucket (pad entries point out of range
         # and are dropped) keeps repeated refreshes to O(log N) compiled
         # programs instead of one per distinct delta size.
-        bucket = 1 << int(np.ceil(np.log2(max(idx.size, 1))))
-        out = np.full(bucket, fill, np.int32)
+        out = np.full(pow2_bucket(idx.size), fill, np.int32)
         out[: idx.size] = idx
         return jnp.asarray(out)
 

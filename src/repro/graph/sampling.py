@@ -28,7 +28,10 @@ __all__ = [
     "DeviceGraph",
     "LayerSample",
     "BlockSample",
+    "DedupFrontier",
+    "dedup_frontier",
     "device_graph",
+    "pow2_bucket",
     "sample_neighbors",
     "sample_blocks",
 ]
@@ -105,6 +108,76 @@ class LayerSample(dict):
     pass
 
 
+@dataclasses.dataclass(frozen=True)
+class DedupFrontier:
+    """Sorted-unique view of one frontier, with jit-stable shapes.
+
+    ``unique_ids[:num_unique]`` are the frontier's distinct node ids in
+    ascending order; positions at and beyond ``num_unique`` repeat the
+    largest id (a valid node, so padded gathers stay well-defined and are
+    simply never referenced).  ``inverse`` maps every frontier position to
+    its slot in ``unique_ids`` — ``unique_ids[inverse]`` reconstructs the
+    frontier bit-for-bit, which is the identity the whole dedup feature
+    path rests on (gathering unique rows then expanding through
+    ``inverse`` equals gathering every duplicate directly).  ``num_unique``
+    stays a device scalar so the computation is one fused jit program; the
+    runtime pulls it host-side once per batch to pick the pow2 gather
+    bucket (:func:`pow2_bucket`).
+    """
+
+    unique_ids: jax.Array  # int32[S] sorted; tail padded with the max id
+    inverse: jax.Array  # int32[S] frontier position -> slot in unique_ids
+    num_unique: jax.Array  # int32[] distinct-id count (duplication = S / this)
+
+    def tree_flatten(self):
+        return ((self.unique_ids, self.inverse, self.num_unique), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    DedupFrontier, DedupFrontier.tree_flatten, DedupFrontier.tree_unflatten
+)
+
+
+@jax.jit
+def dedup_frontier(frontier: jax.Array) -> DedupFrontier:
+    """Sort-and-unique one frontier on device with static output shapes.
+
+    One argsort + one cumsum + two scatters — no host round trip, no
+    data-dependent shapes: the unique set lives in a full-frontier-sized
+    array and ``num_unique`` marks the live prefix.  Duplicate positions
+    scatter the same value to the same slot, so the result is
+    deterministic regardless of scatter order.
+    """
+    ids = frontier.astype(jnp.int32)
+    order = jnp.argsort(ids)
+    sorted_ids = ids[order]
+    is_new = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]]
+    )
+    rank = (jnp.cumsum(is_new) - 1).astype(jnp.int32)
+    unique = jnp.full(ids.shape, sorted_ids[-1], jnp.int32).at[rank].set(sorted_ids)
+    inverse = jnp.zeros(ids.shape, jnp.int32).at[order].set(rank)
+    return DedupFrontier(unique_ids=unique, inverse=inverse, num_unique=rank[-1] + 1)
+
+
+def pow2_bucket(n: int, cap: int | None = None) -> int:
+    """Smallest power of two >= ``max(n, 1)``, optionally capped at ``cap``.
+
+    The one pow2 padding discipline shared by every dynamic-count device
+    structure: the deduped frontier's gather bucket, the miss-path
+    prefetch pack (:meth:`repro.graph.features.FeatureStore.prefetch_misses`),
+    and the cache-refresh delta scatters — so each compiles O(log S)
+    programs across batches with varying counts, not one per count.
+    """
+    bucket = 1 << max(int(n) - 1, 0).bit_length()
+    return bucket if cap is None else min(bucket, int(cap))
+
+
 def sample_neighbors(
     key: jax.Array, g: DeviceGraph, seeds: jax.Array, fanout: int
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -149,6 +222,12 @@ class BlockSample:
     neighbor_hits: tuple[jax.Array, ...]  # per layer, [S_l, fanout_l]
     edge_slots: tuple[jax.Array, ...]
     fanouts: tuple[int, ...]
+    # Sorted-unique view of the deepest frontier (``sample_blocks``'s
+    # dedup=True mode); None on the default path.  Only the input frontier
+    # is deduped: it is the one the feature loader gathers, and every
+    # shallower frontier is a prefix of it, so one unique set covers the
+    # whole block.
+    dedup: DedupFrontier | None = None
 
     @property
     def input_nodes(self) -> jax.Array:
@@ -160,15 +239,25 @@ class BlockSample:
         return hits, jnp.asarray(total)
 
 
-@functools.partial(jax.jit, static_argnames=("fanouts",))
+@functools.partial(jax.jit, static_argnames=("fanouts", "dedup"))
 def sample_blocks(
-    key: jax.Array, g: DeviceGraph, seeds: jax.Array, fanouts: tuple[int, ...]
+    key: jax.Array,
+    g: DeviceGraph,
+    seeds: jax.Array,
+    fanouts: tuple[int, ...],
+    dedup: bool = False,
 ) -> BlockSample:
     """Multi-layer fan-out sampling producing GraphSAGE blocks.
 
     ``fanouts`` is listed outermost-layer-first (the paper's '15,10,5'
     convention); layer 0 of the expansion uses the *last* element, matching
     DGL's semantics where fan-outs map to model layers from input to output.
+
+    ``dedup=True`` additionally sorts-and-uniques the deepest frontier on
+    device (:func:`dedup_frontier`) inside the same jit program, so the
+    feature path can gather each distinct row once and expand through the
+    inverse map; sampling itself — frontiers, hits, edge slots, RNG
+    consumption — is bit-identical with the flag on or off.
     """
     frontiers = [seeds.astype(jnp.int32)]
     hits_all = []
@@ -186,13 +275,16 @@ def sample_blocks(
         neighbor_hits=tuple(hits_all),
         edge_slots=tuple(slots_all),
         fanouts=tuple(fanouts),
+        dedup=dedup_frontier(frontier) if dedup else None,
     )
 
 
 jax.tree_util.register_pytree_node(
     BlockSample,
-    lambda b: ((b.frontiers, b.neighbor_hits, b.edge_slots), b.fanouts),
-    lambda aux, ch: BlockSample(frontiers=ch[0], neighbor_hits=ch[1], edge_slots=ch[2], fanouts=aux),
+    lambda b: ((b.frontiers, b.neighbor_hits, b.edge_slots, b.dedup), b.fanouts),
+    lambda aux, ch: BlockSample(
+        frontiers=ch[0], neighbor_hits=ch[1], edge_slots=ch[2], dedup=ch[3], fanouts=aux
+    ),
 )
 
 

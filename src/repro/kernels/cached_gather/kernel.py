@@ -37,9 +37,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["cached_gather", "cached_gather_select", "default_interpret", "dma_supported"]
+__all__ = [
+    "cached_gather",
+    "cached_gather_blocks",
+    "cached_gather_select",
+    "default_interpret",
+    "dma_supported",
+]
 
 LANE = 128
+ROW_BLOCK = 8  # default rows per DMA tile in the row-block variant
 
 
 def default_interpret() -> bool:
@@ -185,6 +192,298 @@ def _cached_gather_db(
         interpret=interpret,
     )(idx, pos_raw, pos_clamped, hot_table, host_table)
     return out[:, :f]
+
+
+# ---------------------------------------------------------- row-block tiles
+
+
+def _blk_kernel(
+    idx_ref,
+    pos_raw_ref,
+    pos_clamped_ref,
+    blk_mode_ref,
+    blk_start_ref,
+    hot_hbm,
+    host_hbm,
+    out_hbm,
+    scratch,
+    in_sems,
+    out_sems,
+    *,
+    n_blocks: int,
+    row_block: int,
+    block_f: int,
+    n_buffers: int,
+):
+    """Row-block variant of :func:`_db_kernel` (same rotation, coarser tiles).
+
+    Sorted unique frontiers make whole row blocks land on *consecutive*
+    source rows (hit runs are consecutive hot-table slots because slots are
+    assigned in node-id order; miss runs are consecutive prefetch-pack
+    slots or dense id ranges).  Per block, the prefetched ``blk_mode``
+    says how it was classified host-side: 1 = contiguous hit run → ONE
+    HBM→VMEM DMA for all ``row_block`` rows from the hot table, 2 =
+    contiguous miss run → one DMA from the host table, 0 = mixed/broken →
+    per-row copies into the block's scratch tile (the original
+    one-descriptor-per-row schedule, confined to blocks that need it).
+    Write-back is always one VMEM→HBM DMA per block — output rows are
+    consecutive by construction.  The ``gather_buffers`` slots rotate at
+    block granularity.
+    """
+    j = pl.program_id(0)
+    col = pl.ds(j * block_f, block_f)
+
+    def in_copy(slot, b, op):
+        mode = blk_mode_ref[b]
+
+        @pl.when(mode == 1)
+        def _():
+            op(
+                pltpu.make_async_copy(
+                    hot_hbm.at[pl.ds(blk_start_ref[b], row_block), col],
+                    scratch.at[slot],
+                    in_sems.at[slot],
+                )
+            )
+
+        @pl.when(mode == 2)
+        def _():
+            op(
+                pltpu.make_async_copy(
+                    host_hbm.at[pl.ds(blk_start_ref[b], row_block), col],
+                    scratch.at[slot],
+                    in_sems.at[slot],
+                )
+            )
+
+        @pl.when(mode == 0)
+        def _():
+            # Broken run: per-row winning-source copies into the block
+            # tile.  Starts and waits rebuild identical descriptors on the
+            # block's one semaphore, so the wait pass drains exactly the
+            # copies the start pass issued.
+            def row(r, _):
+                i = b * row_block + r
+                hit = pos_raw_ref[i] >= 0
+
+                @pl.when(hit)
+                def _():
+                    op(
+                        pltpu.make_async_copy(
+                            hot_hbm.at[pos_clamped_ref[i], col],
+                            scratch.at[slot, r],
+                            in_sems.at[slot],
+                        )
+                    )
+
+                @pl.when(~hit)
+                def _():
+                    op(
+                        pltpu.make_async_copy(
+                            host_hbm.at[idx_ref[i], col],
+                            scratch.at[slot, r],
+                            in_sems.at[slot],
+                        )
+                    )
+
+                return 0
+
+            jax.lax.fori_loop(0, row_block, row, 0)
+
+    def out_copy(slot, b):
+        return pltpu.make_async_copy(
+            scratch.at[slot], out_hbm.at[pl.ds(b * row_block, row_block), col], out_sems.at[slot]
+        )
+
+    if n_buffers == 1:  # serial ablation at block granularity
+        def serial_body(b, _):
+            in_copy(0, b, lambda dma: dma.start())
+            in_copy(0, b, lambda dma: dma.wait())
+            dma = out_copy(0, b)
+            dma.start()
+            dma.wait()
+            return 0
+
+        jax.lax.fori_loop(0, n_blocks, serial_body, 0)
+        return
+
+    in_copy(0, 0, lambda dma: dma.start())
+
+    def body(b, _):
+        slot = jax.lax.rem(b, n_buffers)
+        nxt = jax.lax.rem(b + 1, n_buffers)
+
+        @pl.when(b + 1 < n_blocks)
+        def _():
+            @pl.when(b + 1 >= n_buffers)
+            def _():
+                out_copy(nxt, b + 1 - n_buffers).wait()
+
+            in_copy(nxt, b + 1, lambda dma: dma.start())
+
+        in_copy(slot, b, lambda dma: dma.wait())
+        out_copy(slot, b).start()
+        return 0
+
+    jax.lax.fori_loop(0, n_blocks, body, 0)
+
+    tail = jnp.minimum(n_blocks, n_buffers)
+
+    def drain(k, _):
+        b = n_blocks - tail + k
+
+        @pl.when(b < n_blocks)
+        def _():
+            out_copy(jax.lax.rem(b, n_buffers), b).wait()
+
+        return 0
+
+    jax.lax.fori_loop(0, tail, drain, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("row_block", "block_f", "gather_buffers", "interpret")
+)
+def _cached_gather_blocks(
+    hot_table: jax.Array,
+    host_table: jax.Array,
+    indices: jax.Array,
+    positions: jax.Array,
+    *,
+    row_block: int,
+    block_f: int,
+    gather_buffers: int,
+    interpret: bool,
+) -> jax.Array:
+    s = indices.shape[0]
+    f = host_table.shape[1]
+    block_f = min(block_f, f)
+    if f % block_f != 0:
+        pad = block_f - f % block_f
+        hot_table = jnp.pad(hot_table, ((0, 0), (0, pad)))
+        host_table = jnp.pad(host_table, ((0, 0), (0, pad)))
+    fp = host_table.shape[1]
+
+    # Pad the row axis to whole blocks; pad rows are misses of host row 0,
+    # gathered into the padded output tail and sliced off.  A pad inside
+    # the last block just breaks that block's run (mode 0).
+    sp = -(-s // row_block) * row_block
+    idx = jnp.clip(indices.astype(jnp.int32), 0, host_table.shape[0] - 1)
+    # Both source tables must hold at least one whole row block: the
+    # run-DMA slice has a static [row_block, block_f] size, so tracing it
+    # (interpret mode evaluates both sides of every pl.when) requires the
+    # operand to be that tall even when no run could classify.  Classified
+    # runs are in range by construction, so the pad rows are never read.
+    if hot_table.shape[0] < row_block:
+        hot_table = jnp.pad(hot_table, ((0, row_block - hot_table.shape[0]), (0, 0)))
+    if host_table.shape[0] < row_block:
+        host_table = jnp.pad(host_table, ((0, row_block - host_table.shape[0]), (0, 0)))
+    pos_raw = positions.astype(jnp.int32)
+    if sp != s:
+        idx = jnp.pad(idx, (0, sp - s))
+        pos_raw = jnp.pad(pos_raw, (0, sp - s), constant_values=-1)
+    pos_clamped = jnp.clip(pos_raw, 0, hot_table.shape[0] - 1)
+    n_blocks = sp // row_block
+
+    # Host-side (well, jnp-side — still on device, still prefetched as
+    # scalars) run classification: a block is one DMA when all its rows
+    # read the same source at consecutive row indices.
+    hit = pos_raw >= 0
+    src = jnp.where(hit, pos_clamped, idx).reshape(n_blocks, row_block)
+    hit_b = hit.reshape(n_blocks, row_block)
+    if row_block > 1:
+        contig = jnp.all(src[:, 1:] == src[:, :-1] + 1, axis=1)
+    else:
+        contig = jnp.ones((n_blocks,), bool)
+    all_hit = jnp.all(hit_b, axis=1)
+    all_miss = jnp.all(~hit_b, axis=1)
+    blk_mode = jnp.where(
+        contig & all_hit, 1, jnp.where(contig & all_miss, 2, 0)
+    ).astype(jnp.int32)
+    # Contiguous runs must fit the source table: the run reads rows
+    # [start, start+row_block), and every row of a classified run is an
+    # in-range per-row index, so the run itself is in range by
+    # construction — blk_start is only read for modes 1/2.
+    blk_start = src[:, 0]
+
+    out = pl.pallas_call(
+        functools.partial(
+            _blk_kernel,
+            n_blocks=n_blocks,
+            row_block=row_block,
+            block_f=block_f,
+            n_buffers=gather_buffers,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=(fp // block_f,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),  # hot table stays in HBM
+                pl.BlockSpec(memory_space=pltpu.ANY),  # host table stays in HBM
+            ],
+            out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+            scratch_shapes=[
+                pltpu.VMEM((gather_buffers, row_block, block_f), host_table.dtype),
+                pltpu.SemaphoreType.DMA((gather_buffers,)),
+                pltpu.SemaphoreType.DMA((gather_buffers,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((sp, fp), host_table.dtype),
+        interpret=interpret,
+    )(idx, pos_raw, pos_clamped, blk_mode, blk_start, hot_table, host_table)
+    return out[:s, :f]
+
+
+def cached_gather_blocks(
+    hot_table: jax.Array,  # [H, F]
+    host_table: jax.Array,  # [N, F]
+    indices: jax.Array,  # int32 [S]
+    positions: jax.Array,  # int32 [S] (slot or -1)
+    *,
+    row_block: int = ROW_BLOCK,
+    block_f: int = 512,
+    gather_buffers: int = 2,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Row-block two-source gather for sorted-run frontiers.
+
+    Semantics are identical to :func:`cached_gather` for ANY index order —
+    blocks that are not contiguous single-source runs fall back to per-row
+    copies inside the kernel — but the intended caller hands it a deduped
+    (sorted unique) frontier, where most blocks collapse to one DMA
+    descriptor per ``row_block`` rows.  Falls back to :func:`cached_gather`
+    where interpret-mode DMA is unavailable or ``row_block == 1``.
+    """
+    if hot_table.shape[1] != host_table.shape[1]:
+        raise ValueError("hot and host tables must share the feature dim")
+    if gather_buffers < 1:
+        raise ValueError(f"gather_buffers must be >= 1, got {gather_buffers}")
+    if row_block < 1:
+        raise ValueError(f"row_block must be >= 1, got {row_block}")
+    if interpret is None:
+        interpret = default_interpret()
+    if indices.shape[0] == 0:
+        return jnp.zeros((0, host_table.shape[1]), host_table.dtype)
+    if row_block == 1 or not dma_supported():
+        return cached_gather(
+            hot_table,
+            host_table,
+            indices,
+            positions,
+            block_f=block_f,
+            gather_buffers=gather_buffers,
+            interpret=interpret,
+        )
+    return _cached_gather_blocks(
+        hot_table,
+        host_table,
+        indices,
+        positions,
+        row_block=row_block,
+        block_f=block_f,
+        gather_buffers=gather_buffers,
+        interpret=interpret,
+    )
 
 
 # ------------------------------------------------- select-based (fallback)

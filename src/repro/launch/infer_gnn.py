@@ -66,6 +66,22 @@ def main() -> None:
         help="retired batches between interval refreshes (interval/all modes)",
     )
     ap.add_argument(
+        "--refresh-miss-threshold",
+        type=float,
+        default=None,
+        help="SLO-aware refresh trigger: fire a refresh as soon as the live "
+        "telemetry window's feature miss rate crosses this value, composing "
+        "with the interval/event triggers (needs --refresh-mode != off)",
+    )
+    ap.add_argument(
+        "--dedup",
+        action="store_true",
+        help="sort-and-unique each input frontier on device and "
+        "gather/prefetch/model one row per DISTINCT node, expanding through "
+        "the inverse map; outputs and hit accounting are identical, only "
+        "the gathered-row count (and wall clock) changes",
+    )
+    ap.add_argument(
         "--prefetch",
         action="store_true",
         help="stage batch i+1's MISSED host feature rows onto the device "
@@ -126,9 +142,14 @@ def main() -> None:
         prefetch=args.prefetch,
         use_kernel=args.use_kernel,
         gather_buffers=args.gather_buffers,
+        dedup=args.dedup,
     )
     refresh = (
-        RefreshConfig(mode=args.refresh_mode, interval_batches=args.refresh_interval)
+        RefreshConfig(
+            mode=args.refresh_mode,
+            interval_batches=args.refresh_interval,
+            miss_threshold=args.refresh_miss_threshold,
+        )
         if args.refresh_mode != "off"
         else None
     )

@@ -52,18 +52,31 @@ def forward(
     model: str,
     fanouts: tuple[int, ...],
     frontier_sizes: tuple[int, ...] | None = None,
+    inverse_index: jax.Array | None = None,
 ) -> jax.Array:
     """Run the GNN over one sampled block.
 
     ``input_feats`` covers the deepest frontier (``block.input_nodes``).
     Frontier sizes are implied by ``fanouts`` and the seed count, which we
     recover from the feature row count (all shapes are static under jit).
+
+    ``inverse_index`` switches to the unique-frontier form: ``input_feats``
+    then holds one row per DISTINCT input node (a deduped gather, possibly
+    pow2-padded — the pad rows are never referenced) and ``inverse_index``
+    maps every frontier position to its unique row.  The per-frontier
+    ``[self | neighbors]`` layout is reconstructed by one gather,
+    ``input_feats[inverse_index]`` — each reconstructed row is the same
+    bits the duplicate-carrying gather would have produced, so everything
+    downstream (and therefore the logits) is bit-identical to the
+    ``inverse_index=None`` path.
     """
     rev = tuple(reversed(fanouts))  # expansion order used by sample_blocks
     # Recover seed count: |frontier_L| = B * Π(1 + f)
     mult = 1
     for f in rev:
         mult *= 1 + f
+    if inverse_index is not None:
+        input_feats = input_feats[inverse_index.astype(jnp.int32)]
     num_seeds = input_feats.shape[0] // mult
 
     # Frontier sizes from seeds outward.

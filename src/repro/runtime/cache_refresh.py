@@ -31,6 +31,13 @@ Refresh triggers (``RefreshConfig.mode``):
     records no telemetry and is bit-for-bit identical to a refresh-free
     build).
 
+``miss_threshold`` (CLI: ``--refresh-miss-threshold``) adds an SLO-aware
+trigger that composes with any enabled mode: the manager polls the live
+telemetry window's feature miss rate once per retired batch and fires a
+refresh as soon as it crosses the threshold (subject to
+``min_window_batches``), instead of waiting out the interval — the knob
+for "refresh when service quality degrades", not "refresh on a timer".
+
 A refresh runs *between* batch dispatches (the executor's retire path), so
 up to ``depth-1`` in-flight batches may straddle an epoch boundary: they
 keep the previous epoch's (immutable) device arrays and retire normally,
@@ -74,6 +81,10 @@ class RefreshConfig:
     # budget between the caches on one noisy window; the step bound turns
     # that into a damped walk toward the measured ratio.  None = unclamped.
     max_split_step: float | None = 0.15
+    # SLO-aware trigger: fire a refresh as soon as the live window's
+    # feature miss rate crosses this value (None = disabled).  Composes
+    # with the interval/event triggers in any enabled mode.
+    miss_threshold: float | None = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -84,6 +95,8 @@ class RefreshConfig:
             raise ValueError("history_decay must be in [0, 1]")
         if self.max_split_step is not None and not 0.0 < self.max_split_step <= 1.0:
             raise ValueError("max_split_step must be in (0, 1] or None")
+        if self.miss_threshold is not None and not 0.0 < self.miss_threshold <= 1.0:
+            raise ValueError("miss_threshold must be in (0, 1] or None")
 
     @property
     def enabled(self) -> bool:
@@ -103,11 +116,12 @@ class RefreshEvent:
     """One completed refresh: trigger, outcome, and pause cost."""
 
     epoch: int
-    reason: str  # "interval" | "stream-join" | "stream-leave" | "manual"
+    reason: str  # "interval" | "miss-threshold" | "stream-join" | "stream-leave" | "manual"
     delta: CacheRefreshDelta
     pause_seconds: float  # wall time the re-allocation + delta re-fill took
     window_batches: int  # telemetry batches folded into this refresh
     window_miss_rate: float  # feature miss rate of the folded window
+    suggested_depth: int | None = None  # re-derived "auto" window (None: no compute laps yet)
 
     def summary(self) -> dict:
         return {
@@ -116,6 +130,7 @@ class RefreshEvent:
             "pause_s": round(self.pause_seconds, 4),
             "window_batches": self.window_batches,
             "window_miss_rate": round(self.window_miss_rate, 4),
+            "suggested_depth": self.suggested_depth,
             "adj_bytes": self.delta.allocation.adj_bytes,
             "feat_bytes": self.delta.allocation.feat_bytes,
             "feat_rows_inserted": self.delta.feat.rows_inserted,
@@ -165,6 +180,12 @@ class CacheRefreshManager:
             self._node_counts = np.zeros(dataset.num_nodes, np.float64)
             self._edge_counts = np.zeros(dataset.graph.num_edges, np.float64)
             self._sample_s = self._feature_s = 0.0
+        # Compute-lap history (serve-time only — presampling runs no
+        # forward) and the "auto" executor window it implies.  Updated per
+        # refresh; consumers with pipeline_depth="auto" apply
+        # ``suggested_depth`` to the live executor between batches.
+        self._compute_s = 0.0
+        self.suggested_depth: int | None = None
         # Per-seed presample contributions for join/leave re-merging
         # (populated on join; initial streams' individual profiles were
         # merged away during preparation, so a leave before any join
@@ -180,13 +201,27 @@ class CacheRefreshManager:
             self._clocks.append(clock)
 
     def note_retired(self) -> RefreshEvent | None:
-        """Interval trigger: called once per retired batch."""
-        if not self.config.on_interval:
-            return None
+        """Per-retired-batch triggers: SLO miss-rate threshold, then interval.
+
+        The miss-threshold check runs first (in any enabled mode — it is a
+        quality signal, not a schedule) so a degrading window refreshes as
+        soon as it crosses the SLO instead of waiting out the interval;
+        the interval trigger then proceeds as before.  Both share
+        ``min_window_batches`` so one thin noisy window cannot fire either.
+        """
         self._retired_since_refresh += 1
-        if self._retired_since_refresh < self.config.interval_batches:
+        cfg = self.config
+        if (
+            cfg.miss_threshold is not None
+            and self.telemetry.batches >= cfg.min_window_batches
+            and self.telemetry.miss_rate >= cfg.miss_threshold
+        ):
+            return self.refresh("miss-threshold")
+        if not cfg.on_interval:
             return None
-        if self.telemetry.batches < self.config.min_window_batches:
+        if self._retired_since_refresh < cfg.interval_batches:
+            return None
+        if self.telemetry.batches < cfg.min_window_batches:
             return None
         return self.refresh("interval")
 
@@ -266,6 +301,7 @@ class CacheRefreshManager:
             self._edge_counts = decay * self._edge_counts + window.edge_counts
             self._sample_s = decay * self._sample_s + float(sum(window.sample_times))
             self._feature_s = decay * self._feature_s + float(sum(window.feature_times))
+            self._compute_s = decay * self._compute_s + float(sum(window.compute_times))
             # Decay the recorded per-stream join contributions in lockstep,
             # so a later leave subtracts only what the history still holds.
             for remnant in self._stream_stats.values():
@@ -287,6 +323,16 @@ class CacheRefreshManager:
             node_counts=self._node_counts,
             edge_counts=self._edge_counts,
         )
+        if self._compute_s > 0.0:
+            # Refresh-aware "auto" pipeline depth: re-derive the executor
+            # window from the refreshed prep:compute ratio (the same
+            # formula the warmup-time probe uses), so a refresh that
+            # shifts the stage balance also resizes the overlap window.
+            from repro.runtime.gnn_engine import auto_pipeline_depth
+
+            self.suggested_depth = auto_pipeline_depth(
+                self._sample_s + self._feature_s, self._compute_s
+            )
         event = RefreshEvent(
             epoch=delta.epoch,
             reason=reason,
@@ -294,6 +340,7 @@ class CacheRefreshManager:
             pause_seconds=time.perf_counter() - t0,
             window_batches=window.batches,
             window_miss_rate=window.miss_rate,
+            suggested_depth=self.suggested_depth,
         )
         self.events.append(event)
         return event

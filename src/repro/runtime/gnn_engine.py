@@ -12,13 +12,15 @@ Batch execution is delegated to the staged executor in
 ``depth=1`` is the paper's serial loop (a device sync after every stage —
 the timing semantics of Fig. 1/7), ``depth>1`` keeps that many batches in
 flight so batch *i+1*'s sampling/gather overlap batch *i*'s GNN forward.
-Three further execution knobs — ``prefetch`` (stage batch *i+1*'s missed
+Four further execution knobs — ``prefetch`` (stage batch *i+1*'s missed
 host feature rows onto the device during batch *i*'s forward),
 ``use_kernel`` (route gathers through the double-buffered Pallas
-``cached_gather`` kernel), and ``gather_buffers`` (the kernel's VMEM slot
-count) — default from the prepared pipeline.  Outputs, hit counts, and
-batch order are identical under every knob combination; only where the
-bytes move (and therefore wall clock) changes.
+``cached_gather`` kernel), ``gather_buffers`` (the kernel's VMEM slot
+count), and ``dedup`` (sort-and-unique each input frontier on device and
+gather/prefetch/model one row per DISTINCT node, expanding through the
+inverse map) — default from the prepared pipeline.  Outputs, hit counts,
+and batch order are identical under every knob combination; only where
+the bytes move (and therefore wall clock) changes.
 """
 
 from __future__ import annotations
@@ -32,7 +34,8 @@ import numpy as np
 
 from repro.core.policies import PreparedPipeline, prepare
 from repro.graph.datasets import SyntheticGraphDataset
-from repro.graph.sampling import sample_blocks
+from repro.graph.sampling import pow2_bucket, sample_blocks
+from repro.kernels.cached_gather.kernel import ROW_BLOCK
 from repro.models import gnn as gnn_models
 from repro.runtime.pipeline import PipelinedExecutor, Stage
 from repro.utils.timing import StageClock
@@ -92,6 +95,14 @@ class InferenceReport:
     prefetch: bool = False
     prefetch_seconds: float = 0.0
     prefetched_rows: int = 0
+    # Unique-frontier accounting: ``unique_rows`` sums each batch's
+    # distinct input nodes, ``gathered_rows`` the rows the feature stage
+    # actually pulled (the pow2 gather buckets under dedup, every
+    # duplicate otherwise).  feat_lookups stays the per-visit count, so
+    # hit rates are dedup-invariant.
+    dedup: bool = False
+    unique_rows: int = 0
+    gathered_rows: int = 0
     # Online-refresh accounting (empty/None when refresh is off, keeping
     # the report — and every baseline comparison over it — unchanged):
     refresh_events: list = dataclasses.field(default_factory=list)
@@ -119,6 +130,14 @@ class InferenceReport:
     def feat_hit_rate(self) -> float:
         return self.feat_hits / max(self.feat_lookups, 1)
 
+    @property
+    def duplication_factor(self) -> float:
+        """Mean input-frontier duplication: per-visit lookups over distinct
+        rows — the redundancy the dedup path removes (1.0 when off)."""
+        if not self.unique_rows:
+            return 1.0
+        return self.feat_lookups / self.unique_rows
+
     def modeled_transfer_seconds(self, slow_bw: float = PCIE4_BW, fast_bw: float = HBM_BW) -> float:
         """Project byte movement onto a slow (miss) / fast (hit) link pair."""
         return modeled_transfer_seconds(
@@ -137,6 +156,7 @@ class InferenceReport:
             "batches": self.num_batches,
             "pipeline_depth": self.pipeline_depth,
             "prefetch": self.prefetch,
+            "dedup": self.dedup,
             "sample_s": round(self.sample_seconds, 4),
             "prefetch_s": round(self.prefetch_seconds, 4),
             "feature_s": round(self.feature_seconds, 4),
@@ -147,6 +167,10 @@ class InferenceReport:
             "feat_hit_rate": round(self.feat_hit_rate, 4),
             "modeled_transfer_s": round(self.modeled_transfer_seconds(), 6),
         }
+        if self.dedup:
+            out["unique_rows"] = self.unique_rows
+            out["gathered_rows"] = self.gathered_rows
+            out["duplication_factor"] = round(self.duplication_factor, 2)
         if self.refresh_events:
             # Per-epoch rates replace the single lifetime aggregate as the
             # headline when the cache changed mid-run — a lifetime mean
@@ -187,6 +211,7 @@ class StreamRuntime:
         prefetch: bool | None = None,
         use_kernel: bool | None = None,
         gather_buffers: int | None = None,
+        dedup: bool | None = None,
     ):
         self.pipe = pipe
         self.params = params
@@ -199,11 +224,19 @@ class StreamRuntime:
         self.prefetch = pipe.prefetch if prefetch is None else prefetch
         self.use_kernel = pipe.use_kernel if use_kernel is None else use_kernel
         self.gather_buffers = pipe.gather_buffers if gather_buffers is None else gather_buffers
+        # RAIN's cross-batch reuse map addresses individual frontier
+        # positions of the previous batch, which is exactly the layout
+        # dedup collapses — and RAIN already removes the cross-batch share
+        # of the redundancy dedup targets — so the two are mutually
+        # exclusive and reuse wins.
+        self.dedup = (pipe.dedup if dedup is None else dedup) and not pipe.reuse_prev_batch
         self.adj_hits = 0
         self.adj_lookups = 0
         self.feat_hits = 0
         self.feat_lookups = 0
         self.prefetched_rows = 0
+        self.unique_rows = 0  # sum of per-batch distinct input nodes (dedup)
+        self.gathered_rows = 0  # rows the feature stage actually gathered
         # Per-cache-epoch hit counters: epoch -> [adj_hits, adj_lookups,
         # feat_hits, feat_lookups, batches].  With refresh off everything
         # lands in epoch 0 and the lifetime counters above tell the whole
@@ -226,12 +259,44 @@ class StreamRuntime:
         # lands while the batch is still in flight.
         ctx.epoch = self.pipe.caches.epoch
         self.key, sub = jax.random.split(self.key)
-        block = sample_blocks(sub, self.pipe.caches.dgraph, jnp.asarray(ctx.payload), self.fanouts)
+        block = sample_blocks(
+            sub,
+            self.pipe.caches.dgraph,
+            jnp.asarray(ctx.payload),
+            self.fanouts,
+            dedup=self.dedup,
+        )
         # Dispatch the hit-stat reductions here, in-pipeline: dispatched
         # at retire time they would queue behind the *next* batch's
         # stages on the device stream and serialize the pipeline.
         bh, bt = block.adj_hit_stats()
+        if self.dedup:
+            # Resolve the unique view HERE so the one forced sync the
+            # dedup path needs (pulling the num_unique scalar — the
+            # analogue of the prefetch stage's miss-index read) is booked
+            # to the sampling stage that produced it; the downstream
+            # stages then only dispatch against the already-sliced bucket.
+            self._resolve_dedup(ctx, block)
         return block, bh, bt
+
+    def _resolve_dedup(self, ctx, block):
+        """Cache the batch's unique-frontier view on its context:
+        ``(dedup, num_unique, bucket, unique_ids[:bucket])``.
+
+        The bucket is each batch's own pow2 ceiling, so ``gathered_rows <=
+        2 * unique_rows`` holds per batch (the bound the dedup gate and
+        docs state) and batches with the same bucket share compiled
+        gather/forward programs — O(log S) distinct shapes worst case,
+        each compiled once on first use."""
+        dd = block.dedup
+        nu = int(dd.num_unique)
+        bucket = pow2_bucket(nu, int(dd.unique_ids.shape[0]))
+        view = (dd, nu, bucket, dd.unique_ids[:bucket])
+        ctx.outputs["_dedup"] = view
+        return view
+
+    def _dedup_view(self, ctx):
+        return ctx.outputs["_dedup"]
 
     def prefetch_stage(self, ctx):
         """Stage the *missed* host rows for this batch onto the device.
@@ -242,10 +307,15 @@ class StreamRuntime:
         compute — the transfer-inefficiency DCI targets on the miss path.
         The feature stage then reads misses from the staged buffer; the
         hit mask (and all accounting) still comes from ``position_map``,
-        so hit/miss counts are bit-identical with prefetch on or off."""
+        so hit/miss counts are bit-identical with prefetch on or off.
+        Under ``dedup`` only the batch's DISTINCT missed rows are staged —
+        the gather consuming the pack runs over the unique bucket."""
         store = self.pipe.caches.store
-        nodes = np.asarray(ctx.outputs["sample"][0].input_nodes)
-        staged = store.prefetch_misses(nodes)
+        if self.dedup:
+            _, nu, _, uids = self._dedup_view(ctx)
+            staged = store.prefetch_misses(np.asarray(uids), num_live=nu)
+        else:
+            staged = store.prefetch_misses(np.asarray(ctx.outputs["sample"][0].input_nodes))
         self.prefetched_rows += staged.num_miss
         return staged
 
@@ -257,6 +327,21 @@ class StreamRuntime:
             gather_buffers=self.gather_buffers,
             prefetched=ctx.outputs.get("prefetch"),
         )
+        if self.dedup:
+            # Gather each distinct row once (sorted ids → the row-block
+            # kernel's contiguous runs when the kernel route is on); the
+            # per-visit hit mask is the unique mask expanded through the
+            # inverse map, so every count downstream is bit-identical to
+            # the duplicate-carrying gather.
+            dd, nu, bucket, uids = self._dedup_view(ctx)
+            feats_u, hit_u = store.gather(
+                uids, row_block=ROW_BLOCK if self.use_kernel else None, **gather_kw
+            )
+            hit = hit_u[dd.inverse]
+            self.unique_rows += nu
+            self.gathered_rows += bucket
+            return feats_u, hit, jnp.sum(hit), hit_u
+        self.gathered_rows += int(block.input_nodes.shape[0])
         if self.pipe.reuse_prev_batch and self._prev_feats is not None:
             nodes = np.asarray(block.input_nodes)
             pos = self._prev_map[nodes]
@@ -280,14 +365,18 @@ class StreamRuntime:
 
     def compute(self, ctx):
         feats = ctx.outputs["feature"][0]
-        return gnn_models.forward(self.params, feats, model=self.model, fanouts=self.fanouts)
+        inverse = ctx.outputs["sample"][0].dedup.inverse if self.dedup else None
+        return gnn_models.forward(
+            self.params, feats, model=self.model, fanouts=self.fanouts, inverse_index=inverse
+        )
 
     def record(self, ctx) -> None:
         """Host-side accounting; runs per batch, in order, after the batch's
         stage outputs (incl. the stat scalars) are ready, so the int()
         conversions only pay a tiny device→host transfer."""
         block, bh, bt = ctx.outputs["sample"]
-        _, hit, hsum = ctx.outputs["feature"]
+        feature_out = ctx.outputs["feature"]
+        hit, hsum = feature_out[1], feature_out[2]
         bh, bt, hsum, lookups = int(bh), int(bt), int(hsum), int(hit.shape[0])
         self.adj_hits += bh
         self.adj_lookups += bt
@@ -300,7 +389,21 @@ class StreamRuntime:
         per_epoch[3] += lookups
         per_epoch[4] += 1
         if self.telemetry is not None:
-            self.telemetry.observe_batch(block.input_nodes, hit, block.edge_slots)
+            if self.dedup:
+                # Scatter once per unique node, weighted by its visit
+                # multiplicity — counters come out bit-identical to the
+                # per-visit form (a node's hit bit is the same for every
+                # visit within a batch).
+                dd, nu, _, uids = self._dedup_view(ctx)
+                mult = np.bincount(np.asarray(dd.inverse), minlength=nu)[:nu]
+                self.telemetry.observe_batch(
+                    np.asarray(uids)[:nu],
+                    np.asarray(feature_out[3])[:nu],
+                    block.edge_slots,
+                    multiplicities=mult,
+                )
+            else:
+                self.telemetry.observe_batch(block.input_nodes, hit, block.edge_slots)
         if self.outputs is not None:
             self.outputs.append(np.asarray(ctx.outputs["compute"]))
 
@@ -413,6 +516,7 @@ class GNNInferenceEngine:
         prefetch: bool = False,
         use_kernel: bool = False,
         gather_buffers: int = 2,
+        dedup: bool = False,
     ):
         # Presampling defaults to serial (depth=1): its per-stage times feed
         # Eq. 1, and the paper's split assumes fully synchronized stages.
@@ -436,6 +540,7 @@ class GNNInferenceEngine:
             prefetch=prefetch,
             use_kernel=use_kernel,
             gather_buffers=gather_buffers,
+            dedup=dedup,
         )
         return self.pipeline
 
@@ -464,26 +569,49 @@ class GNNInferenceEngine:
         prefetch: bool | None = None,
         use_kernel: bool | None = None,
         gather_buffers: int | None = None,
+        dedup: bool | None = None,
     ) -> None:
         """Trigger compilation outside any timed region (cache array shapes
         differ per policy/budget, so each prepared pipeline compiles once —
         shared by every stream that serves against it).  The gather is
         warmed with the same execution knobs the run will use (prefetch
-        scatter / kernel route compile to different programs)."""
+        scatter / kernel route / dedup bucket compile to different
+        programs).
+
+        Under ``dedup`` the gather and forward programs specialize on the
+        per-batch pow2 unique bucket.  Warming the probe batch's bucket
+        covers every batch sharing it (unique counts are stable within a
+        workload, so that is usually all of them); a batch landing in a
+        different bucket pays one in-run compile — the same exposure as
+        any first-of-a-shape dispatch.
+        """
         if self.pipeline is None:
             raise RuntimeError("call prepare() first")
         pipe = self.pipeline
         prefetch = pipe.prefetch if prefetch is None else prefetch
         use_kernel = pipe.use_kernel if use_kernel is None else use_kernel
         gather_buffers = pipe.gather_buffers if gather_buffers is None else gather_buffers
+        dedup = (pipe.dedup if dedup is None else dedup) and not pipe.reuse_prev_batch
         dgraph, store = pipe.caches.dgraph, pipe.caches.store
-        wblock = sample_blocks(jax.random.PRNGKey(self.seed + 1), dgraph, jnp.asarray(seeds), self.fanouts)
-        prefetched = store.prefetch_misses(np.asarray(wblock.input_nodes)) if prefetch else None
+        wblock = sample_blocks(
+            jax.random.PRNGKey(self.seed + 1), dgraph, jnp.asarray(seeds), self.fanouts,
+            dedup=dedup,
+        )
+        s = int(wblock.input_nodes.shape[0])
+        if dedup:
+            bucket = pow2_bucket(int(wblock.dedup.num_unique), s)
+            gather_ids = wblock.dedup.unique_ids[:bucket]
+            inverse = wblock.dedup.inverse
+            row_block = ROW_BLOCK if use_kernel else None
+        else:
+            gather_ids, inverse, row_block = wblock.input_nodes, None, None
+        prefetched = store.prefetch_misses(np.asarray(gather_ids)) if prefetch else None
         wfeats, _ = store.gather(
-            wblock.input_nodes,
+            gather_ids,
             use_kernel=use_kernel,
             gather_buffers=gather_buffers,
             prefetched=prefetched,
+            row_block=row_block,
         )
         if prefetch:
             # The miss count varies per batch, so the staged pack's padded
@@ -493,24 +621,28 @@ class GNNInferenceEngine:
             # gather compiles inside a timed run.
             from repro.graph.features import PrefetchedMisses
 
-            s = int(wblock.input_nodes.shape[0])
+            g = int(gather_ids.shape[0])
             bucket = 1
-            while bucket <= s:
+            while bucket <= g:
                 synth = PrefetchedMisses(
-                    rows=jnp.zeros((min(bucket, s), store.feat_dim), store.host_table.dtype),
-                    idx=jnp.full((min(bucket, s),), s, jnp.int32),
-                    pack_pos=jnp.zeros((s,), jnp.int32),
+                    rows=jnp.zeros((min(bucket, g), store.feat_dim), store.host_table.dtype),
+                    idx=jnp.full((min(bucket, g),), g, jnp.int32),
+                    pack_pos=jnp.zeros((g,), jnp.int32),
                     num_miss=0,
                 )
                 store.gather(
-                    wblock.input_nodes,
+                    gather_ids,
                     use_kernel=use_kernel,
                     gather_buffers=gather_buffers,
                     prefetched=synth,
+                    row_block=row_block,
                 )
                 bucket <<= 1
         jax.block_until_ready(
-            gnn_models.forward(self.params, wfeats, model=self.model, fanouts=self.fanouts)
+            gnn_models.forward(
+                self.params, wfeats, model=self.model, fanouts=self.fanouts,
+                inverse_index=inverse,
+            )
         )
 
     # ------------------------------------------------------ adaptive depth
@@ -568,6 +700,7 @@ class GNNInferenceEngine:
         prefetch: bool | None = None,
         use_kernel: bool | None = None,
         gather_buffers: int | None = None,
+        dedup: bool | None = None,
         refresh=None,
     ) -> InferenceReport:
         """Run inference over the dataset's test batches (or explicit seed
@@ -576,10 +709,10 @@ class GNNInferenceEngine:
         ``batches`` overrides the dataset-derived schedule (and RAIN's
         ``batch_order``) — the serving layer and the equivalence tests use
         it to run an exact per-stream batch list.  ``prefetch`` /
-        ``use_kernel`` / ``gather_buffers`` default from the prepared
-        pipeline; outputs and hit accounting are identical with any
-        combination (equivalence-tested), only where the miss bytes move
-        (and therefore wall clock) changes.
+        ``use_kernel`` / ``gather_buffers`` / ``dedup`` default from the
+        prepared pipeline; outputs and hit accounting are identical with
+        any combination (equivalence-tested), only where the miss bytes
+        move (and therefore wall clock) changes.
 
         ``pipeline_depth`` additionally accepts ``"auto"`` (derive the
         window from a measured compute:prep probe, see
@@ -588,12 +721,17 @@ class GNNInferenceEngine:
         mode re-allocates and delta re-fills the caches every N retired
         batches from live telemetry.  Outputs are bit-identical with
         refresh on or off (refreshes move bytes, not values); hit
-        accounting then comes per epoch via ``report.epoch_hits``."""
+        accounting then comes per epoch via ``report.epoch_hits``.  With
+        BOTH ``"auto"`` depth and refresh enabled, each refresh re-derives
+        the window from the refreshed stage laps and applies it to the
+        live executor (the warmup-time probe only seeds the initial
+        depth)."""
         if self.pipeline is None:
             raise RuntimeError("call prepare() first")
         pipe = self.pipeline
         if batches is None:
             batches = self._batches(max_batches)
+        requested_depth = self.pipeline_depth if pipeline_depth is None else pipeline_depth
         depth = self.resolve_pipeline_depth(
             pipeline_depth, seeds=batches[0] if batches else None
         )
@@ -603,6 +741,7 @@ class GNNInferenceEngine:
                 prefetch=prefetch,
                 use_kernel=use_kernel,
                 gather_buffers=gather_buffers,
+                dedup=dedup,
             )
 
         # All cross-batch state (RNG stream, RAIN's reuse map, counters)
@@ -619,6 +758,7 @@ class GNNInferenceEngine:
             prefetch=prefetch,
             use_kernel=use_kernel,
             gather_buffers=gather_buffers,
+            dedup=dedup,
         )
         clock = StageClock(overlap=depth > 1)
         manager = None
@@ -634,6 +774,7 @@ class GNNInferenceEngine:
             )
             manager.register_clock(clock)
             rt.telemetry = manager.telemetry
+        auto_depth = requested_depth == "auto" and manager is not None
 
         def on_retire(ctx):
             # Retire runs between batch dispatches, so an interval refresh
@@ -641,7 +782,14 @@ class GNNInferenceEngine:
             # the next dispatch reads the new epoch.
             rt.record(ctx)
             if manager is not None:
-                manager.note_retired()
+                event = manager.note_retired()
+                if event is not None and auto_depth and manager.suggested_depth:
+                    # Refresh-aware "auto": size the window from the
+                    # refreshed stage laps instead of the warmup probe.
+                    # The executor re-reads ``depth`` between batches, so
+                    # the change applies at the next dispatch; depth never
+                    # drops below 2, keeping the clock's overlap semantics.
+                    executor.depth = manager.suggested_depth
 
         executor = PipelinedExecutor(
             stream_stages(lambda c: rt, prefetch=rt.prefetch),
@@ -668,6 +816,9 @@ class GNNInferenceEngine:
             prefetch=rt.prefetch,
             prefetch_seconds=clock.total("prefetch"),
             prefetched_rows=rt.prefetched_rows,
+            dedup=rt.dedup,
+            unique_rows=rt.unique_rows,
+            gathered_rows=rt.gathered_rows,
             refresh_events=list(manager.events) if manager is not None else [],
             epoch_hits=rt.epoch_hit_rates() if manager is not None else None,
         )

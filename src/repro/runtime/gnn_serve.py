@@ -103,6 +103,8 @@ class StreamReport:
     max_latency_s: float
     prefetch_seconds: float = 0.0
     prefetched_rows: int = 0
+    unique_rows: int = 0  # distinct input rows (dedup; 0 when off)
+    gathered_rows: int = 0  # rows the feature stage actually gathered
     epoch_hits: dict | None = None  # per-cache-epoch rates (refresh on)
 
     @property
@@ -144,6 +146,7 @@ class ServeReport:
     feat_row_bytes: int
     streams: list[StreamReport]
     prefetch: bool = False
+    dedup: bool = False
     # Online-refresh accounting (refresh off → empty/None, summary as before):
     refresh_events: list = dataclasses.field(default_factory=list)
     epochs: dict | None = None  # aggregate per-epoch hit rates across streams
@@ -171,6 +174,21 @@ class ServeReport:
     @property
     def feat_lookups(self) -> int:
         return sum(s.feat_lookups for s in self.streams)
+
+    @property
+    def unique_rows(self) -> int:
+        return sum(s.unique_rows for s in self.streams)
+
+    @property
+    def gathered_rows(self) -> int:
+        return sum(s.gathered_rows for s in self.streams)
+
+    @property
+    def duplication_factor(self) -> float:
+        """Aggregate input-frontier duplication removed by dedup (1.0 off)."""
+        if not self.unique_rows:
+            return 1.0
+        return self.feat_lookups / self.unique_rows
 
     @property
     def adj_hit_rate(self) -> float:
@@ -204,6 +222,7 @@ class ServeReport:
             "streams": self.num_streams,
             "depth": self.depth,
             "prefetch": self.prefetch,
+            "dedup": self.dedup,
             "batches": self.total_batches,
             "wall_s": round(self.wall_seconds, 4),
             "throughput_seeds_per_s": round(self.throughput_seeds_per_s, 1),
@@ -212,6 +231,10 @@ class ServeReport:
             "modeled_transfer_s": round(self.modeled_transfer_seconds(), 6),
             "per_stream": [s.summary() for s in self.streams],
         }
+        if self.dedup:
+            out["unique_rows"] = self.unique_rows
+            out["gathered_rows"] = self.gathered_rows
+            out["duplication_factor"] = round(self.duplication_factor, 2)
         if self.epochs is not None:
             # With refresh on, the lifetime aggregate above hides the
             # post-refresh recovery — the per-epoch split is the headline.
@@ -254,10 +277,12 @@ class MultiStreamServer:
         prefetch: bool | None = None,
         use_kernel: bool | None = None,
         gather_buffers: int | None = None,
+        dedup: bool | None = None,
         refresh=None,
     ):
         if engine.pipeline is None:
             raise RuntimeError("prepare() the engine before constructing the server")
+        self._auto_depth = depth == "auto"
         if depth == "auto":
             depth = engine.resolve_pipeline_depth("auto")
         if depth < 1:
@@ -277,9 +302,17 @@ class MultiStreamServer:
                 config=refresh,
             )
         self._started = False  # join/leave events fire only once serving began
+        self._executor = None  # live executor during run() (auto-depth hook)
         self.prefetch = pipe.prefetch if prefetch is None else prefetch
         self.use_kernel = pipe.use_kernel if use_kernel is None else use_kernel
         self.gather_buffers = pipe.gather_buffers if gather_buffers is None else gather_buffers
+        self.dedup = (pipe.dedup if dedup is None else dedup) and not pipe.reuse_prev_batch
+        # Remember whether the cap was explicit: a defaulted cap follows
+        # the window when refresh-aware auto depth resizes it mid-run (a
+        # deeper window is useless if admission still stops at the old
+        # depth), an explicit cap is the caller's backpressure contract
+        # and stays put.
+        self._explicit_inflight_cap = max_inflight_per_stream is not None
         self.max_inflight = (
             max_inflight_per_stream if max_inflight_per_stream is not None else depth
         )
@@ -323,6 +356,7 @@ class MultiStreamServer:
             prefetch=self.prefetch,
             use_kernel=self.use_kernel,
             gather_buffers=self.gather_buffers,
+            dedup=self.dedup,
         )
         state = StreamState(
             stream_id=sid,
@@ -389,7 +423,19 @@ class MultiStreamServer:
         if self.refresh_manager is not None:
             # Retire runs between dispatches, so an interval refresh lands
             # here — in-flight batches keep the old epoch's arrays.
-            self.refresh_manager.note_retired()
+            event = self.refresh_manager.note_retired()
+            if (
+                event is not None
+                and self._auto_depth
+                and self._executor is not None
+                and self.refresh_manager.suggested_depth
+            ):
+                # Refresh-aware "auto": resize the live window from the
+                # refreshed stage laps; applies at the next admission.
+                self._executor.depth = self.refresh_manager.suggested_depth
+                self.depth = self.refresh_manager.suggested_depth
+                if not self._explicit_inflight_cap:
+                    self.max_inflight = self.depth
 
     # ----------------------------------------------------------------- run
     def run(self, *, warmup: bool = True) -> ServeReport:
@@ -403,6 +449,7 @@ class MultiStreamServer:
                 prefetch=self.prefetch,
                 use_kernel=self.use_kernel,
                 gather_buffers=self.gather_buffers,
+                dedup=self.dedup,
             )
         executor = PipelinedExecutor(
             stream_stages(lambda c: c.stream.runtime, prefetch=self.prefetch),
@@ -410,9 +457,11 @@ class MultiStreamServer:
             clock_for=lambda c: c.stream.clock,
             on_retire=self._on_retire,
         )
+        self._executor = executor
         t0 = time.perf_counter()
         executor.run_tagged(self._admission())
         wall = time.perf_counter() - t0
+        self._executor = None
         return ServeReport(
             policy=self.engine.pipeline.name,
             num_streams=len(self.streams),
@@ -422,6 +471,7 @@ class MultiStreamServer:
             feat_row_bytes=self.engine.dataset.feature_nbytes_per_row(),
             streams=[self._stream_report(s) for s in self.streams],
             prefetch=self.prefetch,
+            dedup=self.dedup,
             refresh_events=(
                 list(self.refresh_manager.events) if self.refresh_manager is not None else []
             ),
@@ -456,6 +506,8 @@ class MultiStreamServer:
             max_latency_s=float(np.max(s.latencies)) if s.latencies else 0.0,
             prefetch_seconds=s.clock.total("prefetch"),
             prefetched_rows=rt.prefetched_rows,
+            unique_rows=rt.unique_rows,
+            gathered_rows=rt.gathered_rows,
             epoch_hits=rt.epoch_hit_rates() if self.refresh_manager is not None else None,
         )
 

@@ -435,3 +435,110 @@ def test_prefetch_pack_thread_bit_identical(small_dataset):
     if a.idx is not None:
         np.testing.assert_array_equal(np.asarray(a.idx), np.asarray(b.idx))
         np.testing.assert_array_equal(np.asarray(a.pack_pos), np.asarray(b.pack_pos))
+
+
+# --------------------------------------------------- SLO miss-rate trigger
+
+
+def test_refresh_config_validates_miss_threshold():
+    with pytest.raises(ValueError):
+        RefreshConfig(mode="events", miss_threshold=0.0)
+    with pytest.raises(ValueError):
+        RefreshConfig(mode="events", miss_threshold=1.5)
+    cfg = RefreshConfig(mode="events", miss_threshold=0.3)
+    assert cfg.enabled and not cfg.on_interval
+
+
+def test_miss_threshold_fires_before_interval(small_dataset):
+    """A high-miss window must refresh on the SLO trigger without waiting
+    out the interval (here: events mode, so no interval trigger at all)."""
+    eng = _engine(small_dataset, total_cache_bytes=40_000)
+    rep = eng.run(
+        max_batches=4,
+        pipeline_depth=1,
+        refresh=RefreshConfig(mode="events", miss_threshold=0.05),
+    )
+    assert rep.refresh_events, "threshold never fired"
+    assert all(e.reason == "miss-threshold" for e in rep.refresh_events)
+    assert all(e.window_miss_rate >= 0.05 for e in rep.refresh_events)
+
+
+def test_miss_threshold_composes_with_interval(small_dataset):
+    """interval mode + threshold: the quality trigger may pre-empt the
+    schedule, and the schedule still guarantees a refresh cadence."""
+    eng = _engine(small_dataset, total_cache_bytes=40_000)
+    rep = eng.run(
+        max_batches=6,
+        pipeline_depth=1,
+        refresh=RefreshConfig(
+            mode="interval", interval_batches=3, miss_threshold=0.05
+        ),
+    )
+    reasons = {e.reason for e in rep.refresh_events}
+    assert reasons <= {"miss-threshold", "interval"} and reasons
+
+
+def test_low_threshold_never_fires_below_it(small_dataset):
+    """A threshold above the actual miss rate must never fire — only the
+    interval trigger remains."""
+    eng = _engine(small_dataset)  # ample cache → low miss rate
+    rep = eng.run(
+        max_batches=6,
+        pipeline_depth=1,
+        refresh=RefreshConfig(mode="interval", interval_batches=3, miss_threshold=0.999),
+    )
+    assert all(e.reason == "interval" for e in rep.refresh_events)
+
+
+# ------------------------------------------------ refresh-aware auto depth
+
+
+def test_refresh_rederives_auto_depth(small_dataset):
+    """With pipeline_depth='auto' and refresh enabled, each refresh derives
+    a window from the measured serve-time prep:compute laps and applies it
+    to the live executor; outputs stay bit-identical to serial."""
+    eng = _engine(small_dataset)
+    r1 = eng.run(max_batches=6, pipeline_depth=1, collect_outputs=True)
+    o1 = eng.last_outputs
+    eng2 = GNNInferenceEngine(
+        small_dataset, fanouts=FANOUTS, batch_size=BATCH, params=eng.params
+    )
+    eng2.pipeline = eng.pipeline
+    r2 = eng2.run(
+        max_batches=6,
+        pipeline_depth="auto",
+        collect_outputs=True,
+        refresh=RefreshConfig(mode="interval", interval_batches=2),
+    )
+    depths = [e.suggested_depth for e in r2.refresh_events]
+    assert depths and all(d is None or 2 <= d <= 4 for d in depths)
+    # telemetry recorded compute laps, so at least the LAST refresh (after
+    # a full window of retired batches) must carry a derived depth
+    assert any(d is not None for d in depths)
+    for a, b in zip(o1, eng2.last_outputs):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_serve_refresh_rederives_auto_depth(small_dataset):
+    """The multi-stream server applies the re-derived window to its live
+    executor (depth='auto' + interval refresh)."""
+    eng = _engine(small_dataset, stream_seeds=[0, 1])
+    server = MultiStreamServer(
+        eng,
+        depth="auto",
+        refresh=RefreshConfig(mode="interval", interval_batches=3),
+    )
+    queues = make_stream_batches(
+        small_dataset, num_streams=2, batches_per_stream=3, batch_size=BATCH, seed=0
+    )
+    for sid, q in enumerate(queues):
+        server.add_stream(q, seed=sid)
+    rep = server.run()
+    events = server.refresh_manager.events
+    assert events, "interval refresh never fired"
+    derived = [e.suggested_depth for e in events if e.suggested_depth is not None]
+    if derived:  # once compute laps exist, the server follows the new window
+        assert rep.depth == derived[-1]
+        # the defaulted backpressure cap follows the window — a deeper
+        # window admission can actually fill (an explicit cap would stay)
+        assert server.max_inflight == derived[-1]

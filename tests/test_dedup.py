@@ -1,0 +1,223 @@
+"""Unique-frontier dedup invariants: reconstruction, equivalence, accounting.
+
+The dedup path's contract is exact: ``unique_ids[inverse]`` reconstructs
+every frontier bit-for-bit, and flipping ``dedup`` (alone or with the
+prefetch / kernel / refresh knobs) never changes model outputs or hit
+accounting — only how many rows the feature stage moves.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.graph.sampling import (
+    dedup_frontier,
+    device_graph,
+    pow2_bucket,
+    sample_blocks,
+)
+from repro.runtime.gnn_engine import GNNInferenceEngine
+
+FANOUTS = (3, 2)
+BATCH = 64
+KW = dict(total_cache_bytes=200_000, n_presample=2)
+
+
+# -------------------------------------------------------------- primitives
+
+
+@settings(max_examples=50, deadline=None)
+@given(ids=st.lists(st.integers(0, 40), min_size=1, max_size=120))
+def test_dedup_frontier_reconstructs_exactly(ids):
+    frontier = jnp.asarray(np.asarray(ids, np.int32))
+    dd = dedup_frontier(frontier)
+    nu = int(dd.num_unique)
+    unique = np.asarray(dd.unique_ids)
+    inverse = np.asarray(dd.inverse)
+    # live prefix is the sorted distinct ids; the tail pads with the max id
+    np.testing.assert_array_equal(unique[:nu], np.unique(ids))
+    assert (unique[nu:] == unique[nu - 1]).all()
+    # inverse points into the live prefix and reconstructs every position
+    assert inverse.min() >= 0 and inverse.max() < nu
+    np.testing.assert_array_equal(unique[inverse], np.asarray(ids))
+
+
+def test_pow2_bucket_covers_and_caps():
+    assert pow2_bucket(0, 64) == 1
+    assert pow2_bucket(1, 64) == 1
+    assert pow2_bucket(3, 64) == 4
+    assert pow2_bucket(4, 64) == 4
+    assert pow2_bucket(33, 64) == 64
+    assert pow2_bucket(100, 64) == 64  # capped at the frontier size
+
+
+def test_sample_blocks_dedup_matches_plain_sampling(small_dataset):
+    """dedup=True must not disturb sampling itself: same frontiers, hits,
+    and edge slots as the plain call under the same key."""
+    g = device_graph(small_dataset.graph)
+    seeds = jnp.asarray(small_dataset.test_idx[:BATCH].astype(np.int32))
+    key = jax.random.PRNGKey(7)
+    plain = sample_blocks(key, g, seeds, FANOUTS)
+    dedup = sample_blocks(key, g, seeds, FANOUTS, dedup=True)
+    assert plain.dedup is None and dedup.dedup is not None
+    for a, b in zip(plain.frontiers, dedup.frontiers):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(plain.edge_slots, dedup.edge_slots):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    dd = dedup.dedup
+    np.testing.assert_array_equal(
+        np.asarray(dd.unique_ids)[np.asarray(dd.inverse)],
+        np.asarray(dedup.input_nodes),
+    )
+    assert int(dd.num_unique) == np.unique(np.asarray(dedup.input_nodes)).size
+
+
+def test_forward_inverse_index_bit_identical(small_dataset):
+    """forward(unique, inverse_index) == forward(unique[inverse]) — the
+    reconstruction gather commutes with nothing, it IS the first op."""
+    from repro.models import gnn as gnn_models
+
+    g = device_graph(small_dataset.graph)
+    seeds = jnp.asarray(small_dataset.test_idx[:BATCH].astype(np.int32))
+    block = sample_blocks(jax.random.PRNGKey(3), g, seeds, FANOUTS, dedup=True)
+    params = gnn_models.init_params(
+        jax.random.PRNGKey(0), "graphsage", small_dataset.spec.feat_dim,
+        small_dataset.spec.num_classes,
+    )
+    feats = jnp.asarray(small_dataset.features)
+    unique_feats = feats[block.dedup.unique_ids]
+    out_inverse = gnn_models.forward(
+        params, unique_feats, model="graphsage", fanouts=FANOUTS,
+        inverse_index=block.dedup.inverse,
+    )
+    out_plain = gnn_models.forward(
+        params, unique_feats[block.dedup.inverse], model="graphsage", fanouts=FANOUTS
+    )
+    np.testing.assert_array_equal(np.asarray(out_inverse), np.asarray(out_plain))
+
+
+# ------------------------------------------------------------- equivalence
+
+
+def _paired_engines(dataset, policy):
+    serial = GNNInferenceEngine(dataset, fanouts=FANOUTS, batch_size=BATCH)
+    serial.prepare(policy, **KW)
+    other = GNNInferenceEngine(
+        dataset, fanouts=FANOUTS, batch_size=BATCH, params=serial.params
+    )
+    other.pipeline = serial.pipeline
+    return serial, other
+
+
+@pytest.mark.parametrize("policy", ["dci", "dgl"])
+@pytest.mark.parametrize(
+    "depth,prefetch,use_kernel",
+    [(1, False, False), (3, True, False), (2, True, True)],
+)
+def test_dedup_equivalence(small_dataset, policy, depth, prefetch, use_kernel):
+    """dedup=True is bit-identical to the plain serial run — outputs, adj
+    and feature hit accounting — for every knob combination, while moving
+    strictly fewer feature rows; with prefetch it stages only unique
+    misses."""
+    from repro.runtime.cache_refresh import RefreshConfig
+
+    serial, piped = _paired_engines(small_dataset, policy)
+    r1 = serial.run(max_batches=4, pipeline_depth=1, collect_outputs=True)
+    o1 = serial.last_outputs
+    r2 = piped.run(
+        max_batches=4,
+        pipeline_depth=depth,
+        collect_outputs=True,
+        prefetch=prefetch,
+        use_kernel=use_kernel,
+        dedup=True,
+        refresh=RefreshConfig(mode="off"),
+    )
+    o2 = piped.last_outputs
+    assert r2.dedup
+    assert (r1.adj_hits, r1.adj_lookups) == (r2.adj_hits, r2.adj_lookups)
+    assert (r1.feat_hits, r1.feat_lookups) == (r2.feat_hits, r2.feat_lookups)
+    assert 0 < r2.unique_rows < r2.feat_lookups
+    assert r2.duplication_factor > 1.0
+    # pow2 padding bounds the gathered rows at 2x the distinct rows
+    assert r2.unique_rows <= r2.gathered_rows <= 2 * r2.unique_rows
+    if prefetch:
+        assert r2.prefetched_rows <= r1.feat_lookups - r1.feat_hits
+    for a, b in zip(o1, o2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_dedup_equivalence_single_batch(small_dataset):
+    """Per-batch (not just cumulative) hit accounting is dedup-invariant:
+    a one-batch run pins the first batch's counters exactly."""
+    serial, piped = _paired_engines(small_dataset, "dci")
+    r1 = serial.run(max_batches=1, pipeline_depth=1)
+    r2 = piped.run(max_batches=1, pipeline_depth=1, dedup=True)
+    assert (r1.feat_hits, r1.feat_lookups) == (r2.feat_hits, r2.feat_lookups)
+    assert (r1.adj_hits, r1.adj_lookups) == (r2.adj_hits, r2.adj_lookups)
+
+
+def test_dedup_with_refresh_outputs_identical(small_dataset):
+    """dedup composes with online refresh: outputs stay bit-identical to
+    the refresh-free serial run (a refresh moves bytes, never values)."""
+    from repro.runtime.cache_refresh import RefreshConfig
+
+    serial, piped = _paired_engines(small_dataset, "dci")
+    r1 = serial.run(max_batches=6, pipeline_depth=1, collect_outputs=True)
+    o1 = serial.last_outputs
+    r2 = piped.run(
+        max_batches=6,
+        pipeline_depth=2,
+        collect_outputs=True,
+        dedup=True,
+        refresh=RefreshConfig(mode="interval", interval_batches=2),
+    )
+    assert piped.pipeline.caches.epoch >= 1 and len(r2.refresh_events) >= 1
+    assert r1.num_batches == r2.num_batches
+    for a, b in zip(o1, piped.last_outputs):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_dedup_rain_falls_back_to_reuse(small_dataset):
+    """RAIN's cross-batch reuse map is per-visit — dedup resolves off, the
+    run behaves exactly like the plain RAIN path."""
+    serial, piped = _paired_engines(small_dataset, "rain")
+    r1 = serial.run(max_batches=4, pipeline_depth=1, collect_outputs=True)
+    o1 = serial.last_outputs
+    r2 = piped.run(max_batches=4, pipeline_depth=2, dedup=True, collect_outputs=True)
+    assert not r2.dedup  # resolved off against reuse_prev_batch
+    assert r2.unique_rows == 0
+    assert (r1.feat_hits, r1.feat_lookups) == (r2.feat_hits, r2.feat_lookups)
+    for a, b in zip(o1, piped.last_outputs):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_telemetry_multiplicities_bit_identical():
+    """Unique+multiplicity recording produces the same counters as the
+    per-visit form — the dedup telemetry contract."""
+    from repro.core.telemetry import WorkloadTelemetry
+
+    rng = np.random.default_rng(0)
+    nodes = rng.integers(0, 12, 40)
+    posmap = rng.integers(-1, 3, 12)
+    hit = posmap[nodes] >= 0
+    slots = [rng.integers(0, 8, (5, 3))]
+
+    per_visit = WorkloadTelemetry(num_nodes=12, num_edges=8)
+    per_visit.observe_batch(nodes, hit, slots)
+
+    unique, inverse = np.unique(nodes, return_inverse=True)
+    mult = np.bincount(inverse, minlength=unique.size)
+    deduped = WorkloadTelemetry(num_nodes=12, num_edges=8)
+    deduped.observe_batch(
+        unique, posmap[unique] >= 0, slots, multiplicities=mult
+    )
+
+    np.testing.assert_array_equal(per_visit.node_counts, deduped.node_counts)
+    np.testing.assert_array_equal(per_visit.node_miss_counts, deduped.node_miss_counts)
+    np.testing.assert_array_equal(per_visit.edge_counts, deduped.edge_counts)
+    assert per_visit.feat_lookups == deduped.feat_lookups == 40
+    assert per_visit.feat_misses == deduped.feat_misses
+    assert per_visit.miss_rate == deduped.miss_rate

@@ -7,6 +7,7 @@ import pytest
 
 from repro.kernels.cached_gather.kernel import (
     cached_gather,
+    cached_gather_blocks,
     cached_gather_select,
     default_interpret,
     dma_supported,
@@ -84,6 +85,75 @@ def test_cached_gather_rejects_bad_buffers():
     idx = jnp.zeros((2,), jnp.int32)
     with pytest.raises(ValueError):
         cached_gather(hot, host, idx, idx, gather_buffers=0)
+
+
+@pytest.mark.parametrize("h,n,f,s", [(16, 100, 64, 32), (8, 50, 602, 7), (4, 256, 128, 200)])
+def test_cached_gather_blocks_matches_ref_random(h, n, f, s):
+    """Arbitrary (unsorted, mixed-source) index sets: every block falls
+    back to per-row copies and the output must still be bit-exact."""
+    hot = jnp.asarray(RNG.standard_normal((h, f)), jnp.float32)
+    host = jnp.asarray(RNG.standard_normal((n, f)), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, n, s), jnp.int32)
+    pos = jnp.asarray(RNG.integers(-1, h, s), jnp.int32)
+    out = cached_gather_blocks(hot, host, idx, pos)
+    ref = cached_gather_ref(hot, host, idx, pos)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_cached_gather_blocks_contiguous_runs():
+    """Sorted ids with id-ordered slots — the dedup frontier's shape: whole
+    blocks collapse to single run DMAs on both the hit and miss source."""
+    n, f = 64, 128
+    host = jnp.asarray(RNG.standard_normal((n, f)), jnp.float32)
+    ids = jnp.asarray(np.arange(10, 42, dtype=np.int32))
+    all_hit = cached_gather_blocks(host, host, ids, ids)
+    np.testing.assert_array_equal(np.asarray(all_hit), np.asarray(host)[10:42])
+    all_miss = cached_gather_blocks(host, host, ids, jnp.full((32,), -1, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(all_miss), np.asarray(host)[10:42])
+
+
+def test_cached_gather_blocks_singleton_runs():
+    """Strided sorted ids: every run breaks after one row (mode-0 blocks
+    throughout) — the worst case must still be exact."""
+    n, f = 64, 96
+    hot = jnp.asarray(RNG.standard_normal((8, f)), jnp.float32)
+    host = jnp.asarray(RNG.standard_normal((n, f)), jnp.float32)
+    idx = jnp.asarray(np.arange(0, 34, 2, dtype=np.int32))  # stride 2: no runs
+    pos = jnp.asarray(RNG.integers(-1, 8, 17), jnp.int32)
+    out = cached_gather_blocks(hot, host, idx, pos)
+    ref = cached_gather_ref(hot, host, idx, pos)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_cached_gather_blocks_empty_and_row_block_edges():
+    """S=0 short-circuits; row_block=1 routes to the per-row kernel; a
+    row_block larger than S pads to one block; non-128 feature dims keep
+    the pad-and-slice bit-exact."""
+    hot = jnp.asarray(RNG.standard_normal((4, 130)), jnp.float32)
+    host = jnp.asarray(RNG.standard_normal((9, 130)), jnp.float32)
+    empty = cached_gather_blocks(
+        hot, host, jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32)
+    )
+    assert empty.shape == (0, 130)
+    idx = jnp.asarray(RNG.integers(0, 9, 3), jnp.int32)
+    pos = jnp.asarray([-1, 0, 2], jnp.int32)
+    ref = cached_gather_ref(hot, host, idx, pos)
+    for rb in (1, 4, 16):
+        out = cached_gather_blocks(hot, host, idx, pos, row_block=rb)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    with pytest.raises(ValueError):
+        cached_gather_blocks(hot, host, idx, pos, row_block=0)
+
+
+@pytest.mark.parametrize("gather_buffers", [1, 2, 3])
+def test_cached_gather_blocks_buffer_rotation(gather_buffers):
+    hot = jnp.asarray(RNG.standard_normal((8, 160)), jnp.float32)
+    host = jnp.asarray(RNG.standard_normal((64, 160)), jnp.float32)
+    idx = jnp.asarray(np.sort(RNG.choice(64, 33, replace=False)).astype(np.int32))
+    pos = jnp.asarray(RNG.integers(-1, 8, 33), jnp.int32)
+    out = cached_gather_blocks(hot, host, idx, pos, gather_buffers=gather_buffers)
+    ref = cached_gather_ref(hot, host, idx, pos)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
 def test_cached_gather_select_fallback_matches_ref():
