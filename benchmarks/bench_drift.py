@@ -47,6 +47,7 @@ import numpy as np
 
 from benchmarks.common import emit, make_engine
 from repro.runtime.cache_refresh import RefreshConfig
+from repro.runtime.request_queue import flash_crowd_seed_batches, uniform_seed_batches
 
 N_PRESAMPLE = 8
 CACHE_BYTES = 500_000  # small enough that neither cache saturates — drift must hurt
@@ -54,12 +55,9 @@ CACHE_BYTES = 500_000  # small enough that neither cache saturates — drift mus
 
 def _uniform_batches(dataset, *, n_batches: int, batch_size: int, seed: int):
     """Phase A: uniform draws over the whole test set (what presampling saw)."""
-    rng = np.random.default_rng(seed)
-    ids = rng.permutation(dataset.test_idx)
-    need = n_batches * batch_size
-    if len(ids) < need:
-        ids = np.tile(ids, -(-need // max(len(ids), 1)))
-    return list(ids[:need].reshape(n_batches, batch_size))
+    return uniform_seed_batches(
+        dataset, n_batches=n_batches, batch_size=batch_size, seed=seed
+    )
 
 
 def _flash_crowd_batches(dataset, *, n_batches: int, batch_size: int, seed: int):
@@ -69,9 +67,9 @@ def _flash_crowd_batches(dataset, *, n_batches: int, batch_size: int, seed: int)
     counts pile onto the same few thousand nodes batch after batch — the
     concentrated hot set a serve-time refresh can capture and a one-shot
     global ranking cannot."""
-    rng = np.random.default_rng(seed)
-    pool = rng.choice(dataset.test_idx, size=batch_size, replace=False)
-    return [rng.permutation(pool) for _ in range(n_batches)]
+    return flash_crowd_seed_batches(
+        dataset, n_batches=n_batches, batch_size=batch_size, seed=seed
+    )
 
 
 def _phase_row(label, phase, rep, wall_s):

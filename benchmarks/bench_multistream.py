@@ -47,10 +47,16 @@ import argparse
 import json
 import time
 
-from benchmarks.common import CACHE_BYTES, emit, make_engine
+from benchmarks.common import CACHE_BYTES, emit, geomean, make_engine
 from repro.runtime.cache_refresh import RefreshConfig
 from repro.runtime.gnn_engine import GNNInferenceEngine
 from repro.runtime.gnn_serve import MultiStreamServer, make_stream_batches
+from repro.runtime.request_queue import (
+    RequestQueueServer,
+    burst_trace,
+    flash_crowd_seed_batches,
+    poisson_trace,
+)
 
 N_PRESAMPLE = 8  # per prepared cache (Fig. 11's stabilization point)
 
@@ -145,6 +151,8 @@ def _shared_multistream(
             "mean_latency_s": round(
                 sum(s.mean_latency_s for s in rep.streams) / len(rep.streams), 5
             ),
+            "p50_latency_s": round(rep.p50_latency_s, 5),
+            "p99_latency_s": round(rep.p99_latency_s, 5),
             "prefetched_rows": sum(s.prefetched_rows for s in rep.streams),
         }
         if rep.epochs is not None:
@@ -235,6 +243,133 @@ def run(
     return rows, checks
 
 
+def run_request_latency(
+    dataset_name="ogbn-products",
+    *,
+    burst_requests=4,
+    steady_requests=8,
+    batch_size=128,
+    cache_bytes=CACHE_BYTES,
+    fanouts=(8, 4, 2),
+    model="graphsage",
+    seeds=(0, 1),
+    slo_margin=4.0,
+):
+    """Per-request tail latency under arrival traces: EDF vs round-robin.
+
+    One engine/cache pair (refresh off, so the caches stay frozen) serves
+    every run at depth 1 — runs differ ONLY in arrival clock and admission
+    order.  The headline is the burst trace: a flash crowd dumped at t=0
+    colliding with a steady stream paced at the measured service time.
+    Round-robin interleaves the two, so the burst's tail sits ~2x its
+    solo drain time; EDF admits the earliest deadlines (the burst) first
+    and roughly halves the burst p99.  The gate metric is the p99 RATIO
+    rr/edf, geomean'd over trace seeds — a scheduling property, not a
+    wall-clock one, so it is machine-independent (run.py gates on it).
+    Informational extras: an SLO-shedding run on the same burst and a
+    Poisson steady-traffic run.
+    """
+    eng = make_engine(dataset_name, model=model, fanouts=fanouts, batch_size=batch_size)
+    dataset = eng.dataset
+    eng.prepare("dci", total_cache_bytes=cache_bytes, n_presample=N_PRESAMPLE)
+    probe = flash_crowd_seed_batches(
+        dataset, n_batches=1, batch_size=batch_size, seed=seeds[0]
+    )[0]
+    eng.warmup(probe)
+    # Per-batch service time at depth 1 = sample + gather + compute; the
+    # steady stream paces itself (and deadlines scale) off this measurement.
+    service_s = float(sum(eng._probe_stage_seconds(probe)))
+    slo_s = slo_margin * service_s
+
+    def serve(trace, admission):
+        # Fresh Request objects per run (traces are mutated in place), one
+        # fresh server per run; depth 1 so admission order IS service order.
+        server = RequestQueueServer(eng, depth=1, admission=admission)
+        for sid, reqs in enumerate(trace):
+            server.add_request_stream(reqs, seed=100 + sid)
+        return server.run()
+
+    def row(arrival, rep, seed, **extra):
+        r = {
+            "mode": f"request-{arrival}",
+            "dataset": dataset_name,
+            "admission": rep.admission,
+            "trace_seed": seed,
+            "requests": rep.total_batches,
+            "requests_shed": rep.requests_shed,
+            "deadline_hit_rate": round(rep.deadline_hit_rate, 3),
+            "p50_latency_s": round(rep.p50_latency_s, 5),
+            "p99_latency_s": round(rep.p99_latency_s, 5),
+            "service_estimate_s": round(service_s, 5),
+        }
+        r.update(extra)
+        emit(
+            f"request_latency/{dataset_name}/{arrival}/{rep.admission}/seed{seed}",
+            rep.p99_latency_s * 1e6,
+            f"p50_s={rep.p50_latency_s:.4f};shed={rep.requests_shed};"
+            f"deadline_hit={rep.deadline_hit_rate:.3f}",
+        )
+        return r
+
+    # Throwaway serve: the first pass through the serve loop pays one-off
+    # costs (executor threads, accounting jit) that would otherwise land in
+    # whichever timed run goes first and skew its latency stamps.
+    serve(
+        burst_trace(
+            dataset,
+            burst_requests=1,
+            steady_requests=1,
+            batch_size=batch_size,
+            service_estimate_s=service_s,
+            seed=seeds[0],
+        ),
+        "round-robin",
+    )
+
+    rows = []
+    rr_p99s, edf_p99s, ratios = [], [], []
+    for seed in seeds:
+        per_policy = {}
+        # The SLO-shed run is informational; one seed's worth is enough.
+        policies = ["round-robin", "edf"] + (["slo"] if seed == seeds[0] else [])
+        for policy in policies:
+            trace = burst_trace(
+                dataset,
+                burst_requests=burst_requests,
+                steady_requests=steady_requests,
+                batch_size=batch_size,
+                service_estimate_s=service_s,
+                slo_s=slo_s,
+                seed=seed,
+            )
+            rep = serve(trace, policy)
+            burst_p99 = rep.streams[0].p99_latency_s
+            per_policy[policy] = burst_p99
+            rows.append(row("burst", rep, seed, burst_p99_s=round(burst_p99, 5)))
+        rr_p99s.append(per_policy["round-robin"])
+        edf_p99s.append(per_policy["edf"])
+        ratios.append(max(per_policy["round-robin"], 1e-9) / max(per_policy["edf"], 1e-9))
+    trace = poisson_trace(
+        dataset,
+        num_streams=2,
+        requests_per_stream=max(burst_requests, 2),
+        batch_size=batch_size,
+        mean_interarrival_s=service_s,
+        slo_s=slo_s,
+        seed=seeds[0],
+    )
+    rows.append(row("poisson", serve(trace, "round-robin"), seeds[0]))
+
+    ratio = geomean(ratios)
+    checks = {
+        "latency_p99_rr_burst_s": round(geomean(rr_p99s), 5),
+        "latency_p99_edf_burst_s": round(geomean(edf_p99s), 5),
+        "edf_vs_rr_p99_ratio_burst": round(ratio, 3),
+        "edf_beats_rr_p99_burst": bool(ratio >= 1.0),
+    }
+    return rows, checks
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--streams", type=int, default=4)
@@ -250,6 +385,13 @@ def main() -> None:
         "retired batches) reporting per-epoch hit rates; 0 = off",
     )
     ap.add_argument("--json", default=None, help="also write rows+checks as JSON")
+    ap.add_argument(
+        "--request-latency",
+        action="store_true",
+        help="also run the request-level arrival-trace benchmark: per-request "
+        "p50/p99 under burst and Poisson traces, EDF-vs-round-robin burst "
+        "p99 ratio (the tail gate run.py checks), and an SLO shedding row",
+    )
     ap.add_argument(
         "--smoke",
         action="store_true",
@@ -273,9 +415,19 @@ def main() -> None:
         print(r)
     status = "PASS" if (checks["uplift_ge_1.2"] and checks["shared_hit_ge_private"]) else "FAIL"
     print(f"checks ({'smoke: informational' if args.smoke else status}): {checks}")
+    payload = {"rows": rows, "checks": checks}
+    if args.request_latency:
+        rl_rows, rl_checks = run_request_latency(
+            batch_size=min(args.batch_size, 128), cache_bytes=int(args.cache_mb * 1e6)
+        )
+        for r in rl_rows:
+            print(r)
+        rl_status = "PASS" if rl_checks["edf_beats_rr_p99_burst"] else "FAIL"
+        print(f"request-latency checks ({rl_status}): {rl_checks}")
+        payload["request_latency"] = {"rows": rl_rows, "checks": rl_checks}
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"rows": rows, "checks": checks}, f, indent=1)
+            json.dump(payload, f, indent=1)
 
 
 if __name__ == "__main__":

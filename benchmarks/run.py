@@ -60,6 +60,7 @@ ADJ_HIT_ABS_TOL = 0.10  # adjacency hit-rate drift (split-sensitive share)
 MODELED_REL_TOL = 0.25  # modeled (PCIe/HBM-projected) speedup drift
 PIPELINE_GEOMEAN_FLOOR = 0.75  # per-mode geomean of cur/base pipeline speedups
 UPLIFT_FRACTION = 0.6  # multi-stream uplift must keep this much of baseline
+TAIL_P99_FRACTION = 0.6  # EDF-vs-RR burst p99 ratio must keep this much of baseline
 
 
 def quick_bench() -> dict:
@@ -70,7 +71,13 @@ def quick_bench() -> dict:
     ms_rows, ms_checks = bench_multistream.run(
         num_streams=2, batches_per_stream=2, batch_size=128
     )
-    return {"end2end": e2e, "multistream": {"rows": ms_rows, "checks": ms_checks}}
+    print("# --- quick request latency (burst EDF-vs-RR tail gate) ---")
+    rl_rows, rl_checks = bench_multistream.run_request_latency(batch_size=128)
+    return {
+        "end2end": e2e,
+        "multistream": {"rows": ms_rows, "checks": ms_checks},
+        "request_latency": {"rows": rl_rows, "checks": rl_checks},
+    }
 
 
 def _e2e_key(row: dict) -> str:
@@ -142,6 +149,30 @@ def check_against(baseline: dict, current: dict) -> list[tuple[str, bool, str]]:
             f"{cur_u} vs {base_u} (floor {floor:.3f})",
         )
     )
+
+    # Tail-latency gate: the EDF-vs-round-robin burst p99 ratio is a pure
+    # scheduling property (same engine, same trace, only admission order
+    # differs), so it compares across machines where absolute p99s do not.
+    # Baselines written before the request front-end existed skip the gate.
+    base_rl = baseline.get("request_latency")
+    if base_rl is not None:
+        base_rl_checks = base_rl["checks"]
+        cur_rl_checks = current["request_latency"]["checks"]
+        flag = "edf_beats_rr_p99_burst"
+        ok = bool(cur_rl_checks.get(flag)) or not bool(base_rl_checks.get(flag, True))
+        results.append((f"rl/checks/{flag}", ok, str(cur_rl_checks.get(flag))))
+        base_r = base_rl_checks["edf_vs_rr_p99_ratio_burst"]
+        cur_r = cur_rl_checks["edf_vs_rr_p99_ratio_burst"]
+        # Same discipline as the uplift floor: a hot baseline machine must
+        # not raise the bar above the >=1.0 acceptance criterion itself.
+        rl_floor = min(1.0, base_r * TAIL_P99_FRACTION)
+        results.append(
+            (
+                "rl/checks/edf_vs_rr_p99_ratio",
+                cur_r >= rl_floor,
+                f"{cur_r} vs {base_r} (floor {rl_floor:.3f})",
+            )
+        )
     return results
 
 
@@ -254,6 +285,9 @@ def main() -> None:
     print("# --- multi-stream serving: shared vs private caches (beyond-paper) ---")
     _, ms_checks = bench_multistream.run(num_streams=4, batches_per_stream=4, batch_size=256)
 
+    print("# --- request-level serving: arrival traces, admission, tail latency (beyond-paper) ---")
+    _, rl_checks = bench_multistream.run_request_latency()
+
     print("# --- online cache refresh under seed-distribution drift (beyond-paper) ---")
     drift_rows, drift_checks = bench_drift.run(batches_per_phase=8, batch_size=256)
     for r in drift_rows:
@@ -364,6 +398,13 @@ def main() -> None:
         (
             "Prefetch: identical hit accounting with the miss-path prefetch stage",
             ms_checks["prefetch_hits_identical"],
+        )
+    )
+    checks.append(
+        (
+            "Request serving: EDF beats round-robin on burst p99 "
+            f"(geomean {rl_checks['edf_vs_rr_p99_ratio_burst']:.2f}x)",
+            rl_checks["edf_beats_rr_p99_burst"],
         )
     )
     checks.append(

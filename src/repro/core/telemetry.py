@@ -34,18 +34,22 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["TelemetryWindow", "WorkloadTelemetry"]
+__all__ = ["TelemetryWindow", "WorkloadTelemetry", "merge_windows"]
 
 STAGE_LAPS = ("sample", "feature", "compute")
 
 
 @dataclasses.dataclass(frozen=True)
 class TelemetryWindow:
-    """An immutable snapshot of one accumulation window."""
+    """An immutable snapshot of one accumulation window.
 
-    node_counts: np.ndarray  # int64[N] feature-row visits
-    node_miss_counts: np.ndarray  # int64[N] feature-row misses (drift signal)
-    edge_counts: np.ndarray  # int64[E] adjacency-element fetches
+    Count arrays are int64 from a single accumulator; a weighted
+    :func:`merge_windows` produces float64 (the decayed history consuming
+    them is float either way)."""
+
+    node_counts: np.ndarray  # [N] feature-row visits
+    node_miss_counts: np.ndarray  # [N] feature-row misses (drift signal)
+    edge_counts: np.ndarray  # [E] adjacency-element fetches
     sample_times: list[float]
     feature_times: list[float]
     compute_times: list[float]
@@ -62,6 +66,53 @@ class TelemetryWindow:
     @property
     def miss_rate(self) -> float:
         return self.feat_misses / max(self.feat_lookups, 1)
+
+
+def merge_windows(windows, weights=None) -> TelemetryWindow:
+    """Fold several streams' windows into one, optionally weighted.
+
+    The count arrays are summed with per-window ``weights`` (float64 —
+    the decayed history they feed is float anyway); stage-lap lists are
+    concatenated UNweighted (a lap is a wall-clock fact, not a vote) and
+    ``batches`` summed, so the Eq. 1 stage ratio and the refresh-window
+    bookkeeping stay physical while the *ranking* signal tilts toward
+    pressured streams.  ``weights=None`` (or all-1) reproduces the shared
+    single-accumulator counts exactly.  Negative weights are clamped to 0
+    — a merge can emphasize a stream, never subtract one (leave-time
+    subtraction is the refresh manager's remnant path).
+    """
+    windows = list(windows)
+    if not windows:
+        raise ValueError("merge_windows needs at least one window")
+    if weights is None:
+        weights = [1.0] * len(windows)
+    if len(weights) != len(windows):
+        raise ValueError(f"{len(windows)} windows but {len(weights)} weights")
+    node = np.zeros_like(windows[0].node_counts, np.float64)
+    miss = np.zeros_like(windows[0].node_miss_counts, np.float64)
+    edge = np.zeros_like(windows[0].edge_counts, np.float64)
+    sample_times: list[float] = []
+    feature_times: list[float] = []
+    compute_times: list[float] = []
+    batches = 0
+    for win, w in zip(windows, weights):
+        w = max(float(w), 0.0)
+        node += w * win.node_counts
+        miss += w * win.node_miss_counts
+        edge += w * win.edge_counts
+        sample_times.extend(win.sample_times)
+        feature_times.extend(win.feature_times)
+        compute_times.extend(win.compute_times)
+        batches += win.batches
+    return TelemetryWindow(
+        node_counts=node,
+        node_miss_counts=miss,
+        edge_counts=edge,
+        sample_times=sample_times,
+        feature_times=feature_times,
+        compute_times=compute_times,
+        batches=batches,
+    )
 
 
 class WorkloadTelemetry:

@@ -99,6 +99,23 @@ class FeatureStore:
             object.__setattr__(self, "_position_np", cached)
         return cached
 
+    def pad_node_id(self) -> int:
+        """A known-CACHED node id for padding device index buffers, or −1
+        when nothing is cached.
+
+        The deduped frontier's pow2 bucket tail is filled with this id
+        (``dedup_frontier(pad_id=...)``): pad slots then resolve as cache
+        hits, so a bucket-wide scan — e.g. a warmup-path
+        :meth:`prefetch_misses` without ``num_live`` — can never mistake
+        padding for duplicate miss rows.  Computed lazily from the host
+        position-map mirror (largest cached id; any cached id would do)."""
+        cached = getattr(self, "_pad_node_id", None)
+        if cached is None:
+            hot = np.nonzero(self.position_np() >= 0)[0]
+            cached = int(hot[-1]) if hot.size else -1
+            object.__setattr__(self, "_pad_node_id", cached)
+        return cached
+
     def prefetch_misses(
         self,
         nodes: np.ndarray,

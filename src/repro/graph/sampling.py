@@ -113,9 +113,14 @@ class DedupFrontier:
     """Sorted-unique view of one frontier, with jit-stable shapes.
 
     ``unique_ids[:num_unique]`` are the frontier's distinct node ids in
-    ascending order; positions at and beyond ``num_unique`` repeat the
-    largest id (a valid node, so padded gathers stay well-defined and are
-    simply never referenced).  ``inverse`` maps every frontier position to
+    ascending order; positions at and beyond ``num_unique`` repeat a pad
+    id (a valid node, so padded gathers stay well-defined and are simply
+    never referenced).  The pad id is the caller-supplied ``pad_id`` — a
+    known-CACHED node, so pad slots resolve as cache hits and can never
+    stage a duplicate miss row through
+    ``FeatureStore.prefetch_misses`` — falling back to the frontier's
+    largest id when no pad is given (or none is cached, signalled by
+    ``pad_id < 0``).  ``inverse`` maps every frontier position to
     its slot in ``unique_ids`` — ``unique_ids[inverse]`` reconstructs the
     frontier bit-for-bit, which is the identity the whole dedup feature
     path rests on (gathering unique rows then expanding through
@@ -125,7 +130,7 @@ class DedupFrontier:
     bucket (:func:`pow2_bucket`).
     """
 
-    unique_ids: jax.Array  # int32[S] sorted; tail padded with the max id
+    unique_ids: jax.Array  # int32[S] sorted; tail padded with a cached (or max) id
     inverse: jax.Array  # int32[S] frontier position -> slot in unique_ids
     num_unique: jax.Array  # int32[] distinct-id count (duplication = S / this)
 
@@ -144,7 +149,7 @@ jax.tree_util.register_pytree_node(
 
 
 @jax.jit
-def dedup_frontier(frontier: jax.Array) -> DedupFrontier:
+def dedup_frontier(frontier: jax.Array, pad_id: jax.Array | int | None = None) -> DedupFrontier:
     """Sort-and-unique one frontier on device with static output shapes.
 
     One argsort + one cumsum + two scatters — no host round trip, no
@@ -152,6 +157,16 @@ def dedup_frontier(frontier: jax.Array) -> DedupFrontier:
     array and ``num_unique`` marks the live prefix.  Duplicate positions
     scatter the same value to the same slot, so the result is
     deterministic regardless of scatter order.
+
+    ``pad_id`` fills the tail beyond the live prefix.  Pass a known-CACHED
+    node id (``FeatureStore.pad_node_id``) so pad slots are feature-cache
+    hits: a tail padded with an UNcached id (the old max-id behavior)
+    would look like extra copies of a miss row to any consumer that scans
+    the whole bucket — e.g. a warmup-path ``prefetch_misses`` call without
+    ``num_live`` — staging duplicate miss rows.  ``pad_id`` is a traced
+    operand (no recompile per value); ``None`` or a negative value falls
+    back to the frontier's largest id, which keeps cache-less policies
+    (every row a miss anyway) on the original behavior.
     """
     ids = frontier.astype(jnp.int32)
     order = jnp.argsort(ids)
@@ -160,7 +175,11 @@ def dedup_frontier(frontier: jax.Array) -> DedupFrontier:
         [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]]
     )
     rank = (jnp.cumsum(is_new) - 1).astype(jnp.int32)
-    unique = jnp.full(ids.shape, sorted_ids[-1], jnp.int32).at[rank].set(sorted_ids)
+    fill = sorted_ids[-1]
+    if pad_id is not None:
+        pad = jnp.asarray(pad_id, jnp.int32)
+        fill = jnp.where(pad >= 0, pad, fill)
+    unique = jnp.full(ids.shape, fill, jnp.int32).at[rank].set(sorted_ids)
     inverse = jnp.zeros(ids.shape, jnp.int32).at[order].set(rank)
     return DedupFrontier(unique_ids=unique, inverse=inverse, num_unique=rank[-1] + 1)
 
@@ -246,6 +265,7 @@ def sample_blocks(
     seeds: jax.Array,
     fanouts: tuple[int, ...],
     dedup: bool = False,
+    dedup_pad_id: jax.Array | int | None = None,
 ) -> BlockSample:
     """Multi-layer fan-out sampling producing GraphSAGE blocks.
 
@@ -258,6 +278,9 @@ def sample_blocks(
     feature path can gather each distinct row once and expand through the
     inverse map; sampling itself — frontiers, hits, edge slots, RNG
     consumption — is bit-identical with the flag on or off.
+    ``dedup_pad_id`` is the (traced) known-cached pad id forwarded to
+    :func:`dedup_frontier` — a plain int or scalar, never static, so a
+    refresh-epoch pad change does not recompile the sampler.
     """
     frontiers = [seeds.astype(jnp.int32)]
     hits_all = []
@@ -275,7 +298,7 @@ def sample_blocks(
         neighbor_hits=tuple(hits_all),
         edge_slots=tuple(slots_all),
         fanouts=tuple(fanouts),
-        dedup=dedup_frontier(frontier) if dedup else None,
+        dedup=dedup_frontier(frontier, dedup_pad_id) if dedup else None,
     )
 
 

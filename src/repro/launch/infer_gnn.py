@@ -18,11 +18,18 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.core.policies import POLICIES
+from repro.core.policies import ADMISSION_POLICIES, POLICIES
 from repro.graph import load_dataset
 from repro.runtime.cache_refresh import MODES as REFRESH_MODES, RefreshConfig
 from repro.runtime.gnn_engine import GNNInferenceEngine
 from repro.runtime.gnn_serve import MultiStreamServer, make_stream_batches
+from repro.runtime.request_queue import (
+    RequestQueueServer,
+    burst_trace,
+    flash_crowd_trace,
+    poisson_trace,
+    uniform_seed_batches,
+)
 
 
 def _depth(value: str):
@@ -122,9 +129,43 @@ def main() -> None:
         default=None,
         help="backpressure cap: window slots one stream may occupy (default: depth)",
     )
+    ap.add_argument(
+        "--arrival",
+        default="none",
+        choices=("none", "poisson", "burst", "flash-crowd"),
+        help="request-level serving (runtime/request_queue.py): put each "
+        "stream's batches on an arrival clock instead of an always-ready "
+        "queue.  'poisson' = steady traffic with exponential gaps, 'burst' "
+        "= a flash crowd at t=0 colliding with a service-paced steady "
+        "stream (always 2 streams), 'flash-crowd' = every stream dumps its "
+        "whole queue at t=0.  'none' (default) serves plain queues",
+    )
+    ap.add_argument(
+        "--slo-ms",
+        type=float,
+        default=None,
+        help="relative deadline attached to every request (arrival modes); "
+        "reported as deadline hit rate, and enforced by --admission slo",
+    )
+    ap.add_argument(
+        "--admission",
+        default="round-robin",
+        choices=sorted(ADMISSION_POLICIES),
+        help="admission policy for --arrival modes: 'round-robin' (the "
+        "bit-for-bit baseline), 'edf' (earliest deadline first), 'slo' "
+        "(EDF + shed requests whose deadline already passed)",
+    )
+    ap.add_argument(
+        "--mean-interarrival-ms",
+        type=float,
+        default=50.0,
+        help="mean request gap per stream for --arrival poisson",
+    )
     args = ap.parse_args()
 
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
+    if args.arrival == "burst":
+        args.streams = 2  # the burst trace is one flash-crowd + one steady stream
     ds = load_dataset(args.dataset, scale=args.scale, max_nodes=200_000)
     eng = GNNInferenceEngine(
         ds,
@@ -153,7 +194,57 @@ def main() -> None:
         if args.refresh_mode != "off"
         else None
     )
-    if args.streams > 1:
+    if args.arrival != "none":
+        per_stream = args.batches_per_stream
+        if args.max_batches is not None:
+            per_stream = min(per_stream, args.max_batches)
+        slo_s = args.slo_ms / 1e3 if args.slo_ms is not None else None
+        if args.arrival == "poisson":
+            trace = poisson_trace(
+                ds,
+                num_streams=args.streams,
+                requests_per_stream=per_stream,
+                batch_size=args.batch_size,
+                mean_interarrival_s=args.mean_interarrival_ms / 1e3,
+                slo_s=slo_s,
+                seed=eng.seed,
+            )
+        elif args.arrival == "flash-crowd":
+            trace = flash_crowd_trace(
+                ds,
+                num_streams=args.streams,
+                requests_per_stream=per_stream,
+                batch_size=args.batch_size,
+                slo_s=slo_s,
+                seed=eng.seed,
+            )
+        else:  # burst: pace the steady stream at the measured service time
+            probe = uniform_seed_batches(
+                ds, n_batches=1, batch_size=args.batch_size, seed=eng.seed
+            )[0]
+            eng.warmup(probe)
+            service_s = float(sum(eng._probe_stage_seconds(probe)))
+            trace = burst_trace(
+                ds,
+                burst_requests=per_stream,
+                steady_requests=2 * per_stream,
+                batch_size=args.batch_size,
+                service_estimate_s=service_s,
+                slo_s=slo_s,
+                seed=eng.seed,
+            )
+        server = RequestQueueServer(
+            eng,
+            depth=args.pipeline_depth,
+            max_inflight_per_stream=args.max_inflight,
+            refresh=refresh,
+            admission=args.admission,
+        )
+        for sid, requests in enumerate(trace):
+            server.add_request_stream(requests, seed=eng.seed + sid)
+        rep = server.run()
+        print(json.dumps(rep.summary(), indent=1))
+    elif args.streams > 1:
         server = MultiStreamServer(
             eng,
             depth=args.pipeline_depth,

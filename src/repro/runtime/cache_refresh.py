@@ -57,12 +57,13 @@ import numpy as np
 from repro.core.allocation import reallocate_capacity
 from repro.core.cache import CacheRefreshDelta
 from repro.core.presample import run_presampling
-from repro.core.telemetry import WorkloadTelemetry
+from repro.core.telemetry import WorkloadTelemetry, merge_windows
 from repro.graph.csc import BYTES_PER_ADJ_ELEMENT
 
 __all__ = ["RefreshConfig", "RefreshEvent", "CacheRefreshManager"]
 
 MODES = ("off", "interval", "events", "all")
+STREAM_WEIGHTINGS = ("none", "queue-depth", "slo-pressure")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,10 +86,25 @@ class RefreshConfig:
     # feature miss rate crosses this value (None = disabled).  Composes
     # with the interval/event triggers in any enabled mode.
     miss_threshold: float | None = None
+    # Per-stream telemetry merging.  "none" keeps the single shared
+    # accumulator (every stream records into one union window — the
+    # pre-existing behavior, bit-for-bit).  "queue-depth" / "slo-pressure"
+    # give each stream its OWN accumulator; at refresh time the windows
+    # are folded with weights the serving layer supplies
+    # (:meth:`CacheRefreshManager.set_weight_fn` — queue depth + in-flight
+    # occupancy, plus deadline urgency under "slo-pressure"), so the
+    # re-ranking follows the streams that are actually backed up rather
+    # than weighting every stream by raw batch count.
+    stream_weighting: str = "none"
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"refresh mode must be one of {MODES}, got {self.mode!r}")
+        if self.stream_weighting not in STREAM_WEIGHTINGS:
+            raise ValueError(
+                f"stream_weighting must be one of {STREAM_WEIGHTINGS}, "
+                f"got {self.stream_weighting!r}"
+            )
         if self.mode in ("interval", "all") and self.interval_batches < 1:
             raise ValueError("interval/all refresh modes need interval_batches >= 1")
         if not 0.0 <= self.history_decay <= 1.0:
@@ -164,6 +180,10 @@ class CacheRefreshManager:
         self.batch_size = batch_size
         self.config = config
         self.telemetry = WorkloadTelemetry(dataset.num_nodes, dataset.graph.num_edges)
+        # Weighted-merge mode: per-stream accumulators keyed by the
+        # serving layer's stream key; empty under "none" (shared sink).
+        self._stream_telemetry: dict = {}
+        self._weight_fn = None
         self.events: list[RefreshEvent] = []
         self._clocks: list = []
         self._retired_since_refresh = 0
@@ -195,10 +215,51 @@ class CacheRefreshManager:
         self._stream_stats: dict[int, dict] = {}
 
     # ----------------------------------------------------------- triggers
-    def register_clock(self, clock) -> None:
-        """Track a stream's StageClock so its laps feed the Eq. 1 ratio."""
+    def register_clock(self, clock, key=None) -> None:
+        """Track a stream's StageClock so its laps feed the Eq. 1 ratio.
+
+        ``key`` is accepted for symmetry with :meth:`telemetry_for`; laps
+        always pool into the shared accumulator — a stage lap is a
+        wall-clock fact shared by the whole pipeline, only the COUNT
+        merge is weighted."""
+        del key
         if clock not in self._clocks:
             self._clocks.append(clock)
+
+    def telemetry_for(self, key) -> WorkloadTelemetry:
+        """The sink a stream's retire path should record into.
+
+        Shared accumulator under ``stream_weighting="none"`` (the
+        pre-existing union-window behavior); otherwise one accumulator
+        per stream key, folded by :func:`merge_windows` with the serving
+        layer's weights at each refresh."""
+        if self.config.stream_weighting == "none":
+            return self.telemetry
+        sink = self._stream_telemetry.get(key)
+        if sink is None:
+            sink = self._stream_telemetry[key] = WorkloadTelemetry(
+                self.dataset.num_nodes, self.dataset.graph.num_edges
+            )
+        return sink
+
+    def set_weight_fn(self, fn) -> None:
+        """``fn(key) -> float`` supplies each stream's merge weight at
+        refresh time (the serving layer's queue-depth / SLO-pressure
+        view).  Ignored under ``stream_weighting="none"``."""
+        self._weight_fn = fn
+
+    def _window_batches(self) -> int:
+        return self.telemetry.batches + sum(
+            t.batches for t in self._stream_telemetry.values()
+        )
+
+    def _window_miss_rate(self) -> float:
+        lookups = self.telemetry.feat_lookups
+        misses = self.telemetry.feat_misses
+        for t in self._stream_telemetry.values():
+            lookups += t.feat_lookups
+            misses += t.feat_misses
+        return misses / max(lookups, 1)
 
     def note_retired(self) -> RefreshEvent | None:
         """Per-retired-batch triggers: SLO miss-rate threshold, then interval.
@@ -213,15 +274,15 @@ class CacheRefreshManager:
         cfg = self.config
         if (
             cfg.miss_threshold is not None
-            and self.telemetry.batches >= cfg.min_window_batches
-            and self.telemetry.miss_rate >= cfg.miss_threshold
+            and self._window_batches() >= cfg.min_window_batches
+            and self._window_miss_rate() >= cfg.miss_threshold
         ):
             return self.refresh("miss-threshold")
         if not cfg.on_interval:
             return None
         if self._retired_since_refresh < cfg.interval_batches:
             return None
-        if self.telemetry.batches < cfg.min_window_batches:
+        if self._window_batches() < cfg.min_window_batches:
             return None
         return self.refresh("interval")
 
@@ -255,7 +316,16 @@ class CacheRefreshManager:
         contribution (the stored profile is decayed in lockstep with the
         history, so shared hot nodes' counts from other streams are
         untouched) and refresh; departed live traffic also washes out of
-        the decayed history over subsequent windows."""
+        the decayed history over subsequent windows.
+
+        Every subtraction is clamped elementwise at zero.  The lockstep
+        decay makes history − remnant non-negative in exact arithmetic,
+        but the two sides round differently in floating point (the
+        history decays ``decay*(h+P)+w`` as a sum, the remnant decays
+        ``decay*P`` alone), so an unclamped subtraction can leave tiny
+        negative per-node counts — which the next Eq. 1 re-allocation and
+        hot-row selection would silently treat as anti-visits.  The clamp
+        is the invariant the join→serve→leave regression test pins."""
         remnant = self._stream_stats.pop(seed, None)
         if remnant is not None:
             self._node_counts = np.maximum(self._node_counts - remnant["node_counts"], 0.0)
@@ -292,7 +362,19 @@ class CacheRefreshManager:
         t0 = time.perf_counter()
         for clock in self._clocks:
             self.telemetry.pull_times(clock)
-        window = self.telemetry.snapshot()
+        if self._stream_telemetry:
+            # Weighted merge: counts from the per-stream accumulators,
+            # tilted by the serving layer's pressure weights; laps/batches
+            # pooled unweighted (see merge_windows).
+            parts = [self.telemetry.snapshot()]
+            weights = [1.0]
+            for key, sink in self._stream_telemetry.items():
+                parts.append(sink.snapshot())
+                weights.append(1.0 if self._weight_fn is None else self._weight_fn(key))
+                sink.reset()
+            window = merge_windows(parts, weights)
+        else:
+            window = self.telemetry.snapshot()
         self.telemetry.reset()
         self._retired_since_refresh = 0
         decay = self.config.history_decay
@@ -330,9 +412,15 @@ class CacheRefreshManager:
             # shifts the stage balance also resizes the overlap window.
             from repro.runtime.gnn_engine import auto_pipeline_depth
 
-            self.suggested_depth = auto_pipeline_depth(
+            derived = auto_pipeline_depth(
                 self._sample_s + self._feature_s, self._compute_s
             )
+            # A degenerate window (~zero measured prep → depth 1) is not a
+            # usable live resize: mid-run the clocks are already in overlap
+            # mode, so keep the previous suggestion and re-derive from the
+            # next window's laps instead.
+            if derived >= 2:
+                self.suggested_depth = derived
         event = RefreshEvent(
             epoch=delta.epoch,
             reason=reason,

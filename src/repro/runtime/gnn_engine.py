@@ -265,6 +265,10 @@ class StreamRuntime:
             jnp.asarray(ctx.payload),
             self.fanouts,
             dedup=self.dedup,
+            # Pad the unique bucket's tail with a known-cached id (traced
+            # operand — a refresh-epoch pad change recompiles nothing), so
+            # pad slots are feature-cache hits, never phantom miss rows.
+            dedup_pad_id=self.pipe.caches.store.pad_node_id() if self.dedup else None,
         )
         # Dispatch the hit-stat reductions here, in-pipeline: dispatched
         # at retire time they would queue behind the *next* batch's
@@ -463,6 +467,12 @@ def summarize_epoch_counters(counters: dict[int, list[int]]) -> dict[int, dict]:
     }
 
 
+# Below this, a measured stage lap is indistinguishable from clock noise —
+# a cache-hit-everything first batch can legitimately measure ~0 prep, and
+# a ratio against a ~0 denominator would pin the derived depth at the cap.
+DEGENERATE_LAP_SECONDS = 1e-6
+
+
 def auto_pipeline_depth(prep_seconds: float, compute_seconds: float, *, max_depth: int = 4) -> int:
     """Pick an executor window from the measured compute:prep ratio.
 
@@ -472,8 +482,16 @@ def auto_pipeline_depth(prep_seconds: float, compute_seconds: float, *, max_dept
     device fed across several short forwards — roughly one extra slot per
     compute-sized chunk of prep — saturating at ``max_depth`` (beyond
     that the run is prep-bound and more slots only hold memory).
+
+    Degenerate probes: a ~zero PREP lap means there is nothing to hide
+    behind compute — return 1 (serial; callers treat it as "re-derive on
+    the next window" rather than caching it).  A ~zero COMPUTE lap with
+    real prep used to divide by ~0 and pin the depth at the cap; it now
+    returns the 2 a compute-free measurement actually supports.
     """
-    if compute_seconds <= 0.0:
+    if prep_seconds <= DEGENERATE_LAP_SECONDS:
+        return 1
+    if compute_seconds <= DEGENERATE_LAP_SECONDS:
         return 2
     return max(2, min(max_depth, 1 + round(prep_seconds / compute_seconds)))
 
@@ -596,16 +614,25 @@ class GNNInferenceEngine:
         wblock = sample_blocks(
             jax.random.PRNGKey(self.seed + 1), dgraph, jnp.asarray(seeds), self.fanouts,
             dedup=dedup,
+            dedup_pad_id=store.pad_node_id() if dedup else None,
         )
         s = int(wblock.input_nodes.shape[0])
         if dedup:
-            bucket = pow2_bucket(int(wblock.dedup.num_unique), s)
+            nu = int(wblock.dedup.num_unique)
+            bucket = pow2_bucket(nu, s)
             gather_ids = wblock.dedup.unique_ids[:bucket]
             inverse = wblock.dedup.inverse
             row_block = ROW_BLOCK if use_kernel else None
         else:
+            nu = None
             gather_ids, inverse, row_block = wblock.input_nodes, None, None
-        prefetched = store.prefetch_misses(np.asarray(gather_ids)) if prefetch else None
+        # num_live mirrors the serve path's prefetch stage: only the live
+        # prefix can stage misses, so warmup packs the same bucket sizes
+        # the run will (and, with the cached pad id, the tail could not
+        # stage duplicate miss rows even without it).
+        prefetched = (
+            store.prefetch_misses(np.asarray(gather_ids), num_live=nu) if prefetch else None
+        )
         wfeats, _ = store.gather(
             gather_ids,
             use_kernel=use_kernel,
@@ -645,6 +672,67 @@ class GNNInferenceEngine:
             )
         )
 
+    def warmup_refresh_growth(
+        self,
+        seeds: np.ndarray,
+        *,
+        use_kernel: bool | None = None,
+        gather_buffers: int | None = None,
+        dedup: bool | None = None,
+    ) -> None:
+        """Pre-compile the gather at the hot table's NEXT growth bucket.
+
+        ``refresh_feature_cache`` grows the device hot table by doubling
+        (capped at the node count), and the gather program specializes on
+        the table's physical row count — so the first batch after a
+        growing refresh would otherwise pay that compile *inside* the
+        serve loop, exactly the pause a delta re-fill exists to avoid.
+        This warms the post-growth program off the serve path against a
+        zero-filled ghost table at the doubled size: same position map,
+        same index shapes, same route (kernel/prefetched knobs), so the
+        compiled program is the one the post-refresh store dispatches.
+        A no-op when the table cannot grow (already at the node count) or
+        the policy built no refreshable caches.
+        """
+        if self.pipeline is None:
+            raise RuntimeError("call prepare() first")
+        pipe = self.pipeline
+        if not pipe.caches.refreshable:
+            return
+        from repro.graph.features import FeatureStore
+
+        store = pipe.caches.store
+        use_kernel = pipe.use_kernel if use_kernel is None else use_kernel
+        gather_buffers = pipe.gather_buffers if gather_buffers is None else gather_buffers
+        dedup = (pipe.dedup if dedup is None else dedup) and not pipe.reuse_prev_batch
+        physical = int(store.hot_table.shape[0])
+        grow_to = min(2 * physical, store.num_nodes)
+        if grow_to <= physical:
+            return
+        ghost = FeatureStore(
+            host_table=store.host_table,
+            hot_table=jnp.zeros((grow_to, store.feat_dim), store.hot_table.dtype),
+            position_map=store.position_map,
+        )
+        object.__setattr__(ghost, "_host_np", store.host_np())
+        object.__setattr__(ghost, "_position_np", store.position_np())
+        wblock = sample_blocks(
+            jax.random.PRNGKey(self.seed + 1), pipe.caches.dgraph, jnp.asarray(seeds),
+            self.fanouts, dedup=dedup,
+            dedup_pad_id=store.pad_node_id() if dedup else None,
+        )
+        if dedup:
+            bucket = pow2_bucket(int(wblock.dedup.num_unique), int(wblock.input_nodes.shape[0]))
+            gather_ids = wblock.dedup.unique_ids[:bucket]
+            row_block = ROW_BLOCK if use_kernel else None
+        else:
+            gather_ids, row_block = wblock.input_nodes, None
+        feats, _ = ghost.gather(
+            gather_ids, use_kernel=use_kernel, gather_buffers=gather_buffers,
+            row_block=row_block,
+        )
+        jax.block_until_ready(feats)
+
     # ------------------------------------------------------ adaptive depth
     def resolve_pipeline_depth(self, depth=None, *, seeds=None) -> int:
         """Resolve the ``pipeline_depth`` knob, including ``"auto"``.
@@ -654,7 +742,11 @@ class GNNInferenceEngine:
         the window from the measured compute:prep ratio — the same
         decomposition bench_breakdown's serial rows report.  The probe
         uses its own RNG stream, so the run it sizes is unaffected; the
-        result is cached on the engine."""
+        result is cached on the engine — EXCEPT a degenerate probe (a
+        ~zero prep lap, e.g. a cache-hit-everything first batch), which
+        resolves to serial depth 1 for this run but is NOT cached, so the
+        next resolve (or a refresh window) re-derives from a real
+        measurement."""
         if depth is None:
             depth = self.pipeline_depth
         if depth != "auto":
@@ -665,7 +757,10 @@ class GNNInferenceEngine:
             if seeds is None:
                 seeds = self._batches(1)[0]
             sample_s, feature_s, compute_s = self._probe_stage_seconds(np.asarray(seeds))
-            self._auto_depth = auto_pipeline_depth(sample_s + feature_s, compute_s)
+            derived = auto_pipeline_depth(sample_s + feature_s, compute_s)
+            if derived < 2:
+                return 1  # degenerate probe: don't cache, re-derive next time
+            self._auto_depth = derived
         return self._auto_depth
 
     def _probe_stage_seconds(self, seeds: np.ndarray) -> tuple[float, float, float]:
@@ -772,8 +867,16 @@ class GNNInferenceEngine:
                 batch_size=self.batch_size,
                 config=refresh,
             )
-            manager.register_clock(clock)
-            rt.telemetry = manager.telemetry
+            manager.register_clock(clock, key=0)
+            rt.telemetry = manager.telemetry_for(0)
+            if warmup:
+                # Refresh-aware warmup: a growing delta re-fill would
+                # otherwise compile its first post-growth gather inside
+                # the serve loop.
+                self.warmup_refresh_growth(
+                    batches[0], use_kernel=use_kernel,
+                    gather_buffers=gather_buffers, dedup=dedup,
+                )
         auto_depth = requested_depth == "auto" and manager is not None
 
         def on_retire(ctx):

@@ -68,6 +68,20 @@ __all__ = [
 ]
 
 
+def _latency_stats(latencies) -> tuple[float, float, float, float, float]:
+    """(mean, max, p50, p95, p99) of a latency list — zeros when empty.
+
+    Percentiles use numpy's default linear interpolation; with the small
+    per-stream sample counts typical of a serve run the p99 of n < 100
+    latencies interpolates toward the max, which is the conservative
+    (tail-honest) direction for an SLO report."""
+    if not latencies:
+        return 0.0, 0.0, 0.0, 0.0, 0.0
+    arr = np.asarray(latencies, np.float64)
+    p50, p95, p99 = np.percentile(arr, [50, 95, 99])
+    return float(arr.mean()), float(arr.max()), float(p50), float(p95), float(p99)
+
+
 @dataclasses.dataclass
 class StreamState:
     """One request stream: queue + per-stream runtime/clock/accounting."""
@@ -106,6 +120,15 @@ class StreamReport:
     unique_rows: int = 0  # distinct input rows (dedup; 0 when off)
     gathered_rows: int = 0  # rows the feature stage actually gathered
     epoch_hits: dict | None = None  # per-cache-epoch rates (refresh on)
+    # Latency distribution (admit→retire for queue-less serves; the
+    # request front-end overwrites the samples with enqueue→retire):
+    p50_latency_s: float = 0.0
+    p95_latency_s: float = 0.0
+    p99_latency_s: float = 0.0
+    # Request-level accounting (request_queue front-end; zeros otherwise):
+    requests_shed: int = 0
+    deadline_hits: int = 0
+    deadline_total: int = 0
 
     @property
     def adj_hit_rate(self) -> float:
@@ -123,7 +146,14 @@ class StreamReport:
             "feat_hit_rate": round(self.feat_hit_rate, 4),
             "mean_latency_s": round(self.mean_latency_s, 4),
             "max_latency_s": round(self.max_latency_s, 4),
+            "p50_latency_s": round(self.p50_latency_s, 4),
+            "p99_latency_s": round(self.p99_latency_s, 4),
         }
+        if self.requests_shed:
+            out["requests_shed"] = self.requests_shed
+        if self.deadline_total:
+            out["deadline_hits"] = self.deadline_hits
+            out["deadline_total"] = self.deadline_total
         if self.epoch_hits is not None:
             out["per_epoch"] = self.epoch_hits
         return out
@@ -150,6 +180,15 @@ class ServeReport:
     # Online-refresh accounting (refresh off → empty/None, summary as before):
     refresh_events: list = dataclasses.field(default_factory=list)
     epochs: dict | None = None  # aggregate per-epoch hit rates across streams
+    # Global latency distribution over every stream's samples pooled:
+    p50_latency_s: float = 0.0
+    p95_latency_s: float = 0.0
+    p99_latency_s: float = 0.0
+    # Request-level accounting (request_queue front-end; None/zeros otherwise):
+    admission: str | None = None
+    requests_shed: int = 0
+    deadline_hits: int = 0
+    deadline_total: int = 0
 
     @property
     def total_batches(self) -> int:
@@ -202,6 +241,15 @@ class ServeReport:
     def throughput_seeds_per_s(self) -> float:
         return self.total_seeds / max(self.wall_seconds, 1e-12)
 
+    @property
+    def deadline_hit_rate(self) -> float:
+        """Fraction of deadline-carrying requests retired on time (shed
+        and late requests both count as misses); 1.0 when no request
+        carried a deadline."""
+        if not self.deadline_total:
+            return 1.0
+        return self.deadline_hits / self.deadline_total
+
     def modeled_transfer_seconds(self, slow_bw: float = PCIE4_BW, fast_bw: float = HBM_BW) -> float:
         """Project aggregate byte movement onto a slow-miss / fast-hit link
         pair (the model shared with
@@ -229,8 +277,15 @@ class ServeReport:
             "adj_hit_rate": round(self.adj_hit_rate, 4),
             "feat_hit_rate": round(self.feat_hit_rate, 4),
             "modeled_transfer_s": round(self.modeled_transfer_seconds(), 6),
+            "p50_latency_s": round(self.p50_latency_s, 4),
+            "p99_latency_s": round(self.p99_latency_s, 4),
             "per_stream": [s.summary() for s in self.streams],
         }
+        if self.admission is not None:
+            out["admission"] = self.admission
+            out["requests_shed"] = self.requests_shed
+            if self.deadline_total:
+                out["deadline_hit_rate"] = round(self.deadline_hit_rate, 4)
         if self.dedup:
             out["unique_rows"] = self.unique_rows
             out["gathered_rows"] = self.gathered_rows
@@ -301,8 +356,12 @@ class MultiStreamServer:
                 batch_size=engine.batch_size,
                 config=refresh,
             )
+            # Weighted telemetry merges (stream_weighting != "none") ask the
+            # server for each stream's live pressure at refresh time.
+            self.refresh_manager.set_weight_fn(self._stream_weight)
         self._started = False  # join/leave events fire only once serving began
         self._executor = None  # live executor during run() (auto-depth hook)
+        self._serve_t0 = None  # perf_counter at serve start (arrival clock origin)
         self.prefetch = pipe.prefetch if prefetch is None else prefetch
         self.use_kernel = pipe.use_kernel if use_kernel is None else use_kernel
         self.gather_buffers = pipe.gather_buffers if gather_buffers is None else gather_buffers
@@ -367,8 +426,11 @@ class MultiStreamServer:
         )
         self.streams.append(state)
         if self.refresh_manager is not None:
-            runtime.telemetry = self.refresh_manager.telemetry
-            self.refresh_manager.register_clock(state.clock)
+            # Under weighting="none" telemetry_for returns the shared sink
+            # (the pre-weighting path, byte-identical); otherwise each
+            # stream records into its own sink so refresh can weight them.
+            runtime.telemetry = self.refresh_manager.telemetry_for(sid)
+            self.refresh_manager.register_clock(state.clock, key=sid)
             if self._started:
                 self.refresh_manager.on_stream_join(seed)
         return state
@@ -385,26 +447,36 @@ class MultiStreamServer:
         return state
 
     # ---------------------------------------------------------- admission
-    def _next_stream(self) -> StreamState:
-        """Round-robin over streams with queued work, honoring the in-flight
-        cap; falls back to the least-loaded pending stream when everyone is
-        saturated (see class docstring)."""
+    def _next_stream(self, eligible: Sequence[StreamState]) -> StreamState:
+        """Round-robin over ``eligible`` streams, honoring the in-flight
+        cap; falls back to the least-loaded eligible stream when everyone
+        is saturated (see class docstring).
+
+        ``eligible`` is whichever subset has admissible work right now —
+        the queue-backed base server passes every stream with a non-empty
+        queue; the request front-end passes streams whose head request has
+        *arrived*.  Cursor mechanics are identical either way, so with all
+        streams always eligible this reproduces the pre-request-queue
+        admission log bit-for-bit."""
         n = len(self.streams)
-        pending = [s for s in self.streams if s.queue]
+        keys = {s.stream_id for s in eligible}
         for off in range(n):
             s = self.streams[(self._rr + off) % n]
-            if s.queue and s.inflight < self.max_inflight:
+            if s.stream_id in keys and s.inflight < self.max_inflight:
                 self._rr = (s.stream_id + 1) % n
                 return s
-        s = min(pending, key=lambda s: (s.inflight, (s.stream_id - self._rr) % n))
+        s = min(eligible, key=lambda s: (s.inflight, (s.stream_id - self._rr) % n))
         self._rr = (s.stream_id + 1) % n
         return s
 
     def _admission(self):
         """Lazy (stream, payload) generator for the executor: pulled exactly
         when a window slot opens, so the in-flight counts it reads are live."""
-        while any(s.queue for s in self.streams):
-            s = self._next_stream()
+        while True:
+            pending = [s for s in self.streams if s.queue]
+            if not pending:
+                return
+            s = self._next_stream(pending)
             payload = s.queue.popleft()
             self.admission_log.append((s.stream_id, s.submitted))
             s._admit_times[s.submitted] = time.perf_counter()
@@ -438,19 +510,46 @@ class MultiStreamServer:
                     self.max_inflight = self.depth
 
     # ----------------------------------------------------------------- run
+    def _warmup_seeds(self) -> np.ndarray | None:
+        """Seed batch to compile against before the timed loop — the first
+        queued batch (the request front-end overrides this to peek at its
+        arrival-sorted request queues).  None → nothing queued, skip."""
+        for s in self.streams:
+            if s.queue:
+                return s.queue[0]
+        return None
+
+    def _stream_weight(self, key) -> float:
+        """Live pressure of stream ``key`` for weighted telemetry merges:
+        1 (base) + queued batches + in-flight batches.  The request
+        front-end extends this with SLO pressure."""
+        s = self.streams[key]
+        return 1.0 + len(s.queue) + s.inflight
+
     def run(self, *, warmup: bool = True) -> ServeReport:
         if not self.streams:
             raise RuntimeError("add_stream() at least one stream before run()")
         self._started = True
         if warmup:
-            first = next(s for s in self.streams if s.queue)
-            self.engine.warmup(
-                first.queue[0],
-                prefetch=self.prefetch,
-                use_kernel=self.use_kernel,
-                gather_buffers=self.gather_buffers,
-                dedup=self.dedup,
-            )
+            seeds = self._warmup_seeds()
+            if seeds is not None:
+                self.engine.warmup(
+                    seeds,
+                    prefetch=self.prefetch,
+                    use_kernel=self.use_kernel,
+                    gather_buffers=self.gather_buffers,
+                    dedup=self.dedup,
+                )
+                if self.refresh_manager is not None:
+                    # Pre-compile the post-growth gather program too, so a
+                    # mid-serve refresh that doubles the hot table doesn't
+                    # pay XLA compile time on the serve path.
+                    self.engine.warmup_refresh_growth(
+                        seeds,
+                        use_kernel=self.use_kernel,
+                        gather_buffers=self.gather_buffers,
+                        dedup=self.dedup,
+                    )
         executor = PipelinedExecutor(
             stream_stages(lambda c: c.stream.runtime, prefetch=self.prefetch),
             depth=self.depth,
@@ -458,10 +557,17 @@ class MultiStreamServer:
             on_retire=self._on_retire,
         )
         self._executor = executor
-        t0 = time.perf_counter()
+        self._serve_t0 = t0 = time.perf_counter()
         executor.run_tagged(self._admission())
         wall = time.perf_counter() - t0
         self._executor = None
+        return self._serve_report(wall)
+
+    def _serve_report(self, wall: float) -> ServeReport:
+        pooled: list[float] = []
+        for s in self.streams:
+            pooled.extend(s.latencies)
+        _, _, p50, p95, p99 = _latency_stats(pooled)
         return ServeReport(
             policy=self.engine.pipeline.name,
             num_streams=len(self.streams),
@@ -476,6 +582,9 @@ class MultiStreamServer:
                 list(self.refresh_manager.events) if self.refresh_manager is not None else []
             ),
             epochs=self._aggregate_epochs() if self.refresh_manager is not None else None,
+            p50_latency_s=p50,
+            p95_latency_s=p95,
+            p99_latency_s=p99,
         )
 
     def _aggregate_epochs(self) -> dict[int, dict]:
@@ -490,6 +599,7 @@ class MultiStreamServer:
 
     def _stream_report(self, s: StreamState) -> StreamReport:
         rt = s.runtime
+        mean, mx, p50, p95, p99 = _latency_stats(s.latencies)
         return StreamReport(
             stream_id=s.stream_id,
             seed=s.seed,
@@ -502,8 +612,11 @@ class MultiStreamServer:
             adj_lookups=rt.adj_lookups,
             feat_hits=rt.feat_hits,
             feat_lookups=rt.feat_lookups,
-            mean_latency_s=float(np.mean(s.latencies)) if s.latencies else 0.0,
-            max_latency_s=float(np.max(s.latencies)) if s.latencies else 0.0,
+            mean_latency_s=mean,
+            max_latency_s=mx,
+            p50_latency_s=p50,
+            p95_latency_s=p95,
+            p99_latency_s=p99,
             prefetch_seconds=s.clock.total("prefetch"),
             prefetched_rows=rt.prefetched_rows,
             unique_rows=rt.unique_rows,

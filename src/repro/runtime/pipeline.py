@@ -61,7 +61,24 @@ from typing import Any, Callable, Iterable, Sequence
 
 from repro.utils.timing import StageClock
 
-__all__ = ["BatchContext", "PipelinedExecutor", "Stage"]
+__all__ = ["BatchContext", "DRAIN", "PipelinedExecutor", "Stage"]
+
+
+class _Drain:
+    """Sentinel a :meth:`PipelinedExecutor.run_tagged` item stream may
+    yield to flush the window: every in-flight batch retires, no new batch
+    is admitted, and the item index does not advance.  The request-queue
+    serving layer uses it while waiting for future arrivals — retiring
+    work it has already admitted instead of idling with a full window —
+    which keeps enqueue→retire latency accounting honest."""
+
+    __slots__ = ()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return "DRAIN"
+
+
+DRAIN = _Drain()
 
 
 class BatchContext:
@@ -162,11 +179,21 @@ class PipelinedExecutor:
         its stages run; the pairs may come from a *lazy* admission
         generator — it is pulled exactly when a window slot is about to be
         filled, so it can consult live in-flight occupancy (the serving
-        layer's backpressure hook)."""
+        layer's backpressure hook).  An item that is the module-level
+        :data:`DRAIN` sentinel retires everything in flight without
+        admitting a batch — the generator's way to flush the window while
+        it waits on an external clock (request arrivals)."""
         window: collections.deque[BatchContext] = collections.deque()
         retired: list[BatchContext] = []
-        for i, (stream, payload) in enumerate(items):
-            ctx = BatchContext(i, payload, stream)
+        index = 0
+        for item in items:
+            if item is DRAIN:
+                while window:
+                    retired.append(self._retire(window.popleft()))
+                continue
+            stream, payload = item
+            ctx = BatchContext(index, payload, stream)
+            index += 1
             clock = self._clock(ctx)
             for st in self.stages:
                 sync = None

@@ -22,7 +22,7 @@ import pytest
 
 from repro.core.cache import DualCache
 from repro.core.allocation import CacheAllocation
-from repro.core.telemetry import WorkloadTelemetry
+from repro.core.telemetry import WorkloadTelemetry, merge_windows
 from repro.graph.csc import build_adj_cache, refresh_adj_cache, two_level_sort
 from repro.graph.features import build_feature_cache, refresh_feature_cache, select_hot_rows
 from repro.runtime.cache_refresh import CacheRefreshManager, RefreshConfig
@@ -385,12 +385,33 @@ def test_serve_refresh_off_report_unchanged(small_dataset):
 
 
 def test_auto_pipeline_depth_heuristic():
-    assert auto_pipeline_depth(0.0, 1.0) == 2  # compute-bound: double buffer
+    # A ~zero prep lap means the probe measured nothing overlappable —
+    # depth 1 (serial), NOT prep/compute → 0 → "pin at 2" from noise.
+    assert auto_pipeline_depth(0.0, 1.0) == 1
+    assert auto_pipeline_depth(5e-7, 1.0) == 1  # below the degenerate-lap floor
     assert auto_pipeline_depth(1.0, 1.0) == 2
     assert auto_pipeline_depth(3.0, 1.0) == 4
     assert auto_pipeline_depth(100.0, 1.0) == 4  # saturates at max_depth
     assert auto_pipeline_depth(100.0, 1.0, max_depth=6) == 6
-    assert auto_pipeline_depth(1.0, 0.0) == 2  # degenerate compute probe
+    # Degenerate COMPUTE probe with real prep: double-buffer, never a
+    # divide-by-~0 ratio pinning the window at the cap.
+    assert auto_pipeline_depth(1.0, 0.0) == 2
+    assert auto_pipeline_depth(1.0, 1e-9) == 2
+
+
+def test_engine_does_not_cache_degenerate_auto_probe(small_dataset, monkeypatch):
+    """A zero-measured prep lap resolves to depth 1 for THIS run but is
+    not cached — the next resolve re-probes and can recover a real
+    window."""
+    eng = _engine(small_dataset)
+    monkeypatch.setattr(
+        eng, "_probe_stage_seconds", lambda seeds: (0.0, 0.0, 1.0)
+    )
+    assert eng.resolve_pipeline_depth("auto") == 1
+    monkeypatch.undo()
+    depth = eng.resolve_pipeline_depth("auto")  # re-probed, now cached
+    assert 2 <= depth <= 4
+    assert eng.resolve_pipeline_depth("auto") == depth
 
 
 def test_engine_resolves_auto_depth(small_dataset):
@@ -542,3 +563,129 @@ def test_serve_refresh_rederives_auto_depth(small_dataset):
         # the defaulted backpressure cap follows the window — a deeper
         # window admission can actually fill (an explicit cap would stay)
         assert server.max_inflight == derived[-1]
+
+
+# -------------------------------------------- weighted per-stream telemetry
+
+
+def test_merge_windows_weights_counts_not_laps():
+    a = WorkloadTelemetry(num_nodes=6, num_edges=4)
+    b = WorkloadTelemetry(num_nodes=6, num_edges=4)
+    a.observe_batch(np.array([0, 1]), np.array([True, False]), [np.array([[0]])])
+    b.observe_batch(np.array([1, 2]), np.array([False, True]), [np.array([[1]])])
+    a.sample_times.append(0.5)
+    b.sample_times.append(0.25)
+    merged = merge_windows([a.snapshot(), b.snapshot()], [1.0, 3.0])
+    # counts weighted: node 1 visited once in each window -> 1*1 + 3*1
+    assert merged.node_counts[1] == 4.0 and merged.node_counts[0] == 1.0
+    assert merged.node_miss_counts[1] == 4.0
+    assert merged.edge_counts[1] == 3.0
+    # laps concatenated UNweighted, batches summed
+    assert merged.sample_times == [0.5, 0.25] and merged.batches == 2
+    # weights=None == all-ones == plain sum
+    plain = merge_windows([a.snapshot(), b.snapshot()])
+    np.testing.assert_array_equal(
+        plain.node_counts, a.snapshot().node_counts + b.snapshot().node_counts
+    )
+    # negative weights clamp to zero (a merge can't subtract a stream)
+    clamped = merge_windows([a.snapshot(), b.snapshot()], [1.0, -5.0])
+    np.testing.assert_array_equal(clamped.node_counts, a.snapshot().node_counts)
+    with pytest.raises(ValueError):
+        merge_windows([])
+    with pytest.raises(ValueError):
+        merge_windows([a.snapshot()], [1.0, 2.0])
+
+
+def test_refresh_config_validates_stream_weighting():
+    with pytest.raises(ValueError):
+        RefreshConfig(mode="interval", interval_batches=2, stream_weighting="bogus")
+    cfg = RefreshConfig(mode="interval", interval_batches=2, stream_weighting="queue-depth")
+    assert cfg.enabled
+
+
+def test_manager_telemetry_for_routes_by_weighting(small_dataset):
+    eng = _engine(small_dataset)
+    shared = CacheRefreshManager(
+        eng.pipeline, small_dataset, fanouts=FANOUTS, batch_size=BATCH,
+        config=RefreshConfig(mode="interval", interval_batches=2),
+    )
+    assert shared.telemetry_for(0) is shared.telemetry  # "none": shared sink
+    weighted = CacheRefreshManager(
+        eng.pipeline, small_dataset, fanouts=FANOUTS, batch_size=BATCH,
+        config=RefreshConfig(
+            mode="interval", interval_batches=2, stream_weighting="queue-depth"
+        ),
+    )
+    s0, s1 = weighted.telemetry_for(0), weighted.telemetry_for(1)
+    assert s0 is not weighted.telemetry and s0 is not s1
+    assert weighted.telemetry_for(0) is s0  # stable per key
+
+
+def test_serve_weighted_telemetry_refreshes_and_stays_equivalent(small_dataset):
+    """stream_weighting='queue-depth': per-stream sinks feed a weighted
+    merge at each refresh; refreshes still fire, their windows still
+    count every stream's batches, and outputs stay serial-equivalent
+    (weights change the ranking, never values)."""
+    eng = _engine(small_dataset, stream_seeds=[100, 101])
+    queues = make_stream_batches(
+        small_dataset, num_streams=2, batches_per_stream=4, batch_size=BATCH, seed=3
+    )
+    server = MultiStreamServer(
+        eng,
+        depth=2,
+        refresh=RefreshConfig(
+            mode="interval", interval_batches=3, stream_weighting="queue-depth"
+        ),
+    )
+    states = [
+        server.add_stream(q, seed=100 + i, collect_outputs=True)
+        for i, q in enumerate(queues)
+    ]
+    rep = server.run()
+    mgr = server.refresh_manager
+    assert rep.refresh_events, "interval refresh never fired"
+    assert set(mgr._stream_telemetry) == {0, 1}  # one sink per stream
+    assert rep.refresh_events[0].window_batches >= 3  # both streams counted
+    for i, q in enumerate(queues):
+        ref = GNNInferenceEngine(
+            small_dataset, fanouts=FANOUTS, batch_size=BATCH, seed=100 + i,
+            params=eng.params,
+        )
+        ref.pipeline = eng.pipeline
+        ref.run(batches=list(q), pipeline_depth=1, collect_outputs=True)
+        for a, b in zip(ref.last_outputs, states[i].runtime.outputs):
+            np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------- leave-path history invariants
+
+
+def test_join_serve_leave_history_never_negative(small_dataset):
+    """join → serve (decays the remnant in lockstep) → leave: the decayed
+    subtraction must leave every history count >= 0 — float-rounding
+    asymmetry between the summed history decay and the remnant's solo
+    decay must be absorbed by the clamp, not leak anti-visits into the
+    next Eq. 1 re-allocation."""
+    eng = _engine(small_dataset, n_presample=4, stream_seeds=[100, 101])
+    queues = make_stream_batches(
+        small_dataset, num_streams=3, batches_per_stream=3, batch_size=BATCH, seed=7
+    )
+    server = MultiStreamServer(
+        eng, depth=2, refresh=RefreshConfig(mode="all", interval_batches=2)
+    )
+    server.add_stream(queues[0], seed=100)
+    server.add_stream(queues[1], seed=101)
+    server.run()
+    s2 = server.add_stream(queues[2], seed=102)  # join: refresh + remnant stored
+    mgr = server.refresh_manager
+    assert 102 in mgr._stream_stats
+    server.run()  # interval refreshes decay history AND remnant in lockstep
+    assert any(e.reason == "interval" for e in mgr.events)
+    server.remove_stream(s2.stream_id)  # leave: subtract the decayed remnant
+    assert 102 not in mgr._stream_stats
+    assert (mgr._node_counts >= 0.0).all()
+    assert (mgr._edge_counts >= 0.0).all()
+    assert mgr._sample_s >= 0.0 and mgr._feature_s >= 0.0
+    # and the post-leave history still supports a refresh
+    event = mgr.refresh("manual")
+    assert event.delta.epoch == eng.pipeline.caches.epoch

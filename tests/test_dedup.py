@@ -36,12 +36,77 @@ def test_dedup_frontier_reconstructs_exactly(ids):
     nu = int(dd.num_unique)
     unique = np.asarray(dd.unique_ids)
     inverse = np.asarray(dd.inverse)
-    # live prefix is the sorted distinct ids; the tail pads with the max id
+    # live prefix is the sorted distinct ids; without an explicit pad id
+    # the tail repeats the max id
     np.testing.assert_array_equal(unique[:nu], np.unique(ids))
     assert (unique[nu:] == unique[nu - 1]).all()
     # inverse points into the live prefix and reconstructs every position
     assert inverse.min() >= 0 and inverse.max() < nu
     np.testing.assert_array_equal(unique[inverse], np.asarray(ids))
+
+
+@settings(max_examples=25, deadline=None)
+@given(ids=st.lists(st.integers(0, 40), min_size=1, max_size=120))
+def test_dedup_frontier_pad_id_fills_tail_only(ids):
+    """An explicit pad id replaces ONLY the tail — live prefix and inverse
+    are bit-identical to the unpadded call; pad_id=-1 falls back to the
+    max-id fill (the cacheless-policy path)."""
+    frontier = jnp.asarray(np.asarray(ids, np.int32))
+    plain = dedup_frontier(frontier)
+    padded = dedup_frontier(frontier, 40)
+    nu = int(plain.num_unique)
+    assert nu == int(padded.num_unique)
+    np.testing.assert_array_equal(
+        np.asarray(padded.unique_ids)[:nu], np.asarray(plain.unique_ids)[:nu]
+    )
+    np.testing.assert_array_equal(np.asarray(padded.inverse), np.asarray(plain.inverse))
+    assert (np.asarray(padded.unique_ids)[nu:] == 40).all()
+    fallback = dedup_frontier(frontier, -1)
+    np.testing.assert_array_equal(
+        np.asarray(fallback.unique_ids), np.asarray(plain.unique_ids)
+    )
+
+
+def test_warmup_pad_id_never_stages_duplicate_miss(small_dataset):
+    """The dedup-pad bugfix: padding the unique-id tail with the repeated
+    MAX id let warmup stage that id's host row once per pad slot when the
+    max id was a cache miss.  With ``pad_id=store.pad_node_id()`` the tail
+    holds a known-CACHED id, so no padded slot can ever enter the staged
+    miss set — with or without the live-prefix hint."""
+    eng = GNNInferenceEngine(small_dataset, fanouts=FANOUTS, batch_size=BATCH)
+    eng.prepare("dci", **KW)
+    store = eng.pipeline.caches.store
+    pos = store.position_np()
+    pad = store.pad_node_id()
+    assert pad >= 0 and pos[pad] >= 0  # the pad id is a cached row
+    cached = np.nonzero(pos >= 0)[0]
+    uncached = np.nonzero(pos < 0)[0]
+    assert uncached.size, "config must leave some rows uncached"
+    big_miss = int(uncached[-1])
+    base = np.concatenate([cached[:4], [big_miss]]).astype(np.int32)
+    assert big_miss > base[:4].max()  # the duplicated miss IS the max id
+    ids = np.tile(base, 4)[:16]  # 5 distinct ids -> pow2 bucket 8, tail 3
+    dd = dedup_frontier(jnp.asarray(ids), store.pad_node_id())
+    nu = int(dd.num_unique)
+    assert nu == 5
+    bucket = pow2_bucket(nu, ids.size)
+    gather_ids = np.asarray(dd.unique_ids)[:bucket]
+    # every padded tail slot holds the cached pad id — a guaranteed hit
+    np.testing.assert_array_equal(gather_ids[nu:], pad)
+    assert (pos[gather_ids[nu:]] >= 0).all()
+    pf = store.prefetch_misses(gather_ids, num_live=nu)
+    assert pf.idx is not None  # the pack path, not the all-miss fast path
+    staged_pos = np.asarray(pf.idx)[: pf.num_miss]
+    staged_ids = gather_ids[staged_pos]
+    # staged set == the DISTINCT live misses: no pad slot, no duplicates
+    assert (staged_pos < nu).all()
+    assert pf.num_miss == int((pos[gather_ids[:nu]] < 0).sum())
+    assert len(set(staged_ids.tolist())) == pf.num_miss
+    assert big_miss in staged_ids.tolist() and pad not in staged_ids.tolist()
+    # belt and suspenders: even WITHOUT the live-prefix hint the cached
+    # pad tail stages nothing extra (the old max-id padding did)
+    pf2 = store.prefetch_misses(gather_ids)
+    assert pf2.num_miss == pf.num_miss
 
 
 def test_pow2_bucket_covers_and_caps():

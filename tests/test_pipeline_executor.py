@@ -213,6 +213,30 @@ def test_run_tagged_stamps_stream_and_routes_clocks():
     assert b.clock.totals["s"] >= sum(b.clock.laps["s"])
 
 
+def test_drain_sentinel_flushes_window_without_admitting():
+    """DRAIN retires everything in flight, admits nothing, and does not
+    advance the batch index — the request-queue front-end's way to flush
+    while waiting for arrivals."""
+    from repro.runtime.pipeline import DRAIN
+
+    events = []
+    ex = PipelinedExecutor(
+        _recording_stages(events), depth=3, on_retire=lambda c: events.append(("r", c.index))
+    )
+    out = ex.run_tagged([(None, 0), (None, 1), DRAIN, (None, 2)])
+    # both in-flight batches retire at the sentinel; batch 2 keeps index 2
+    assert events == [
+        ("a", 0), ("b", 0),
+        ("a", 1), ("b", 1),
+        ("r", 0), ("r", 1),
+        ("a", 2), ("b", 2),
+        ("r", 2),
+    ]
+    assert [c.index for c in out] == [0, 1, 2]
+    # DRAIN with an empty window is a no-op
+    assert ex.run_tagged([DRAIN]) == []
+
+
 def test_run_is_run_tagged_with_no_stream():
     done = []
     ex = PipelinedExecutor(
