@@ -243,6 +243,129 @@ def run(
     return rows, checks
 
 
+def run_sharded(
+    dataset_name="ogbn-products",
+    *,
+    num_shards=4,
+    num_streams=4,
+    batches_per_stream=8,
+    batch_size=512,
+    cache_bytes=CACHE_BYTES,
+    depth=2,
+    fanouts=(8, 4, 2),
+    model="graphsage",
+):
+    """Sharded-scaling section: one ShardedServer vs the single-device server.
+
+    ONE prepared engine serves both runs (refresh off keeps the caches
+    frozen), so the comparison is exact: sharded serving is bit-for-bit
+    the single-device run — same logits, same hit accounting — and the
+    per-shard counters tile the global ones.  The scaling metric is
+    MODELED: each shard drives its own HBM/PCIe link pair, so the mesh's
+    projected transfer time is the max over shards, and
+
+        modeled_scaling = global modeled transfer / max-over-shards modeled
+
+    — machine-independent (a 1-core CI box cannot show wall-clock
+    parallelism, and on it the wall ratio below is informational only).
+    The dedup path feeds the exchange its sorted unique ids, giving the
+    cached-working-set workload the acceptance gate specifies: >= 1.5x
+    aggregate modeled throughput at 4 shards (run.py --check-against
+    regression-gates the ratio and the equivalence booleans)."""
+    from repro.runtime.sharded_serve import ShardedServer
+
+    eng = make_engine(dataset_name, model=model, fanouts=fanouts, batch_size=batch_size)
+    dataset = eng.dataset
+    stream_seeds = list(range(1, num_streams + 1))
+    queues = make_stream_batches(
+        dataset,
+        num_streams=num_streams,
+        batches_per_stream=batches_per_stream,
+        batch_size=batch_size,
+        seed=0,
+    )
+    eng.prepare(
+        "dci",
+        total_cache_bytes=cache_bytes,
+        n_presample=N_PRESAMPLE,
+        stream_seeds=stream_seeds,
+        dedup=True,
+    )
+
+    def serve(server_cls, **kw):
+        t0 = time.perf_counter()
+        server = server_cls(eng, depth=depth, dedup=True, **kw)
+        for sid, queue in enumerate(queues):
+            server.add_stream(queue, seed=stream_seeds[sid])
+        rep = server.run()
+        return rep, time.perf_counter() - t0
+
+    base_rep, base_wall = serve(MultiStreamServer)
+    shard_rep, shard_wall = serve(ShardedServer, num_shards=num_shards)
+
+    global_modeled = base_rep.modeled_transfer_seconds()
+    per_shard = shard_rep.shards
+    max_shard_modeled = max(p["modeled_transfer_s"] for p in per_shard)
+    modeled_scaling = global_modeled / max(max_shard_modeled, 1e-12)
+    hits_identical = bool(
+        base_rep.feat_hits == shard_rep.feat_hits
+        and base_rep.feat_lookups == shard_rep.feat_lookups
+        and base_rep.adj_hits == shard_rep.adj_hits
+        and base_rep.adj_lookups == shard_rep.adj_lookups
+    )
+    shard_sums_tile = bool(
+        sum(p["feat_hits"] for p in per_shard) == base_rep.feat_hits
+        and sum(p["feat_lookups"] for p in per_shard) == base_rep.feat_lookups
+    )
+    rows = []
+    for mode, rep, wall in (
+        ("single-device", base_rep, base_wall),
+        (f"sharded-{num_shards}", shard_rep, shard_wall),
+    ):
+        row = {
+            "mode": mode,
+            "dataset": dataset_name,
+            "streams": num_streams,
+            "num_shards": rep.num_shards,
+            "batches_per_stream": batches_per_stream,
+            "batch_size": batch_size,
+            "cache_bytes": cache_bytes,
+            "serve_s": round(rep.wall_seconds, 5),
+            "wall_s": round(wall, 5),
+            "feat_hit": round(rep.feat_hit_rate, 5),
+            "adj_hit": round(rep.adj_hit_rate, 5),
+            "modeled_transfer_s": round(rep.modeled_transfer_seconds(), 7),
+        }
+        if rep.shards is not None:
+            row["per_shard"] = [
+                {
+                    "shard": p["shard"],
+                    "rows_cached": p["rows_cached"],
+                    "feat_hits": p["feat_hits"],
+                    "feat_lookups": p["feat_lookups"],
+                    "modeled_transfer_s": round(p["modeled_transfer_s"], 7),
+                }
+                for p in rep.shards
+            ]
+            row["max_shard_modeled_s"] = round(max_shard_modeled, 7)
+            row["modeled_scaling_vs_single"] = round(modeled_scaling, 3)
+        rows.append(row)
+        emit(
+            f"multistream_sharded/{dataset_name}/{num_shards}shards/{mode}",
+            rep.wall_seconds / max(num_streams * batches_per_stream, 1) * 1e6,
+            f"feat_hit={row['feat_hit']:.3f};modeled_s={row['modeled_transfer_s']:.2e}",
+        )
+    checks = {
+        "sharded_modeled_scaling": round(modeled_scaling, 3),
+        "sharded_scaling_ge_1.5": bool(modeled_scaling >= 1.5),
+        "sharded_hits_identical": hits_identical,
+        "shard_sums_tile_global": shard_sums_tile,
+        # informational on 1-core CI; real on a multi-device host
+        "sharded_wall_ratio": round(base_rep.wall_seconds / max(shard_rep.wall_seconds, 1e-9), 3),
+    }
+    return rows, checks
+
+
 def run_request_latency(
     dataset_name="ogbn-products",
     *,
@@ -397,6 +520,16 @@ def main() -> None:
         action="store_true",
         help="tiny config for CI: 2 streams x 2 batches, no acceptance thresholds",
     )
+    ap.add_argument(
+        "--sharded",
+        type=int,
+        default=0,
+        metavar="K",
+        help="also run the sharded-scaling section: a K-shard ShardedServer "
+        "vs the single-device server over one prepared engine — bit-for-bit "
+        "hit accounting plus the modeled (max-over-shards) transfer-time "
+        "scaling ratio the >=1.5x acceptance gate checks",
+    )
     args = ap.parse_args()
     if args.smoke:
         rows, checks = run(
@@ -416,6 +549,22 @@ def main() -> None:
     status = "PASS" if (checks["uplift_ge_1.2"] and checks["shared_hit_ge_private"]) else "FAIL"
     print(f"checks ({'smoke: informational' if args.smoke else status}): {checks}")
     payload = {"rows": rows, "checks": checks}
+    if args.sharded:
+        sh_rows, sh_checks = run_sharded(
+            num_shards=args.sharded,
+            num_streams=2 if args.smoke else args.streams,
+            batches_per_stream=2 if args.smoke else args.batches_per_stream,
+            batch_size=128 if args.smoke else args.batch_size,
+            cache_bytes=int(args.cache_mb * 1e6),
+            depth=args.depth,
+        )
+        for r in sh_rows:
+            print(r)
+        sh_status = "PASS" if (
+            sh_checks["sharded_scaling_ge_1.5"] and sh_checks["sharded_hits_identical"]
+        ) else "FAIL"
+        print(f"sharded checks ({sh_status}): {sh_checks}")
+        payload["sharded"] = {"rows": sh_rows, "checks": sh_checks}
     if args.request_latency:
         rl_rows, rl_checks = run_request_latency(
             batch_size=min(args.batch_size, 128), cache_bytes=int(args.cache_mb * 1e6)

@@ -10,7 +10,11 @@ Checks, over README.md and docs/*.md:
      resolves to a file or package in the tree;
   3. every intra-repo path the prose references — tokens starting with
      src/, docs/, examples/, benchmarks/, scripts/, tests/ or .github/ —
-     exists (globs must match at least one file).
+     exists (globs must match at least one file);
+  4. every backticked module reference resolves in the tree: dotted
+     `repro.*` / `benchmarks.*` modules through the same resolver as
+     `python -m`, and `src/repro`-relative prose refs like
+     `runtime/sharded_serve.py` or `graph/shard.py` against src/repro/.
 
 Exit nonzero listing every failure:  python scripts/check_docs.py
 """
@@ -30,6 +34,10 @@ DOC_FILES = ["README.md"] + sorted(
 PATH_RE = re.compile(r"(?:src|docs|examples|benchmarks|scripts|tests|\.github)/[\w./*-]+")
 FENCE_RE = re.compile(r"^```(\w*)\s*$")
 MODULE_RE = re.compile(r"python\s+(?:-\S+\s+)*-m\s+([A-Za-z_][\w.]*)")
+# Backticked prose references: `repro.runtime.sharded_serve` (dotted) and
+# `runtime/sharded_serve.py` (src/repro-relative, top-level package dirs).
+DOTTED_REF_RE = re.compile(r"`((?:repro|benchmarks)(?:\.\w+)+)`")
+SRC_REL_RE = re.compile(r"`((?:core|graph|runtime|launch|models|utils)/[\w/]+\.py)`")
 
 
 def code_blocks(text: str):
@@ -83,6 +91,15 @@ def check_file(relpath: str) -> list[str]:
             for mod in MODULE_RE.findall(joined):
                 if not module_exists(mod):
                     errors.append(f"{where}: `python -m {mod}` does not resolve in the tree")
+
+    for mod in sorted(set(DOTTED_REF_RE.findall(text))):
+        # a ref may name an attribute (`benchmarks.common.emit`): the
+        # module prefix resolving is what we can check statically
+        if not (module_exists(mod) or module_exists(mod.rsplit(".", 1)[0])):
+            errors.append(f"{relpath}: backticked module `{mod}` does not resolve")
+    for ref in sorted(set(SRC_REL_RE.findall(text))):
+        if not os.path.isfile(os.path.join(REPO, "src", "repro", ref)):
+            errors.append(f"{relpath}: backticked ref `{ref}` not under src/repro/")
 
     for ref in sorted(set(PATH_RE.findall(text))):
         ref = ref.rstrip(".,;:")

@@ -22,6 +22,7 @@ __all__ = [
     "allocate_capacity",
     "available_budget",
     "reallocate_capacity",
+    "shard_allocations",
     "DEFAULT_RESERVE_BYTES",
 ]
 
@@ -112,3 +113,51 @@ def reallocate_capacity(
         adj_need_bytes=adj_need_bytes,
         feat_need_bytes=feat_need_bytes,
     )
+
+
+def shard_allocations(
+    base: CacheAllocation,
+    shard_weights,
+    *,
+    sample_times: list[float],
+    feature_times: list[float],
+    adj_need_bytes: int | None = None,
+    feat_need_bytes: int | None = None,
+) -> list[CacheAllocation]:
+    """Eq. 1 run per shard on per-shard telemetry (sharded serving).
+
+    Each shard re-runs :func:`allocate_capacity` on its own slice of the
+    workload: ``shard_weights`` carries the shard's share of the
+    telemetry window (its range's visit counts — see
+    ``TelemetryWindow.shard_slice``), which scales both its budget share
+    of ``base.total_bytes`` and its stage times.  Because Eq. 1's split
+    fraction is invariant under uniform time scaling, every shard lands
+    on the *same* ``sample_fraction`` as the global allocation — the
+    coordination property that lets the globally-ranked fill be
+    partitioned by id range without changing a single cached row
+    (tested in tests/test_allocation.py / tests/test_sharded_serve.py).
+    The per-shard ``total_bytes`` sum to the global budget (remainder
+    bytes go to the last shard).
+    """
+    weights = [max(float(w), 0.0) for w in shard_weights]
+    if not weights:
+        raise ValueError("shard_allocations needs at least one shard weight")
+    denom = sum(weights)
+    fracs = [w / denom if denom > 0 else 1.0 / len(weights) for w in weights]
+    t_s = float(sum(sample_times))
+    t_f = float(sum(feature_times))
+    allocs: list[CacheAllocation] = []
+    spent = 0
+    for i, f in enumerate(fracs):
+        budget = base.total_bytes - spent if i == len(fracs) - 1 else int(base.total_bytes * f)
+        spent += budget
+        allocs.append(
+            allocate_capacity(
+                [t_s * f] if t_s or t_f else [0.0],
+                [t_f * f] if t_s or t_f else [0.0],
+                budget,
+                adj_need_bytes=None if adj_need_bytes is None else int(adj_need_bytes * f),
+                feat_need_bytes=None if feat_need_bytes is None else int(feat_need_bytes * f),
+            )
+        )
+    return allocs

@@ -67,6 +67,27 @@ class TelemetryWindow:
     def miss_rate(self) -> float:
         return self.feat_misses / max(self.feat_lookups, 1)
 
+    def shard_slice(self, lo: int, hi: int) -> "TelemetryWindow":
+        """The window as shard ``[lo, hi)`` of a node-id-range partition
+        sees it (sharded serving, runtime/sharded_serve.py).
+
+        Node-indexed arrays are sliced to the range — the shard's own
+        feature traffic.  The adjacency cache is *replicated* per shard,
+        so ``edge_counts`` passes through whole (every replica serves the
+        full edge workload).  Stage laps are wall-clock facts of the whole
+        pipeline, not per-shard observables, so they pass through too;
+        per-shard Eq. 1 scales them by the shard's visit share instead
+        (:func:`repro.core.allocation.shard_allocations`)."""
+        return TelemetryWindow(
+            node_counts=self.node_counts[lo:hi],
+            node_miss_counts=self.node_miss_counts[lo:hi],
+            edge_counts=self.edge_counts,
+            sample_times=self.sample_times,
+            feature_times=self.feature_times,
+            compute_times=self.compute_times,
+            batches=self.batches,
+        )
+
 
 def merge_windows(windows, weights=None) -> TelemetryWindow:
     """Fold several streams' windows into one, optionally weighted.

@@ -9,6 +9,12 @@ from repro.graph.sampling import (
     sample_blocks,
     sample_neighbors,
 )
+from repro.graph.shard import (
+    ShardedFeatureStore,
+    ShardPlan,
+    make_shard_plan,
+    partition_feature_store,
+)
 
 __all__ = [
     "AdjCache",
@@ -28,4 +34,8 @@ __all__ = [
     "device_graph",
     "sample_blocks",
     "sample_neighbors",
+    "ShardedFeatureStore",
+    "ShardPlan",
+    "make_shard_plan",
+    "partition_feature_store",
 ]

@@ -122,6 +122,7 @@ class FeatureStore:
         *,
         pack_in_thread: bool = True,
         num_live: int | None = None,
+        device=None,
     ) -> PrefetchedMisses:
         """Stage the missed host rows for a batch onto the device.
 
@@ -145,7 +146,12 @@ class FeatureStore:
         — on a worker thread while the calling thread builds the
         ``idx``/``pack_pos`` index arrays and issues THEIR device
         transfers; the call joins before returning, so the result (and
-        everything downstream) is bit-identical either way."""
+        everything downstream) is bit-identical either way.
+
+        ``device`` commits the staged buffers to a specific device — the
+        sharded path stages each shard's misses onto that shard's device
+        so the consuming per-shard gather never mixes committed devices.
+        ``None`` (default) keeps the single-device placement."""
         nodes = np.asarray(nodes)
         live = nodes if num_live is None else nodes[:num_live]
         miss = np.nonzero(self.position_np()[live] < 0)[0].astype(np.int32)
@@ -153,7 +159,7 @@ class FeatureStore:
             # Every row missed (e.g. no cache): the staged buffer IS the
             # whole row set — no pack, no pad, nothing to overlap.
             return PrefetchedMisses(
-                rows=jax.device_put(self.host_np()[nodes]),
+                rows=jax.device_put(self.host_np()[nodes], device),
                 idx=None,
                 pack_pos=None,
                 num_miss=int(miss.size),
@@ -163,14 +169,17 @@ class FeatureStore:
         def pack_rows():
             rows = np.zeros((bucket, self.feat_dim), self.host_np().dtype)
             rows[: miss.size] = self.host_np()[nodes[miss]]
-            return jax.device_put(rows)
+            return jax.device_put(rows, device)
 
         rows_future = _PACK_POOL.submit(pack_rows) if pack_in_thread else None
         idx = np.full(bucket, nodes.size, np.int32)  # pad → one past the end (dropped)
         idx[: miss.size] = miss
         pack_pos = np.zeros(nodes.size, np.int32)  # hit rows point at slot 0 (never read)
         pack_pos[miss] = np.arange(miss.size, dtype=np.int32)
-        idx, pack_pos = jnp.asarray(idx), jnp.asarray(pack_pos)
+        if device is not None:
+            idx, pack_pos = jax.device_put(idx, device), jax.device_put(pack_pos, device)
+        else:
+            idx, pack_pos = jnp.asarray(idx), jnp.asarray(pack_pos)
         return PrefetchedMisses(
             rows=rows_future.result() if rows_future is not None else pack_rows(),
             idx=idx,

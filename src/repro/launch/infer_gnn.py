@@ -161,6 +161,16 @@ def main() -> None:
         default=50.0,
         help="mean request gap per stream for --arrival poisson",
     )
+    ap.add_argument(
+        "--mesh",
+        type=int,
+        default=0,
+        help="shard the feature table + feature cache across this many mesh "
+        "devices (runtime/sharded_serve.py); clamps to the devices present "
+        "(set XLA_FLAGS=--xla_force_host_platform_device_count=N for a CPU "
+        "mesh).  0 (default) keeps the single-device servers; outputs and "
+        "hit accounting are bit-identical at any mesh size",
+    )
     args = ap.parse_args()
 
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
@@ -244,13 +254,24 @@ def main() -> None:
             server.add_request_stream(requests, seed=eng.seed + sid)
         rep = server.run()
         print(json.dumps(rep.summary(), indent=1))
-    elif args.streams > 1:
-        server = MultiStreamServer(
-            eng,
-            depth=args.pipeline_depth,
-            max_inflight_per_stream=args.max_inflight,
-            refresh=refresh,
-        )
+    elif args.streams > 1 or args.mesh > 0:
+        if args.mesh > 0:
+            from repro.runtime.sharded_serve import ShardedServer
+
+            server = ShardedServer(
+                eng,
+                num_shards=args.mesh,
+                depth=args.pipeline_depth,
+                max_inflight_per_stream=args.max_inflight,
+                refresh=refresh,
+            )
+        else:
+            server = MultiStreamServer(
+                eng,
+                depth=args.pipeline_depth,
+                max_inflight_per_stream=args.max_inflight,
+                refresh=refresh,
+            )
         per_stream = args.batches_per_stream
         if args.max_batches is not None:
             per_stream = min(per_stream, args.max_batches)
@@ -261,8 +282,9 @@ def main() -> None:
             batch_size=args.batch_size,
             seed=eng.seed,
         )
+        seeds = stream_seeds if stream_seeds is not None else [eng.seed]
         for sid, queue in enumerate(queues):
-            server.add_stream(queue, seed=stream_seeds[sid])
+            server.add_stream(queue, seed=seeds[sid])
         rep = server.run()
         print(json.dumps(rep.summary(), indent=1))
     else:

@@ -248,6 +248,31 @@ class CacheRefreshManager:
         view).  Ignored under ``stream_weighting="none"``."""
         self._weight_fn = fn
 
+    def shard_allocations(self, plan):
+        """Eq. 1 per shard on the decayed workload history, sliced by the
+        plan's node-id ranges (the sharded serving layer calls this after
+        every refresh so each shard's capacity follows ITS range's share
+        of the traffic).  The per-shard split fractions all equal the
+        global ``sample_fraction`` (Eq. 1 is scale-invariant), which is
+        what keeps the globally-coordinated fill partitionable — see
+        ``repro.core.allocation.shard_allocations``."""
+        from repro.core.allocation import shard_allocations
+
+        weights = [
+            float(self._node_counts[lo:hi].sum())
+            for lo, hi in (plan.bounds(s) for s in range(plan.num_shards))
+        ]
+        if not any(weights):
+            weights = [float(hi - lo) for lo, hi in (plan.bounds(s) for s in range(plan.num_shards))]
+        return shard_allocations(
+            self.pipeline.caches.allocation,
+            weights,
+            sample_times=[self._sample_s],
+            feature_times=[self._feature_s],
+            adj_need_bytes=self.dataset.graph.num_edges * BYTES_PER_ADJ_ELEMENT,
+            feat_need_bytes=self.dataset.features.nbytes,
+        )
+
     def _window_batches(self) -> int:
         return self.telemetry.batches + sum(
             t.batches for t in self._stream_telemetry.values()

@@ -261,7 +261,7 @@ class StreamRuntime:
         self.key, sub = jax.random.split(self.key)
         block = sample_blocks(
             sub,
-            self.pipe.caches.dgraph,
+            self._sample_graph(),
             jnp.asarray(ctx.payload),
             self.fanouts,
             dedup=self.dedup,
@@ -302,6 +302,27 @@ class StreamRuntime:
     def _dedup_view(self, ctx):
         return ctx.outputs["_dedup"]
 
+    # ------------------------------------------------- cache-access hooks
+    # The sharded serving layer (runtime/sharded_serve.py) overrides these
+    # three — and ONLY these — so every stage's control flow, RNG use, and
+    # accounting stays byte-identical across layouts.
+    def _sample_graph(self):
+        """The DeviceGraph the sample stage expands against (per-shard
+        adjacency replica in the sharded path)."""
+        return self.pipe.caches.dgraph
+
+    def _prefetch(self, ctx, nodes, num_live=None):
+        """Stage a batch's missed host rows; returns an object exposing
+        ``num_miss`` that the consuming ``_gather`` accepts via its
+        ``prefetched`` keyword."""
+        del ctx
+        return self.pipe.caches.store.prefetch_misses(nodes, num_live=num_live)
+
+    def _gather(self, ctx, indices, **gather_kw):
+        """Two-source feature gather over ``indices`` → ``(feats, hit)``."""
+        del ctx
+        return self.pipe.caches.store.gather(indices, **gather_kw)
+
     def prefetch_stage(self, ctx):
         """Stage the *missed* host rows for this batch onto the device.
 
@@ -314,17 +335,15 @@ class StreamRuntime:
         so hit/miss counts are bit-identical with prefetch on or off.
         Under ``dedup`` only the batch's DISTINCT missed rows are staged —
         the gather consuming the pack runs over the unique bucket."""
-        store = self.pipe.caches.store
         if self.dedup:
             _, nu, _, uids = self._dedup_view(ctx)
-            staged = store.prefetch_misses(np.asarray(uids), num_live=nu)
+            staged = self._prefetch(ctx, np.asarray(uids), num_live=nu)
         else:
-            staged = store.prefetch_misses(np.asarray(ctx.outputs["sample"][0].input_nodes))
+            staged = self._prefetch(ctx, np.asarray(ctx.outputs["sample"][0].input_nodes))
         self.prefetched_rows += staged.num_miss
         return staged
 
     def feature(self, ctx):
-        store = self.pipe.caches.store
         block = ctx.outputs["sample"][0]
         gather_kw = dict(
             use_kernel=self.use_kernel,
@@ -338,8 +357,8 @@ class StreamRuntime:
             # inverse map, so every count downstream is bit-identical to
             # the duplicate-carrying gather.
             dd, nu, bucket, uids = self._dedup_view(ctx)
-            feats_u, hit_u = store.gather(
-                uids, row_block=ROW_BLOCK if self.use_kernel else None, **gather_kw
+            feats_u, hit_u = self._gather(
+                ctx, uids, row_block=ROW_BLOCK if self.use_kernel else None, **gather_kw
             )
             hit = hit_u[dd.inverse]
             self.unique_rows += nu
@@ -351,11 +370,11 @@ class StreamRuntime:
             pos = self._prev_map[nodes]
             hit_np = pos >= 0
             reused = self._prev_feats[jnp.asarray(np.maximum(pos, 0))]
-            fresh, _ = store.gather(block.input_nodes, **gather_kw)
+            fresh, _ = self._gather(ctx, block.input_nodes, **gather_kw)
             feats = jnp.where(jnp.asarray(hit_np)[:, None], reused, fresh)
             hit = jnp.asarray(hit_np)
         else:
-            feats, hit = store.gather(block.input_nodes, **gather_kw)
+            feats, hit = self._gather(ctx, block.input_nodes, **gather_kw)
         if self.pipe.reuse_prev_batch:
             # The *next* batch's gather reads this state, so it must be
             # updated here rather than at retire time — with depth > 1
@@ -369,7 +388,10 @@ class StreamRuntime:
 
     def compute(self, ctx):
         feats = ctx.outputs["feature"][0]
-        inverse = ctx.outputs["sample"][0].dedup.inverse if self.dedup else None
+        # Read the inverse off the resolved dedup view (not the raw block):
+        # the sharded runtime re-homes it onto the assembling device there,
+        # and for the base path the view holds the block's inverse as-is.
+        inverse = self._dedup_view(ctx)[0].inverse if self.dedup else None
         return gnn_models.forward(
             self.params, feats, model=self.model, fanouts=self.fanouts, inverse_index=inverse
         )

@@ -189,6 +189,10 @@ class ServeReport:
     requests_shed: int = 0
     deadline_hits: int = 0
     deadline_total: int = 0
+    # Sharded serving (runtime/sharded_serve.py): per-shard hit/byte/
+    # allocation accounting; single-device runs leave the defaults.
+    num_shards: int = 1
+    shards: list | None = None
 
     @property
     def total_batches(self) -> int:
@@ -295,6 +299,9 @@ class ServeReport:
             # post-refresh recovery — the per-epoch split is the headline.
             out["per_epoch"] = self.epochs
             out["refresh_events"] = [e.summary() for e in self.refresh_events]
+        if self.shards is not None:
+            out["num_shards"] = self.num_shards
+            out["per_shard"] = self.shards
         return out
 
 
@@ -404,19 +411,7 @@ class MultiStreamServer:
         sid = len(self.streams)
         if seed is None:
             seed = self.engine.seed + sid
-        runtime = StreamRuntime(
-            self.engine.pipeline,
-            self.engine.params,
-            model=self.engine.model,
-            fanouts=self.engine.fanouts,
-            num_nodes=self.engine.dataset.num_nodes,
-            key=jax.random.PRNGKey(seed + 1),
-            collect_outputs=collect_outputs,
-            prefetch=self.prefetch,
-            use_kernel=self.use_kernel,
-            gather_buffers=self.gather_buffers,
-            dedup=self.dedup,
-        )
+        runtime = self._make_runtime(sid, seed, collect_outputs=collect_outputs)
         state = StreamState(
             stream_id=sid,
             seed=seed,
@@ -434,6 +429,25 @@ class MultiStreamServer:
             if self._started:
                 self.refresh_manager.on_stream_join(seed)
         return state
+
+    def _make_runtime(self, sid: int, seed: int, *, collect_outputs: bool) -> StreamRuntime:
+        """Construct one stream's :class:`StreamRuntime`.  The sharded
+        server overrides this to hand out shard-aware runtimes; RNG,
+        knobs, and accounting are resolved identically either way."""
+        del sid
+        return StreamRuntime(
+            self.engine.pipeline,
+            self.engine.params,
+            model=self.engine.model,
+            fanouts=self.engine.fanouts,
+            num_nodes=self.engine.dataset.num_nodes,
+            key=jax.random.PRNGKey(seed + 1),
+            collect_outputs=collect_outputs,
+            prefetch=self.prefetch,
+            use_kernel=self.use_kernel,
+            gather_buffers=self.gather_buffers,
+            dedup=self.dedup,
+        )
 
     def remove_stream(self, stream_id: int) -> StreamState:
         """Serve-time leave: drop the stream's remaining queue (batches
@@ -496,18 +510,24 @@ class MultiStreamServer:
             # Retire runs between dispatches, so an interval refresh lands
             # here — in-flight batches keep the old epoch's arrays.
             event = self.refresh_manager.note_retired()
-            if (
-                event is not None
-                and self._auto_depth
-                and self._executor is not None
-                and self.refresh_manager.suggested_depth
-            ):
-                # Refresh-aware "auto": resize the live window from the
-                # refreshed stage laps; applies at the next admission.
-                self._executor.depth = self.refresh_manager.suggested_depth
-                self.depth = self.refresh_manager.suggested_depth
-                if not self._explicit_inflight_cap:
-                    self.max_inflight = self.depth
+            if event is not None:
+                self._apply_refresh_event(event)
+
+    def _apply_refresh_event(self, event) -> None:
+        """React to a refresh that just fired on the retire path.  The
+        base server resizes the auto-depth window; the sharded server
+        additionally repartitions its per-shard stores to the new epoch."""
+        if (
+            self._auto_depth
+            and self._executor is not None
+            and self.refresh_manager.suggested_depth
+        ):
+            # Refresh-aware "auto": resize the live window from the
+            # refreshed stage laps; applies at the next admission.
+            self._executor.depth = self.refresh_manager.suggested_depth
+            self.depth = self.refresh_manager.suggested_depth
+            if not self._explicit_inflight_cap:
+                self.max_inflight = self.depth
 
     # ----------------------------------------------------------------- run
     def _warmup_seeds(self) -> np.ndarray | None:

@@ -38,3 +38,25 @@ def tiny_dataset():
 @pytest.fixture()
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def cpu_mesh():
+    """A 4-device 1-D serving mesh, shared by every mesh-placement test.
+
+    Real device placement needs >= 4 jax devices; on CPU that means the
+    process started with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+    (set before jax initializes — tests/test_mesh_respawn.py respawns the
+    suite that way when the inline process only sees one device, and the
+    tier1-mesh CI job sets it in the job env).  Skips when the devices
+    are not there, so the inline single-device run stays green."""
+    import jax
+
+    if len(jax.devices()) < 4:
+        pytest.skip(
+            "needs >= 4 jax devices "
+            "(XLA_FLAGS=--xla_force_host_platform_device_count=4)"
+        )
+    from repro.launch.mesh import make_serving_mesh
+
+    return make_serving_mesh(4)

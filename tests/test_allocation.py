@@ -8,6 +8,7 @@ from repro.core.allocation import (
     allocate_capacity,
     available_budget,
     reallocate_capacity,
+    shard_allocations,
 )
 
 
@@ -163,3 +164,50 @@ def test_available_budget_clamps_at_zero(mem, peak, reserve):
     b = available_budget(mem, peak, reserve_bytes=reserve)
     assert b >= 0
     assert b == max(mem - peak - reserve, 0)
+
+
+# ------------------------------------------------- per-shard Eq. 1 split
+
+
+def test_shard_allocations_partition_the_budget_and_keep_the_fraction():
+    base = allocate_capacity([1.0], [3.0], 1001)
+    allocs = shard_allocations(
+        base, [3.0, 1.0, 0.0, 2.0], sample_times=[1.0], feature_times=[3.0]
+    )
+    assert len(allocs) == 4
+    # budgets follow the weights (last shard takes the rounding remainder)
+    assert [a.total_bytes for a in allocs][:3] == [500, 166, 0]
+    assert sum(a.total_bytes for a in allocs) == base.total_bytes
+    # Eq. 1 is scale-invariant: every non-empty shard's split fraction
+    # equals the global one
+    for a in allocs:
+        if a.total_bytes:
+            assert a.sample_fraction == pytest.approx(base.sample_fraction)
+    assert sum(a.adj_bytes for a in allocs) <= base.total_bytes
+
+
+def test_shard_allocations_zero_weights_fall_back_to_uniform():
+    base = allocate_capacity([1.0], [1.0], 100)
+    allocs = shard_allocations(base, [0.0, 0.0], sample_times=[1.0], feature_times=[1.0])
+    assert [a.total_bytes for a in allocs] == [50, 50]
+    # negative weights clamp to zero rather than stealing budget
+    allocs = shard_allocations(base, [-5.0, 1.0], sample_times=[1.0], feature_times=[1.0])
+    assert [a.total_bytes for a in allocs] == [0, 100]
+    with pytest.raises(ValueError):
+        shard_allocations(base, [], sample_times=[1.0], feature_times=[1.0])
+
+
+def test_shard_allocations_respect_scaled_needs():
+    # a shard whose share of the adjacency need is tiny spills the excess
+    # to its feature side, exactly as the global allocator would
+    base = allocate_capacity([9.0], [1.0], 1000, adj_need_bytes=100)
+    allocs = shard_allocations(
+        base,
+        [1.0, 1.0],
+        sample_times=[9.0],
+        feature_times=[1.0],
+        adj_need_bytes=100,
+    )
+    for a in allocs:
+        assert a.adj_bytes <= 50  # capped at the shard's share of the need
+        assert a.adj_bytes + a.feat_bytes == a.total_bytes

@@ -689,3 +689,112 @@ def test_join_serve_leave_history_never_negative(small_dataset):
     # and the post-leave history still supports a refresh
     event = mgr.refresh("manual")
     assert event.delta.epoch == eng.pipeline.caches.epoch
+
+
+# ------------------------------------------------------------- mesh path
+
+
+def test_telemetry_shard_slice_partitions_the_window():
+    t = WorkloadTelemetry(num_nodes=10, num_edges=6)
+    t.observe_batch(
+        np.array([1, 2, 2, 7, 9]),
+        np.array([True, False, False, True, False]),
+        [np.array([[0, 1]]), np.array([[5]])],
+    )
+    win = t.snapshot()
+    slices = [win.shard_slice(0, 4), win.shard_slice(4, 7), win.shard_slice(7, 10)]
+    # node traffic partitions exactly across the ranges
+    np.testing.assert_array_equal(
+        np.concatenate([s.node_counts for s in slices]), win.node_counts
+    )
+    np.testing.assert_array_equal(
+        np.concatenate([s.node_miss_counts for s in slices]), win.node_miss_counts
+    )
+    for s in slices:
+        # adjacency is replicated per shard; stage laps are whole-pipeline
+        # facts — both pass through unsliced
+        np.testing.assert_array_equal(s.edge_counts, win.edge_counts)
+        assert s.sample_times == win.sample_times
+        assert s.batches == win.batches
+
+
+def test_sharded_serve_refresh_outputs_bit_identical(small_dataset):
+    """Refresh on the mesh path moves bytes, never values: the sharded
+    server's epoch-versioned outputs are bit-identical with refresh on or
+    off, and its per-epoch counters partition the lifetime counters —
+    the single-device invariants, carried across the shard exchange."""
+    from repro.runtime.sharded_serve import ShardedServer
+
+    eng = _engine(small_dataset, stream_seeds=[100, 101])
+    queues = make_stream_batches(
+        small_dataset, num_streams=2, batches_per_stream=4, batch_size=BATCH, seed=7
+    )
+
+    off = ShardedServer(eng, num_shards=4, dedup=True)
+    for sid, q in enumerate(queues):
+        off.add_stream(q, seed=100 + sid, collect_outputs=True)
+    r_off = off.run()
+    assert r_off.refresh_events == []
+
+    on = ShardedServer(
+        eng,
+        num_shards=4,
+        dedup=True,
+        refresh=RefreshConfig(mode="interval", interval_batches=2),
+    )
+    for sid, q in enumerate(queues):
+        on.add_stream(q, seed=100 + sid, collect_outputs=True)
+    r_on = on.run()
+    assert len(r_on.refresh_events) >= 1
+    assert eng.pipeline.caches.epoch >= 1
+    # the shards repartitioned on every refresh epoch; the latest
+    # repartition mirrors the base fill exactly (earlier epochs' row
+    # totals tracked their OWN epoch's allocation)
+    assert len(on.repartition_log) == len(r_on.refresh_events)
+    assert sum(on.repartition_log[-1]["rows_after"]) == (
+        eng.pipeline.caches.store.num_cached
+    )
+    assert [e["epoch"] for e in on.repartition_log] == [
+        e.epoch for e in r_on.refresh_events
+    ]
+    for a, b in zip(off.streams, on.streams):
+        assert len(a.runtime.outputs) == len(b.runtime.outputs)
+        for x, y in zip(a.runtime.outputs, b.runtime.outputs):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert r_on.epochs is not None
+    assert sum(v["batches"] for v in r_on.epochs.values()) == r_on.total_batches
+
+
+def test_refresh_manager_shard_allocations_partition_the_global(small_dataset):
+    """After serve-time refreshes, the manager's per-shard Eq. 1 on the
+    decayed partitioned history sums to the global budget with every
+    shard at the global split fraction."""
+    from repro.graph.shard import make_shard_plan
+    from repro.runtime.sharded_serve import ShardedServer
+
+    eng = _engine(small_dataset, stream_seeds=[100, 101])
+    queues = make_stream_batches(
+        small_dataset, num_streams=2, batches_per_stream=4, batch_size=BATCH, seed=7
+    )
+    server = ShardedServer(
+        eng,
+        num_shards=4,
+        refresh=RefreshConfig(mode="interval", interval_batches=2),
+    )
+    for sid, q in enumerate(queues):
+        server.add_stream(q, seed=100 + sid)
+    server.run()
+    mgr = server.refresh_manager
+    assert mgr.events, "serve must have refreshed"
+    base = eng.pipeline.caches.allocation
+    for k in (1, 3, 4):
+        allocs = mgr.shard_allocations(make_shard_plan(small_dataset.num_nodes, k))
+        assert len(allocs) == k
+        assert sum(a.total_bytes for a in allocs) == base.total_bytes
+        for a in allocs:
+            if a.total_bytes:
+                assert a.sample_fraction == pytest.approx(
+                    base.sample_fraction, abs=1e-9
+                )
+    # the server recorded the same per-shard allocations at the last epoch
+    assert sum(a.total_bytes for a in server.shard_allocations) == base.total_bytes

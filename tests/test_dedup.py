@@ -286,3 +286,57 @@ def test_telemetry_multiplicities_bit_identical():
     assert per_visit.feat_lookups == deduped.feat_lookups == 40
     assert per_visit.feat_misses == deduped.feat_misses
     assert per_visit.miss_rate == deduped.miss_rate
+
+
+def test_shard_local_pad_never_stages_cross_shard_row(small_dataset):
+    """The sharded twin of the dedup-pad bugfix: the global pad id lives
+    on ONE shard, so re-using it for every shard's bucket tail would make
+    the other shards stage a cross-shard (guaranteed-miss) row per pad
+    slot during warmup.  ``ShardedFeatureStore.partition`` pads each
+    segment with that shard's LOCAL cached pad id instead — every pad
+    slot is an in-shard local-cache hit, and no shard ever stages a pad
+    row."""
+    from repro.graph.shard import ShardedFeatureStore, make_shard_plan
+
+    eng = GNNInferenceEngine(small_dataset, fanouts=FANOUTS, batch_size=BATCH)
+    eng.prepare("dci", **KW)
+    store = eng.pipeline.caches.store
+    ss = ShardedFeatureStore.partition_store(
+        store, make_shard_plan(store.num_nodes, 4)
+    )
+    # a frontier spanning all shards, global-pow2-padded as warmup sees it
+    rng = np.random.default_rng(11)
+    uids = np.unique(rng.integers(0, store.num_nodes, size=50)).astype(np.int64)
+    nu = uids.size
+    bucket = pow2_bucket(nu)
+    padded = np.full(bucket, int(store.pad_node_id()), np.int64)
+    padded[:nu] = uids
+    part = ss.partition(padded, num_live=nu)
+    plan = ss.plan
+    for s, buf in enumerate(part.seg_ids):
+        if buf is None:
+            continue
+        lo, hi = plan.bounds(s)
+        local = ss.shards[s]
+        pos = local.position_np()
+        n, live = part.seg_len[s], part.seg_live[s]
+        # bucket tail pads are the shard's OWN pad id...
+        local_pad = local.pad_node_id()
+        expected_pad = local_pad if local_pad >= 0 else 0
+        assert (buf[n:] == expected_pad).all()
+        # ...always in-shard, and a local-cache hit wherever the shard
+        # caches anything at all
+        assert (buf >= 0).all() and (buf < hi - lo).all()
+        if (pos >= 0).any():
+            assert pos[expected_pad] >= 0
+        # staging respects the live window: pads and the global pad-id
+        # tail stage nothing, and every staged row is an in-shard miss
+        pf = local.prefetch_misses(buf, num_live=live)
+        assert pf.num_miss == int((pos[buf[:live]] < 0).sum())
+        if pf.idx is not None:
+            staged_pos = np.asarray(pf.idx)[: pf.num_miss]
+            assert (staged_pos < live).all()
+    # the per-shard live windows tile the live prefix exactly: the global
+    # pad tail (positions nu..bucket) is dead on every shard
+    assert sum(part.seg_live) == nu
+    assert sum(part.seg_len) == bucket

@@ -1,0 +1,204 @@
+"""Shard round-trip properties (graph/shard.py).
+
+The exchange protocol's contract is exact: partition → per-shard gather →
+exchange-back → inverse-permute returns the SAME bits as a single-device
+``FeatureStore.gather`` over the same ids — for arbitrary frontiers
+(duplicates, empty shards, every id on one shard), any shard count, with
+or without staged prefetch packs.  Per-visit hit accounting by owning
+shard sums to the single-device counters exactly.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.graph.features import build_feature_cache, plain_feature_store
+from repro.graph.sampling import pow2_bucket
+from repro.graph.shard import (
+    ShardedFeatureStore,
+    make_shard_plan,
+    partition_feature_store,
+)
+
+N, F = 50, 8
+
+
+def _store(n=N, f=F, cached_frac=0.5, seed=0):
+    rng = np.random.default_rng(seed)
+    feats = rng.standard_normal((n, f)).astype(np.float32)
+    counts = rng.integers(0, 10, size=n).astype(np.float64)
+    budget = int(cached_frac * n) * f * feats.dtype.itemsize
+    return build_feature_cache(feats, counts, budget)
+
+
+def _sharded(store, k):
+    return ShardedFeatureStore.partition_store(store, make_shard_plan(store.num_nodes, k))
+
+
+# ------------------------------------------------------------------- plan
+
+
+def test_plan_balanced_and_boundary_mapping():
+    plan = make_shard_plan(10, 3)
+    assert plan.shard_sizes().tolist() == [4, 3, 3]
+    assert plan.row_starts.tolist() == [0, 4, 7, 10]
+    # boundary ids belong to the shard whose range STARTS there
+    assert plan.shard_of(np.array([0, 3, 4, 6, 7, 9])).tolist() == [0, 0, 1, 1, 2, 2]
+    with pytest.raises(ValueError):
+        make_shard_plan(10, 0)
+
+
+def test_plan_more_shards_than_nodes_leaves_empty_shards():
+    plan = make_shard_plan(3, 5)
+    assert plan.num_shards == 5
+    assert plan.shard_sizes().sum() == 3
+    # ids never land on an empty shard
+    asgn = plan.shard_of(np.arange(3))
+    assert all(plan.shard_sizes()[s] > 0 for s in asgn)
+
+
+def test_partition_store_slices_and_reslots():
+    store = _store()
+    plan = make_shard_plan(N, 4)
+    shards = partition_feature_store(store, plan)
+    host = store.host_np()
+    pos = store.position_np()
+    for s, fs in enumerate(shards):
+        lo, hi = plan.bounds(s)
+        np.testing.assert_array_equal(fs.host_np(), host[lo:hi])
+        # same cached-row membership, local slot ids re-packed ascending
+        local_cached = np.nonzero(fs.position_np() >= 0)[0]
+        np.testing.assert_array_equal(local_cached, np.nonzero(pos[lo:hi] >= 0)[0])
+        # hot rows are bit-copies of the host rows they cache
+        hot = np.asarray(fs.hot_table)
+        for li in local_cached:
+            np.testing.assert_array_equal(hot[fs.position_np()[li]], host[lo + li])
+    assert sum((fs.position_np() >= 0).sum() for fs in shards) == store.num_cached
+
+
+# ------------------------------------------------------- round-trip (unit)
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 4, 7])
+@pytest.mark.parametrize("cached_frac", [0.0, 0.5, 1.0])
+def test_gather_matches_single_device(k, cached_frac):
+    store = _store(cached_frac=cached_frac) if cached_frac else plain_feature_store(
+        _store().host_np()
+    )
+    ss = _sharded(store, k)
+    rng = np.random.default_rng(3)
+    ids = rng.integers(0, N, size=37).astype(np.int64)  # duplicates, unsorted
+    part = ss.partition(ids)
+    feats, hit = ss.gather(part)
+    ref_f, ref_h = store.gather(np.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(feats), np.asarray(ref_f))
+    np.testing.assert_array_equal(np.asarray(hit), np.asarray(ref_h))
+
+
+def test_all_ids_on_one_shard_and_sorted_identity():
+    store = _store()
+    ss = _sharded(store, 4)
+    lo, hi = ss.plan.bounds(2)
+    ids = np.arange(lo, hi, dtype=np.int64)  # sorted, single owner
+    part = ss.partition(ids)
+    assert part.inv is None  # stable shard-sort degenerates to identity
+    assert [b is not None for b in part.seg_ids] == [False, False, True, False]
+    feats, hit = ss.gather(part)
+    ref_f, ref_h = store.gather(ids)
+    np.testing.assert_array_equal(np.asarray(feats), np.asarray(ref_f))
+    np.testing.assert_array_equal(np.asarray(hit), np.asarray(ref_h))
+
+
+def test_prefetch_counts_and_gather_match_single_device():
+    store = _store()
+    ss = _sharded(store, 3)
+    rng = np.random.default_rng(5)
+    ids = np.unique(rng.integers(0, N, size=40)).astype(np.int64)
+    nu = ids.size
+    bucket = pow2_bucket(nu)
+    padded = np.full(bucket, int(store.pad_node_id()), np.int64)
+    padded[:nu] = ids
+    part = ss.partition(padded, num_live=nu)
+    staged = ss.prefetch(part)
+    ref_staged = store.prefetch_misses(padded, num_live=nu)
+    assert staged.num_miss == ref_staged.num_miss
+    feats, hit = ss.gather(part, prefetched=staged)
+    ref_f, ref_h = store.gather(padded, prefetched=ref_staged)
+    np.testing.assert_array_equal(np.asarray(feats), np.asarray(ref_f))
+    np.testing.assert_array_equal(np.asarray(hit), np.asarray(ref_h))
+
+
+def test_seg_live_windows_cover_exactly_the_live_prefix():
+    store = _store()
+    ss = _sharded(store, 4)
+    ids = np.array([3, 17, 44, 9, 28, 46, 1, 30], np.int64)
+    for num_live in range(len(ids) + 1):
+        part = ss.partition(ids, num_live=num_live)
+        assert sum(part.seg_live) == num_live
+        # live members per shard == owning-shard histogram of the prefix
+        live_asgn = ss.plan.shard_of(ids[:num_live])
+        counts = np.bincount(live_asgn, minlength=4)
+        for s in range(4):
+            assert part.seg_live[s] == counts[s]
+
+
+# ------------------------------------------------------ properties (given)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ids=st.lists(st.integers(min_value=0, max_value=N - 1), min_size=1, max_size=60),
+    k=st.integers(min_value=1, max_value=8),
+    cached_frac=st.sampled_from([0.0, 0.3, 1.0]),
+)
+def test_property_round_trip_bitwise(ids, k, cached_frac):
+    store = _store(cached_frac=max(cached_frac, 0.02)) if cached_frac else (
+        plain_feature_store(_store().host_np())
+    )
+    ss = _sharded(store, k)
+    ids = np.asarray(ids, np.int64)
+    part = ss.partition(ids)
+    # structural invariants: order is a permutation, segments partition it,
+    # every local id is in its shard's range (pads included)
+    assert np.array_equal(np.sort(part.order), np.arange(ids.size))
+    assert sum(part.seg_len) == ids.size
+    for s, buf in enumerate(part.seg_ids):
+        lo, hi = ss.plan.bounds(s)
+        if buf is None:
+            assert part.seg_len[s] == 0
+            continue
+        assert len(buf) == pow2_bucket(part.seg_len[s])
+        assert (buf >= 0).all() and (buf < hi - lo).all()
+    feats, hit = ss.gather(part)
+    ref_f, ref_h = store.gather(ids)
+    np.testing.assert_array_equal(np.asarray(feats), np.asarray(ref_f))
+    np.testing.assert_array_equal(np.asarray(hit), np.asarray(ref_h))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ids=st.lists(st.integers(min_value=0, max_value=N - 1), min_size=1, max_size=60),
+    k=st.integers(min_value=1, max_value=6),
+)
+def test_property_per_visit_hits_sum_across_shards(ids, k):
+    """The serving path's per-shard accounting (unique ids weighted by
+    visit multiplicity, binned by owning shard) sums to the single-device
+    per-visit counters exactly."""
+    store = _store()
+    ss = _sharded(store, k)
+    ids = np.asarray(ids, np.int64)
+    uids, inverse = np.unique(ids, return_inverse=True)
+    part = ss.partition(uids)
+    _, hit_u = ss.gather(part)
+    hit_u = np.asarray(hit_u).astype(bool)
+    mult = np.bincount(inverse, minlength=uids.size).astype(np.int64)
+    asgn = ss.plan.shard_of(uids)
+    lookups = np.zeros(k, np.int64)
+    hits = np.zeros(k, np.int64)
+    np.add.at(lookups, asgn, mult)
+    np.add.at(hits, asgn[hit_u], mult[hit_u])
+    # single-device reference over the raw (duplicate-carrying) frontier
+    _, ref_hit = store.gather(ids)
+    ref_hit = np.asarray(ref_hit).astype(bool)
+    assert lookups.sum() == ids.size
+    assert hits.sum() == int(ref_hit.sum())

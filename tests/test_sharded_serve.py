@@ -1,0 +1,261 @@
+"""Sharded serving equivalence (runtime/sharded_serve.py).
+
+The contract: a :class:`ShardedServer` at ANY mesh size is bit-for-bit
+the single-device :class:`MultiStreamServer` over the same prepared
+engine — logits, per-stream hit accounting, gathered/prefetched row
+counts, refresh events — across the knob grid (dedup × prefetch ×
+refresh), and its per-shard counters sum to the global ones exactly.
+
+Equivalence runs share ONE prepared engine: Eq. 1's allocation depends on
+measured wall-clock stage times, so two separately-prepared engines hold
+different caches and their hit counters are not comparable (the logits
+still would be — they are cache-independent — but the accounting is the
+point here).  With refresh off the caches are immutable, so sequential
+reuse is sound; the refresh test pins the re-allocation to the identity
+and restores the initial membership between runs (a refresh at the same
+counts and budget re-selects the from-scratch fill — the invariant
+tests/test_cache_refresh.py establishes).
+
+The co-resident layout (4 shards, 1 device) runs everywhere; real mesh
+placement rides the session ``cpu_mesh`` fixture (4 virtual CPU devices
+via ``XLA_FLAGS`` — skipped inline, exercised by
+tests/test_mesh_respawn.py and the tier1-mesh CI job).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.launch.mesh import SERVE_AXIS, make_serving_mesh, serving_devices
+from repro.runtime.cache_refresh import RefreshConfig
+from repro.runtime.gnn_engine import GNNInferenceEngine
+from repro.runtime.gnn_serve import MultiStreamServer, make_stream_batches
+from repro.runtime.sharded_serve import ShardedServer
+
+FANOUTS = (3, 2)
+BATCH = 64
+KW = dict(total_cache_bytes=200_000, n_presample=2)
+STREAM_SEEDS = [100, 101, 102]
+
+COUNTERS = (
+    "adj_hits",
+    "adj_lookups",
+    "feat_hits",
+    "feat_lookups",
+    "num_batches",
+    "num_seeds",
+    "prefetched_rows",
+    "unique_rows",
+    "gathered_rows",
+)
+
+
+def _shared_engine(dataset, **kw):
+    eng = GNNInferenceEngine(dataset, fanouts=FANOUTS, batch_size=BATCH)
+    eng.prepare("dci", stream_seeds=STREAM_SEEDS, **{**KW, **kw})
+    return eng
+
+
+def _queues(dataset, n=3, batches=3):
+    return make_stream_batches(
+        dataset, num_streams=n, batches_per_stream=batches, batch_size=BATCH, seed=7
+    )
+
+
+def _serve(server_cls, eng, queues, *, refresh=None, **kw):
+    srv = server_cls(eng, refresh=refresh, **kw)
+    for sid, q in enumerate(queues):
+        srv.add_stream(q, seed=STREAM_SEEDS[sid], collect_outputs=True)
+    rep = srv.run()
+    outs = [[np.asarray(o) for o in s.runtime.outputs] for s in srv.streams]
+    return srv, rep, outs
+
+
+def _assert_equivalent(rb, ob, rs, os_):
+    for sb, ss in zip(rb.streams, rs.streams):
+        for k in COUNTERS:
+            assert getattr(sb, k) == getattr(ss, k), k
+    for a_list, b_list in zip(ob, os_):
+        assert len(a_list) == len(b_list)
+        for a, b in zip(a_list, b_list):
+            np.testing.assert_array_equal(a, b)
+
+
+def _assert_shard_sums(rb, rs):
+    per = rs.shards
+    assert rs.num_shards == len(per)
+    assert sum(p["feat_hits"] for p in per) == rb.feat_hits
+    assert sum(p["feat_lookups"] for p in per) == rb.feat_lookups
+    assert sum(p["adj_hits"] for p in per) == rb.adj_hits
+    assert sum(p["adj_lookups"] for p in per) == rb.adj_lookups
+
+
+# -------------------------------------------------------- degenerate mesh
+
+
+def test_mesh_size_1_is_bit_for_bit_the_base_server(small_dataset):
+    eng = _shared_engine(small_dataset)
+    queues = _queues(small_dataset)
+    _, rb, ob = _serve(MultiStreamServer, eng, queues, dedup=True)
+    srv, rs, os_ = _serve(ShardedServer, eng, queues, dedup=True, num_shards=1)
+    assert rs.num_shards == 1 and len(rs.shards) == 1
+    _assert_equivalent(rb, ob, rs, os_)
+    # one shard holds the whole table: per-shard == global, verbatim
+    only = rs.shards[0]
+    assert only["feat_hits"] == rb.feat_hits
+    assert only["feat_lookups"] == rb.feat_lookups
+    assert only["rows_cached"] == eng.pipeline.caches.store.num_cached
+    assert srv.sharded.plan.row_starts.tolist() == [0, small_dataset.num_nodes]
+
+
+# ------------------------------------------------------------- knob grid
+
+
+@pytest.mark.parametrize("dedup", [False, True])
+@pytest.mark.parametrize("prefetch", [False, True])
+def test_sharded_equivalence_knob_grid(small_dataset, dedup, prefetch):
+    eng = _shared_engine(small_dataset)
+    queues = _queues(small_dataset)
+    _, rb, ob = _serve(MultiStreamServer, eng, queues, dedup=dedup, prefetch=prefetch)
+    _, rs, os_ = _serve(
+        ShardedServer, eng, queues, dedup=dedup, prefetch=prefetch, num_shards=4
+    )
+    _assert_equivalent(rb, ob, rs, os_)
+    _assert_shard_sums(rb, rs)
+    assert rs.summary()["num_shards"] == 4
+    assert len(rs.summary()["per_shard"]) == 4
+
+
+def test_sharded_refresh_equivalence(small_dataset, monkeypatch):
+    """With the Eq. 1 re-allocation pinned (refresh timing inputs are
+    wall-clock and would differ run to run), a refreshing sharded serve is
+    bit-for-bit the refreshing base serve: same events, same epoch-
+    versioned hit accounting, and the shards repartition on each epoch."""
+    import repro.runtime.cache_refresh as cr
+
+    monkeypatch.setattr(cr, "reallocate_capacity", lambda alloc, *a, **k: alloc)
+    eng = _shared_engine(small_dataset)
+    stats = eng.pipeline.presample
+    init_alloc = eng.pipeline.caches.allocation
+    queues = _queues(small_dataset)
+    refresh = RefreshConfig(mode="interval", interval_batches=2)
+    _, rb, ob = _serve(MultiStreamServer, eng, queues, dedup=True, refresh=refresh)
+    assert len(rb.refresh_events) > 0
+    # restore the initial membership (refresh at the presample counts and
+    # initial allocation == the from-scratch fill) so the sharded run
+    # starts from the same cache state the base run did
+    eng.pipeline.caches.refresh(
+        allocation=init_alloc,
+        node_counts=stats.node_counts,
+        edge_counts=stats.edge_counts,
+    )
+    srv, rs, os_ = _serve(
+        ShardedServer, eng, queues, dedup=True, refresh=refresh, num_shards=4
+    )
+    _assert_equivalent(rb, ob, rs, os_)
+    _assert_shard_sums(rb, rs)
+    assert len(rs.refresh_events) == len(rb.refresh_events)
+    # every refresh epoch repartitioned the shards, and the per-shard rows
+    # always re-tile the base fill exactly
+    assert len(srv.repartition_log) == len(rs.refresh_events)
+    for entry in srv.repartition_log:
+        assert entry["reason"] == "interval"
+        assert sum(entry["rows_after"]) == eng.pipeline.caches.store.num_cached
+
+
+# -------------------------------------------------- per-shard allocation
+
+
+def test_per_shard_allocations_partition_the_global_one(small_dataset):
+    eng = _shared_engine(small_dataset)
+    srv = ShardedServer(eng, num_shards=4)
+    allocs = srv.shard_allocations
+    base = eng.pipeline.caches.allocation
+    assert len(allocs) == 4
+    assert sum(a.total_bytes for a in allocs) == base.total_bytes
+    for a in allocs:
+        # Eq. 1 is scale-invariant: every shard's adj:feat split equals
+        # the global split — the coordinated-partition property that lets
+        # the globally-ranked fill shard by id range without moving rows
+        assert a.sample_fraction == pytest.approx(base.sample_fraction, abs=1e-9)
+
+
+def test_shard_weights_follow_presample_traffic(small_dataset):
+    eng = _shared_engine(small_dataset)
+    srv = ShardedServer(eng, num_shards=4)
+    counts = np.asarray(eng.pipeline.presample.node_counts, np.float64)
+    plan = srv.sharded.plan
+    weights = np.array(
+        [counts[lo:hi].sum() for lo, hi in map(plan.bounds, range(4))]
+    )
+    totals = np.array([a.total_bytes for a in srv.shard_allocations], np.float64)
+    # budgets proportional to each range's share of the presampled visits
+    # (up to integer rounding; the last shard absorbs the remainder)
+    expect = weights / weights.sum() * eng.pipeline.caches.allocation.total_bytes
+    assert np.all(np.abs(totals - expect) <= len(totals) + 1)
+
+
+# --------------------------------------------------------- mesh placement
+
+
+def test_serving_mesh_clamps_to_available_devices():
+    mesh = make_serving_mesh(64)
+    devs = serving_devices(mesh)
+    assert 1 <= len(devs) <= len(jax.devices())
+    assert mesh.axis_names == (SERVE_AXIS,)
+    with pytest.raises(ValueError):
+        make_serving_mesh(0)
+
+
+def test_mesh_placement_four_devices(cpu_mesh, small_dataset):
+    """On a real 4-device mesh the shards commit to distinct devices and
+    the serve stays bit-for-bit the single-device run."""
+    devs = serving_devices(cpu_mesh)
+    assert len(devs) == 4 and len(set(devs)) == 4
+    eng = _shared_engine(small_dataset)
+    queues = _queues(small_dataset)
+    _, rb, ob = _serve(MultiStreamServer, eng, queues, dedup=True)
+    srv, rs, os_ = _serve(
+        ShardedServer, eng, queues, dedup=True, mesh=cpu_mesh, num_shards=4
+    )
+    # distributed, not co-resident: every shard's tables live on its device
+    assert srv.sharded.devices is not None
+    for s, fs in enumerate(srv.sharded.store.shards):
+        (dev,) = fs.hot_table.devices()
+        assert dev == devs[s]
+    assert srv.sharded.store.assemble_device is not None
+    _assert_equivalent(rb, ob, rs, os_)
+    _assert_shard_sums(rb, rs)
+
+
+def test_mesh_placement_prefetch_and_refresh(cpu_mesh, small_dataset, monkeypatch):
+    import repro.runtime.cache_refresh as cr
+
+    monkeypatch.setattr(cr, "reallocate_capacity", lambda alloc, *a, **k: alloc)
+    eng = _shared_engine(small_dataset)
+    stats = eng.pipeline.presample
+    init_alloc = eng.pipeline.caches.allocation
+    queues = _queues(small_dataset)
+    refresh = RefreshConfig(mode="interval", interval_batches=2)
+    _, rb, ob = _serve(
+        MultiStreamServer, eng, queues, dedup=True, prefetch=True, refresh=refresh
+    )
+    eng.pipeline.caches.refresh(
+        allocation=init_alloc,
+        node_counts=stats.node_counts,
+        edge_counts=stats.edge_counts,
+    )
+    srv, rs, os_ = _serve(
+        ShardedServer,
+        eng,
+        queues,
+        dedup=True,
+        prefetch=True,
+        refresh=refresh,
+        mesh=cpu_mesh,
+        num_shards=4,
+    )
+    assert srv.sharded.devices is not None  # genuinely distributed
+    _assert_equivalent(rb, ob, rs, os_)
+    _assert_shard_sums(rb, rs)
