@@ -46,6 +46,7 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, make_engine
+from repro.core.config import EngineConfig
 from repro.runtime.cache_refresh import RefreshConfig
 from repro.runtime.request_queue import flash_crowd_seed_batches, uniform_seed_batches
 
@@ -126,7 +127,9 @@ def run(
         per_phase = {}
         for phase, batches in (("pre-shift", phase_a), ("post-shift", phase_b)):
             t0 = time.perf_counter()
-            rep = eng.run(batches=batches, pipeline_depth=1, warmup=False, refresh=cfg)
+            rep = eng.run(
+                batches=batches, config=EngineConfig(pipeline_depth=1), warmup=False, refresh=cfg
+            )
             row = _phase_row(label, phase, rep, time.perf_counter() - t0)
             per_phase[phase] = row
             rows.append(row)

@@ -48,6 +48,7 @@ import json
 import time
 
 from benchmarks.common import CACHE_BYTES, emit, geomean, make_engine
+from repro.core.config import EngineConfig, ServeConfig
 from repro.runtime.cache_refresh import RefreshConfig
 from repro.runtime.gnn_engine import GNNInferenceEngine
 from repro.runtime.gnn_serve import MultiStreamServer, make_stream_batches
@@ -72,7 +73,7 @@ def _private_serial(dataset, queues, stream_seeds, *, model, fanouts, batch_size
             dataset, model=model, fanouts=fanouts, batch_size=batch_size, seed=stream_seeds[sid]
         )
         eng.prepare("dci", total_cache_bytes=cache_bytes // n, n_presample=N_PRESAMPLE)
-        rep = eng.run(batches=queue, pipeline_depth=1)
+        rep = eng.run(batches=queue, config=EngineConfig(pipeline_depth=1))
         run_s += rep.total_seconds
         hits, lookups = hits + rep.feat_hits, lookups + rep.feat_lookups
         ahits, alookups = ahits + rep.adj_hits, alookups + rep.adj_lookups
@@ -135,7 +136,11 @@ def _shared_multistream(
         )
     for mode, prefetch, refresh in modes:
         t0 = time.perf_counter()
-        server = MultiStreamServer(eng, depth=depth, prefetch=prefetch, refresh=refresh)
+        server = MultiStreamServer(
+            eng,
+            config=ServeConfig(engine=EngineConfig(pipeline_depth=depth, prefetch=prefetch)),
+            refresh=refresh,
+        )
         for sid, queue in enumerate(queues):
             server.add_stream(queue, seed=stream_seeds[sid])
         rep = server.run()
@@ -294,7 +299,9 @@ def run_sharded(
 
     def serve(server_cls, **kw):
         t0 = time.perf_counter()
-        server = server_cls(eng, depth=depth, dedup=True, **kw)
+        server = server_cls(
+            eng, config=ServeConfig(engine=EngineConfig(pipeline_depth=depth, dedup=True)), **kw
+        )
         for sid, queue in enumerate(queues):
             server.add_stream(queue, seed=stream_seeds[sid])
         rep = server.run()
@@ -407,7 +414,9 @@ def run_request_latency(
     def serve(trace, admission):
         # Fresh Request objects per run (traces are mutated in place), one
         # fresh server per run; depth 1 so admission order IS service order.
-        server = RequestQueueServer(eng, depth=1, admission=admission)
+        server = RequestQueueServer(
+            eng, config=ServeConfig(engine=EngineConfig(pipeline_depth=1)), admission=admission
+        )
         for sid, reqs in enumerate(trace):
             server.add_request_stream(reqs, seed=100 + sid)
         return server.run()

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import sys
 
+from repro.core.config import EngineConfig
 from repro.graph.datasets import load_dataset
 from repro.runtime.gnn_engine import GNNInferenceEngine
 
@@ -62,21 +63,24 @@ def run_policy(
     policy: str,
     cache_bytes: int = CACHE_BYTES,
     pipeline_depth: int = 1,
+    config: EngineConfig | None = None,
     **kw,
 ):
     engine.prepare(policy, total_cache_bytes=cache_bytes, **kw)
-    return engine.run(max_batches=MAX_BATCHES, pipeline_depth=pipeline_depth)
+    if config is None:
+        config = EngineConfig(pipeline_depth=pipeline_depth)
+    return engine.run(max_batches=MAX_BATCHES, config=config)
 
 
 # Execution modes reported side by side: the paper's serial loop, the
 # staged executor, and the staged executor with the miss-path prefetch
-# stage.  Each entry is (label, run_kwargs) — run_kwargs are passed to
+# stage.  Each entry is (label, EngineConfig) — the config is passed to
 # ``GNNInferenceEngine.run`` verbatim, so modes can toggle any execution
 # knob (depth, prefetch, use_kernel, dedup) without changing the plumbing.
 MODES = (
-    ("serial", dict(pipeline_depth=1)),
-    ("pipelined", dict(pipeline_depth=2)),
-    ("pipelined+prefetch", dict(pipeline_depth=2, prefetch=True)),
+    ("serial", EngineConfig(pipeline_depth=1)),
+    ("pipelined", EngineConfig(pipeline_depth=2)),
+    ("pipelined+prefetch", EngineConfig(pipeline_depth=2, prefetch=True)),
 )
 
 # The kernel-route pair the dedup gate compares: identical Pallas gather
@@ -85,8 +89,8 @@ MODES = (
 # orders slower than a native gather, so these run on their own contained
 # workload rather than inside every end-to-end sweep.
 KERNEL_MODES = (
-    ("pipelined+kernel", dict(pipeline_depth=2, use_kernel=True)),
-    ("pipelined+kernel+dedup", dict(pipeline_depth=2, use_kernel=True, dedup=True)),
+    ("pipelined+kernel", EngineConfig(pipeline_depth=2, use_kernel=True)),
+    ("pipelined+kernel+dedup", EngineConfig(pipeline_depth=2, use_kernel=True, dedup=True)),
 )
 
 
@@ -97,7 +101,7 @@ def run_policy_modes(
     modes=MODES,
     **kw,
 ):
-    """Prepare once, then run each (label, run_kwargs) execution mode.
+    """Prepare once, then run each (label, EngineConfig) execution mode.
 
     Outputs and hit rates are mode-invariant (equivalence-tested), so the
     reports differ only in where the miss bytes move and how the stages
@@ -108,11 +112,9 @@ def run_policy_modes(
     """
     engine.prepare(policy, total_cache_bytes=cache_bytes, **kw)
     seen = set()
-    for _, mkw in modes:
-        knobs = tuple(
-            sorted((k, v) for k, v in mkw.items() if k != "pipeline_depth")
-        )
+    for _, cfg in modes:
+        knobs = cfg.replace(pipeline_depth=None)  # frozen dataclass → hashable
         if knobs not in seen:
             seen.add(knobs)
-            engine.run(max_batches=2, **{k: v for k, v in mkw.items() if k != "pipeline_depth"})
-    return {label: engine.run(max_batches=MAX_BATCHES, **mkw) for label, mkw in modes}
+            engine.run(max_batches=2, config=knobs)
+    return {label: engine.run(max_batches=MAX_BATCHES, config=cfg) for label, cfg in modes}

@@ -39,6 +39,7 @@ from benchmarks import (  # noqa: E402
     bench_presample_batches,
     bench_redundancy,
     bench_ablation,
+    bench_layerwise,
     bench_lm_serving_cache,
     bench_multistream,
 )
@@ -82,11 +83,16 @@ def quick_bench() -> dict:
     sh_rows, sh_checks = bench_multistream.run_sharded(
         num_shards=4, num_streams=2, batches_per_stream=2, batch_size=128
     )
+    print("# --- quick layerwise crossover (sampling vs full-graph, modeled) ---")
+    lw_rows, lw_checks = bench_layerwise.run(
+        coverages=(0.1, 0.5, 1.0), batch_size=128, chunk_size=512
+    )
     return {
         "end2end": e2e,
         "multistream": {"rows": ms_rows, "checks": ms_checks},
         "request_latency": {"rows": rl_rows, "checks": rl_checks},
         "sharded": {"rows": sh_rows, "checks": sh_checks},
+        "layerwise": {"rows": lw_rows, "checks": lw_checks},
     }
 
 
@@ -212,6 +218,30 @@ def check_against(baseline: dict, current: dict) -> list[tuple[str, bool, str]]:
                 f"{cur_s} vs {base_s} (floor {sh_floor:.3f})",
             )
         )
+
+    # Layer-wise crossover gate: the crossover's existence and the
+    # full-coverage modeled ratio are byte-movement properties (the
+    # PCIe/HBM projection), machine-independent like every other modeled
+    # gate.  Baselines written before the layer-wise mode skip the gate.
+    base_lw = baseline.get("layerwise")
+    if base_lw is not None:
+        base_lw_checks = base_lw["checks"]
+        cur_lw_checks = current["layerwise"]["checks"]
+        for flag in ("crossover_exists", "layerwise_wins_full_coverage"):
+            ok = bool(cur_lw_checks.get(flag)) or not bool(base_lw_checks.get(flag, True))
+            results.append((f"lw/checks/{flag}", ok, str(cur_lw_checks.get(flag))))
+        base_r = base_lw_checks["layerwise_modeled_ratio_full_coverage"]
+        cur_r = cur_lw_checks["layerwise_modeled_ratio_full_coverage"]
+        # A hot baseline must not raise the bar above the >=1.0 acceptance
+        # criterion itself (the crossover existing at all).
+        lw_floor = min(1.0, base_r * (1 - MODELED_REL_TOL))
+        results.append(
+            (
+                "lw/checks/layerwise_modeled_ratio",
+                cur_r >= lw_floor,
+                f"{cur_r} vs {base_r} (floor {lw_floor:.3f})",
+            )
+        )
     return results
 
 
@@ -326,6 +356,9 @@ def main() -> None:
 
     print("# --- request-level serving: arrival traces, admission, tail latency (beyond-paper) ---")
     _, rl_checks = bench_multistream.run_request_latency()
+
+    print("# --- layer-wise full-graph vs sampling: coverage crossover (beyond-paper) ---")
+    _, lw_checks = bench_layerwise.run(batch_size=256, chunk_size=1024)
 
     print("# --- online cache refresh under seed-distribution drift (beyond-paper) ---")
     drift_rows, drift_checks = bench_drift.run(batches_per_phase=8, batch_size=256)
@@ -444,6 +477,14 @@ def main() -> None:
             "Request serving: EDF beats round-robin on burst p99 "
             f"(geomean {rl_checks['edf_vs_rr_p99_ratio_burst']:.2f}x)",
             rl_checks["edf_beats_rr_p99_burst"],
+        )
+    )
+    checks.append(
+        (
+            "Layerwise: sampled cost crosses the flat full-graph cost as coverage grows "
+            f"(full-coverage ratio {lw_checks['layerwise_modeled_ratio_full_coverage']:.2f}x, "
+            f"crossover at {lw_checks['crossover_coverage']:.2f})",
+            lw_checks["crossover_exists"] and lw_checks["layerwise_wins_full_coverage"],
         )
     )
     checks.append(

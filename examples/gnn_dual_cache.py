@@ -14,6 +14,7 @@ makes cache *sharing* the point of a dual-cache serving system.
     PYTHONPATH=src python examples/gnn_dual_cache.py
 """
 
+from repro.core.config import EngineConfig, ServeConfig
 from repro.graph import load_dataset
 from repro.runtime.gnn_engine import GNNInferenceEngine
 from repro.runtime.gnn_serve import MultiStreamServer, make_stream_batches
@@ -27,8 +28,8 @@ print(
 for budget in (250_000, 1_000_000, 4_000_000, 16_000_000):
     engine = GNNInferenceEngine(dataset, fanouts=(15, 10, 5), batch_size=256)
     pipe = engine.prepare("dci", total_cache_bytes=budget)
-    rep = engine.run(max_batches=6, pipeline_depth=1)
-    rep_pipe = engine.run(max_batches=6, pipeline_depth=2)
+    rep = engine.run(max_batches=6, config=EngineConfig(pipeline_depth=1))
+    rep_pipe = engine.run(max_batches=6, config=EngineConfig(pipeline_depth=2))
     a = pipe.caches.allocation
     print(
         f"{budget:12,d} {a.adj_bytes:10,d} {a.feat_bytes:10,d} "
@@ -50,7 +51,7 @@ stream_seeds = list(range(STREAMS))
 
 shared = GNNInferenceEngine(dataset, fanouts=(15, 10, 5), batch_size=256)
 shared.prepare("dci", total_cache_bytes=BUDGET, stream_seeds=stream_seeds)
-server = MultiStreamServer(shared, depth=2)
+server = MultiStreamServer(shared, config=ServeConfig(engine=EngineConfig(pipeline_depth=2)))
 for sid, queue in enumerate(queues):
     server.add_stream(queue, seed=stream_seeds[sid])
 rep = server.run()
@@ -59,7 +60,7 @@ private_hits = private_lookups = 0
 for sid, queue in enumerate(queues):
     eng = GNNInferenceEngine(dataset, fanouts=(15, 10, 5), batch_size=256, seed=stream_seeds[sid])
     eng.prepare("dci", total_cache_bytes=BUDGET // STREAMS)
-    r = eng.run(batches=queue, pipeline_depth=1)
+    r = eng.run(batches=queue, config=EngineConfig(pipeline_depth=1))
     private_hits, private_lookups = private_hits + r.feat_hits, private_lookups + r.feat_lookups
 
 print(f"\n{STREAMS} streams x {BATCHES} batches, total budget {BUDGET:,d} B:")

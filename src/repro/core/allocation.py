@@ -19,7 +19,9 @@ import dataclasses
 
 __all__ = [
     "CacheAllocation",
+    "LayerwiseAllocation",
     "allocate_capacity",
+    "allocate_layerwise_capacity",
     "available_budget",
     "reallocate_capacity",
     "shard_allocations",
@@ -112,6 +114,58 @@ def reallocate_capacity(
         base.total_bytes,
         adj_need_bytes=adj_need_bytes,
         feat_need_bytes=feat_need_bytes,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerwiseAllocation:
+    """Eq. 1's split re-targeted at the layer-wise mode's two caches.
+
+    In layer-wise full-graph inference the two device caches competing for
+    the budget are the layer-0 INPUT-FEATURE cache and the intermediate
+    EMBEDDING cache (layer-k outputs re-read as layer-k+1 inputs).  Only
+    one embedding cache is ever live at a time — each layer's store is
+    transient — so ``embed_bytes`` is the full per-layer embedding budget,
+    not a per-layer slice."""
+
+    total_bytes: int
+    feat_bytes: int  # layer-0 input-feature cache share
+    embed_bytes: int  # per-layer intermediate-embedding cache share
+    feat_fraction: float  # Σt_feat_gather / Σ(t_feat_gather + t_embed_gather)
+
+    def __post_init__(self):
+        assert self.feat_bytes + self.embed_bytes <= self.total_bytes + 1
+
+
+def allocate_layerwise_capacity(
+    feat_gather_times: list[float],
+    embed_gather_times: list[float],
+    total_bytes: int,
+    *,
+    feat_need_bytes: int | None = None,
+    embed_need_bytes: int | None = None,
+) -> LayerwiseAllocation:
+    """Eq. 1 over the layer-wise mode's probed chunk gather laps.
+
+    Same proportional-to-measured-stage-time split (and the same
+    saturation-aware spill) as :func:`allocate_capacity`, with the roles
+    re-mapped: the "sample" slot carries the layer-0 feature-gather laps,
+    the "feature" slot the intermediate embedding-gather laps.  The probe
+    chunks play presampling's part — a few chunks' synchronized gather
+    laps at each source's row width — so the cache that moves more bytes
+    per chunk gets the proportionally larger share."""
+    alloc = allocate_capacity(
+        feat_gather_times,
+        embed_gather_times,
+        total_bytes,
+        adj_need_bytes=feat_need_bytes,
+        feat_need_bytes=embed_need_bytes,
+    )
+    return LayerwiseAllocation(
+        total_bytes=alloc.total_bytes,
+        feat_bytes=alloc.adj_bytes,
+        embed_bytes=alloc.feat_bytes,
+        feat_fraction=alloc.sample_fraction,
     )
 
 

@@ -24,6 +24,7 @@ __all__ = [
     "FeatureStore",
     "FeatureRefreshStats",
     "PrefetchedMisses",
+    "build_embedding_cache",
     "build_feature_cache",
     "refresh_feature_cache",
 ]
@@ -445,6 +446,48 @@ def refresh_feature_cache(
         physical_rows=int(physical),
         budget_rows=int(budget_rows),
     )
+
+
+def build_embedding_cache(
+    table: np.ndarray,
+    access_counts: np.ndarray,
+    capacity_bytes: int,
+) -> FeatureStore:
+    """DCI's sort-free fill applied to layer-*k* output EMBEDDINGS.
+
+    The layer-wise executor (runtime/layerwise.py) spills each layer's
+    outputs to a host-side table and re-reads them as the next layer's
+    inputs; this builds the device cache those re-reads hit — the same
+    :class:`FeatureStore` machinery (``position_map`` lookup, two-source
+    ``gather``, row-block kernel route) as the input-feature cache, filled
+    by :func:`select_hot_rows` over the chunk access pattern.  Unlike the
+    presample-estimated feature counts, ``access_counts`` here is EXACT:
+    a node's embedding is read once as a chunk member plus once per
+    out-edge (``1 + bincount(row_index)``), known from the CSC alone.
+
+    Slots are id-ordered like :func:`build_feature_cache`, so the chunk
+    gathers' ascending-id runs hit contiguous hot-table rows — what the
+    row-block ``cached_gather`` kernel collapses to one DMA per run.  The
+    host mirrors are seeded from ``table`` directly (it already lives on
+    the host), so building a per-layer cache never re-downloads the spill
+    buffer.  A zero budget degrades to the cache-less store.
+    """
+    table = np.ascontiguousarray(table)
+    n, f = table.shape
+    row_bytes = f * table.dtype.itemsize
+    budget_rows = min(max(int(capacity_bytes) // row_bytes, 0), n)
+    hot = np.sort(select_hot_rows(access_counts, budget_rows))
+    position_map = np.full(n, -1, np.int32)
+    position_map[hot] = np.arange(hot.shape[0], dtype=np.int32)
+    hot_table = table[hot] if hot.shape[0] else np.zeros((1, f), table.dtype)
+    store = FeatureStore(
+        host_table=jnp.asarray(table),
+        hot_table=jnp.asarray(hot_table),
+        position_map=jnp.asarray(position_map),
+    )
+    object.__setattr__(store, "_host_np", table)
+    object.__setattr__(store, "_position_np", position_map)
+    return store
 
 
 def plain_feature_store(features: np.ndarray) -> FeatureStore:

@@ -198,19 +198,32 @@ def pow2_bucket(n: int, cap: int | None = None) -> int:
 
 
 def sample_neighbors(
-    key: jax.Array, g: DeviceGraph, seeds: jax.Array, fanout: int
+    key: jax.Array, g: DeviceGraph, seeds: jax.Array, fanout: int,
+    *, full_neighborhood: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Sample ``fanout`` in-neighbors per seed (with replacement).
 
     Returns ``(neighbors[S, fanout], hits[S, fanout], edge_slots[S, fanout])``
     where ``edge_slots`` are global positions ``col_ptr[v] + r`` used for
     visit counting during pre-sampling.
+
+    ``full_neighborhood=True`` (static) replaces the random draw with the
+    deterministic enumeration ``r = arange(fanout) % deg``: when a seed's
+    degree equals ``fanout`` every neighbor is taken exactly once, making
+    the sampled aggregate EXACTLY the full-neighborhood sum — the bridge
+    the layer-wise mode's equivalence tests rest on (higher degrees
+    truncate to the first ``fanout`` CSC slots, lower ones wrap).  The key
+    is ignored in this mode but kept in the signature so call sites and
+    RNG bookkeeping are mode-invariant.
     """
     seeds = seeds.astype(jnp.int32)
     start = g.col_ptr[seeds]  # [S]
     deg = g.col_ptr[seeds + 1] - start  # [S]
     safe_deg = jnp.maximum(deg, 1)
-    r = jax.random.randint(key, (seeds.shape[0], fanout), 0, safe_deg[:, None])
+    if full_neighborhood:
+        r = jnp.arange(fanout, dtype=jnp.int32)[None, :] % safe_deg[:, None]
+    else:
+        r = jax.random.randint(key, (seeds.shape[0], fanout), 0, safe_deg[:, None])
     edge_slots = start[:, None] + r
     host_nbr = g.row_index[edge_slots]
 
@@ -258,7 +271,7 @@ class BlockSample:
         return hits, jnp.asarray(total)
 
 
-@functools.partial(jax.jit, static_argnames=("fanouts", "dedup"))
+@functools.partial(jax.jit, static_argnames=("fanouts", "dedup", "full_neighborhood"))
 def sample_blocks(
     key: jax.Array,
     g: DeviceGraph,
@@ -266,6 +279,7 @@ def sample_blocks(
     fanouts: tuple[int, ...],
     dedup: bool = False,
     dedup_pad_id: jax.Array | int | None = None,
+    full_neighborhood: bool = False,
 ) -> BlockSample:
     """Multi-layer fan-out sampling producing GraphSAGE blocks.
 
@@ -281,6 +295,10 @@ def sample_blocks(
     ``dedup_pad_id`` is the (traced) known-cached pad id forwarded to
     :func:`dedup_frontier` — a plain int or scalar, never static, so a
     refresh-epoch pad change does not recompile the sampler.
+    ``full_neighborhood=True`` (static) enumerates neighbor slots
+    deterministically per layer instead of drawing them (see
+    :func:`sample_neighbors`); the per-layer key splits still happen so
+    frontier layouts and shapes are mode-invariant.
     """
     frontiers = [seeds.astype(jnp.int32)]
     hits_all = []
@@ -288,7 +306,9 @@ def sample_blocks(
     frontier = frontiers[0]
     for i, fanout in enumerate(reversed(fanouts)):
         key, sub = jax.random.split(key)
-        nbr, hit, slots = sample_neighbors(sub, g, frontier, fanout)
+        nbr, hit, slots = sample_neighbors(
+            sub, g, frontier, fanout, full_neighborhood=full_neighborhood
+        )
         frontier = jnp.concatenate([frontier, nbr.reshape(-1)])
         frontiers.append(frontier)
         hits_all.append(hit)

@@ -18,9 +18,10 @@ from __future__ import annotations
 import argparse
 import json
 
+from repro.core.config import INFERENCE_MODES, ServeConfig
 from repro.core.policies import ADMISSION_POLICIES, POLICIES
 from repro.graph import load_dataset
-from repro.runtime.cache_refresh import MODES as REFRESH_MODES, RefreshConfig
+from repro.runtime.cache_refresh import MODES as REFRESH_MODES
 from repro.runtime.gnn_engine import GNNInferenceEngine
 from repro.runtime.gnn_serve import MultiStreamServer, make_stream_batches
 from repro.runtime.request_queue import (
@@ -48,6 +49,23 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.004)
     ap.add_argument("--presample", type=int, default=8)
     ap.add_argument("--max-batches", type=int, default=None)
+    ap.add_argument(
+        "--mode",
+        default="sampling",
+        choices=INFERENCE_MODES,
+        help="'sampling' (default) = mini-batch neighborhood-sampled inference "
+        "over the test seeds; 'layerwise' = full-graph layer-wise scoring — "
+        "every layer over ALL nodes in node-range chunks, the DualCache "
+        "serving layer-0 features and an embedding cache serving "
+        "intermediate layer outputs (runtime/layerwise.py)",
+    )
+    ap.add_argument(
+        "--chunk-size",
+        type=int,
+        default=None,
+        help="node-range chunk for --mode layerwise (default 4096, clamped "
+        "to the graph)",
+    )
     ap.add_argument(
         "--pipeline-depth",
         type=_depth,
@@ -176,6 +194,9 @@ def main() -> None:
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
     if args.arrival == "burst":
         args.streams = 2  # the burst trace is one flash-crowd + one steady stream
+    # One typed config object carries every execution knob from here down —
+    # the engine, the servers, and the report echoes all read it.
+    cfg = ServeConfig.from_args(args)
     ds = load_dataset(args.dataset, scale=args.scale, max_nodes=200_000)
     eng = GNNInferenceEngine(
         ds,
@@ -187,23 +208,17 @@ def main() -> None:
     stream_seeds = [eng.seed + s for s in range(args.streams)] if args.streams > 1 else None
     eng.prepare(
         args.policy,
+        config=cfg.engine,
         total_cache_bytes=int(args.cache_mb * 1e6),
         n_presample=args.presample,
         stream_seeds=stream_seeds,
-        prefetch=args.prefetch,
-        use_kernel=args.use_kernel,
-        gather_buffers=args.gather_buffers,
-        dedup=args.dedup,
     )
-    refresh = (
-        RefreshConfig(
-            mode=args.refresh_mode,
-            interval_batches=args.refresh_interval,
-            miss_threshold=args.refresh_miss_threshold,
-        )
-        if args.refresh_mode != "off"
-        else None
-    )
+    if args.mode == "layerwise":
+        # Full-graph scoring is a whole-dataset pass — the serving
+        # front-ends (streams/arrival/mesh) are sampling-mode machinery.
+        rep = eng.run(config=cfg.engine)
+        print(json.dumps(rep.summary(), indent=1))
+        return
     if args.arrival != "none":
         per_stream = args.batches_per_stream
         if args.max_batches is not None:
@@ -243,13 +258,7 @@ def main() -> None:
                 slo_s=slo_s,
                 seed=eng.seed,
             )
-        server = RequestQueueServer(
-            eng,
-            depth=args.pipeline_depth,
-            max_inflight_per_stream=args.max_inflight,
-            refresh=refresh,
-            admission=args.admission,
-        )
+        server = RequestQueueServer(eng, config=cfg)
         for sid, requests in enumerate(trace):
             server.add_request_stream(requests, seed=eng.seed + sid)
         rep = server.run()
@@ -258,20 +267,9 @@ def main() -> None:
         if args.mesh > 0:
             from repro.runtime.sharded_serve import ShardedServer
 
-            server = ShardedServer(
-                eng,
-                num_shards=args.mesh,
-                depth=args.pipeline_depth,
-                max_inflight_per_stream=args.max_inflight,
-                refresh=refresh,
-            )
+            server = ShardedServer(eng, config=cfg)
         else:
-            server = MultiStreamServer(
-                eng,
-                depth=args.pipeline_depth,
-                max_inflight_per_stream=args.max_inflight,
-                refresh=refresh,
-            )
+            server = MultiStreamServer(eng, config=cfg)
         per_stream = args.batches_per_stream
         if args.max_batches is not None:
             per_stream = min(per_stream, args.max_batches)
@@ -288,7 +286,7 @@ def main() -> None:
         rep = server.run()
         print(json.dumps(rep.summary(), indent=1))
     else:
-        rep = eng.run(max_batches=args.max_batches, refresh=refresh)
+        rep = eng.run(config=cfg.engine, max_batches=args.max_batches)
         print(json.dumps(rep.summary(), indent=1))
 
 

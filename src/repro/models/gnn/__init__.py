@@ -1,3 +1,3 @@
-from repro.models.gnn.models import MODELS, forward, init_params
+from repro.models.gnn.models import MODELS, forward, forward_layer, init_params
 
-__all__ = ["MODELS", "forward", "init_params"]
+__all__ = ["MODELS", "forward", "forward_layer", "init_params"]

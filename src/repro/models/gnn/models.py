@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.models.gnn.layers import gcn_layer, sage_layer
 
-__all__ = ["init_params", "forward", "MODELS"]
+__all__ = ["init_params", "forward", "forward_layer", "MODELS"]
 
 MODELS = ("graphsage", "gcn")
 
@@ -93,3 +93,52 @@ def forward(
         if li < n_layers - 1:
             h = jax.nn.relu(h)
     return h  # [num_seeds, num_classes]
+
+
+@functools.partial(jax.jit, static_argnames=("model", "num_dst", "relu"))
+def forward_layer(
+    layer_params: dict,
+    self_feats: jax.Array,
+    nbr_feats: jax.Array,
+    segment_ids: jax.Array,
+    degrees: jax.Array,
+    *,
+    model: str,
+    num_dst: int,
+    relu: bool = False,
+) -> jax.Array:
+    """One GNN layer over EXACT neighbor aggregates — the layer-wise mode's
+    per-layer split of :func:`forward`.
+
+    Where :func:`forward` consumes a sampled ``[self | neighbors]`` frontier
+    (dense ``fanout`` draws per node), this consumes one node-range chunk's
+    full in-neighborhoods in CSC order: ``self_feats[num_dst, F]`` are the
+    chunk nodes' own rows, ``nbr_feats[E_pad, F]`` the rows of every
+    in-edge's source (pow2-padded; pad rows carry ``segment_ids ==
+    num_dst`` and land in a dropped extra segment), ``segment_ids`` each
+    edge row's destination within the chunk, and ``degrees[num_dst]`` the
+    true in-degrees.  Aggregation is a single ``segment_sum`` — the
+    ragged-neighborhood analogue of the sampled reshape+reduce.
+
+    With every degree equal to the layer's fanout and sampling enumerating
+    deterministically (``sample_neighbors(full_neighborhood=True)``), the
+    aggregate equals the sampled sum exactly, so an L-layer chain of these
+    is fp-identical to :func:`forward` on regular graphs
+    (tests/test_layerwise.py).  Zero-degree nodes aggregate nothing
+    (``agg = 0``) — the sampled path's self-loop stand-in has no
+    full-neighborhood analogue.
+
+    ``relu`` applies the inter-layer activation (every layer but the last),
+    so the chunk executor never re-reads the output just to activate it.
+    """
+    agg = jax.ops.segment_sum(nbr_feats, segment_ids, num_segments=num_dst + 1)[:num_dst]
+    if model == "graphsage":
+        h = (
+            self_feats @ layer_params["w_self"]
+            + agg @ layer_params["w_nbr"]
+            + layer_params["b"]
+        )
+    else:  # gcn: mean over {self} ∪ in-neighbors, single FC
+        h = ((self_feats + agg) / (degrees[:, None] + 1.0)) @ layer_params["w_self"]
+        h = h + layer_params["b"]
+    return jax.nn.relu(h) if relu else h

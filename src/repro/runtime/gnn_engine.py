@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.config import EngineConfig, coalesce
 from repro.core.policies import PreparedPipeline, prepare
 from repro.graph.datasets import SyntheticGraphDataset
 from repro.graph.sampling import pow2_bucket, sample_blocks
@@ -107,6 +108,10 @@ class InferenceReport:
     # the report — and every baseline comparison over it — unchanged):
     refresh_events: list = dataclasses.field(default_factory=list)
     epoch_hits: dict | None = None  # epoch -> per-epoch hit-rate summary
+    # The RESOLVED config the run actually executed with (every knob
+    # concrete, server-level overrides applied) — the single source the
+    # knob echo comes from, so it can never drift from execution.
+    config: EngineConfig | None = None
 
     @property
     def total_seconds(self) -> float:
@@ -150,13 +155,23 @@ class InferenceReport:
             fast_bw=fast_bw,
         )
 
+    def to_dict(self) -> dict:
+        """The report as one JSON-safe dict: the summary metrics plus the
+        resolved :class:`~repro.core.config.EngineConfig` echo.  Knobs are
+        read off ``config`` when present — NOT re-listed by hand — so a
+        server-level override (e.g. a per-stream depth) can never drift
+        from what actually executed."""
+        return self.summary()
+
     def summary(self) -> dict:
         out = {
             "policy": self.policy,
             "batches": self.num_batches,
-            "pipeline_depth": self.pipeline_depth,
-            "prefetch": self.prefetch,
-            "dedup": self.dedup,
+            "pipeline_depth": (
+                self.config.pipeline_depth if self.config is not None else self.pipeline_depth
+            ),
+            "prefetch": self.config.prefetch if self.config is not None else self.prefetch,
+            "dedup": self.config.dedup if self.config is not None else self.dedup,
             "sample_s": round(self.sample_seconds, 4),
             "prefetch_s": round(self.prefetch_seconds, 4),
             "feature_s": round(self.feature_seconds, 4),
@@ -167,6 +182,8 @@ class InferenceReport:
             "feat_hit_rate": round(self.feat_hit_rate, 4),
             "modeled_transfer_s": round(self.modeled_transfer_seconds(), 6),
         }
+        if self.config is not None:
+            out["config"] = self.config.to_dict()
         if self.dedup:
             out["unique_rows"] = self.unique_rows
             out["gathered_rows"] = self.gathered_rows
@@ -549,14 +566,15 @@ class GNNInferenceEngine:
         self,
         policy: str,
         *,
+        config: EngineConfig | None = None,
         total_cache_bytes: int = 0,
         n_presample: int = 8,
         pipeline_depth: int = 1,
         stream_seeds: list[int] | None = None,
-        prefetch: bool = False,
-        use_kernel: bool = False,
-        gather_buffers: int = 2,
-        dedup: bool = False,
+        prefetch: bool | None = None,
+        use_kernel: bool | None = None,
+        gather_buffers: int | None = None,
+        dedup: bool | None = None,
     ):
         # Presampling defaults to serial (depth=1): its per-stage times feed
         # Eq. 1, and the paper's split assumes fully synchronized stages.
@@ -564,9 +582,17 @@ class GNNInferenceEngine:
         # shifts the measured sample:feature ratio toward dispatch cost.
         # ``stream_seeds`` profiles the union workload of several request
         # streams (multi-stream serving) at the same total presample budget.
-        # ``prefetch`` / ``use_kernel`` / ``gather_buffers`` are recorded on
-        # the prepared pipeline as the default execution knobs for every
-        # run (and every serving stream) against it.
+        # ``config`` carries the gather knobs recorded on the prepared
+        # pipeline as the defaults for every run (and every serving stream)
+        # against it; the loose keyword forms are deprecated (coalesce).
+        cfg = coalesce(
+            config,
+            _context="GNNInferenceEngine.prepare",
+            prefetch=prefetch,
+            use_kernel=use_kernel,
+            gather_buffers=gather_buffers,
+            dedup=dedup,
+        )
         self.pipeline = prepare(
             policy,
             self.dataset,
@@ -577,10 +603,10 @@ class GNNInferenceEngine:
             seed=self.seed,
             pipeline_depth=pipeline_depth,
             stream_seeds=stream_seeds,
-            prefetch=prefetch,
-            use_kernel=use_kernel,
-            gather_buffers=gather_buffers,
-            dedup=dedup,
+            prefetch=bool(cfg.prefetch),
+            use_kernel=bool(cfg.use_kernel),
+            gather_buffers=2 if cfg.gather_buffers is None else cfg.gather_buffers,
+            dedup=bool(cfg.dedup),
         )
         return self.pipeline
 
@@ -809,6 +835,7 @@ class GNNInferenceEngine:
     def run(
         self,
         *,
+        config: EngineConfig | None = None,
         max_batches: int | None = None,
         warmup: bool = True,
         pipeline_depth: int | None = None,
@@ -819,46 +846,88 @@ class GNNInferenceEngine:
         gather_buffers: int | None = None,
         dedup: bool | None = None,
         refresh=None,
-    ) -> InferenceReport:
+    ):
         """Run inference over the dataset's test batches (or explicit seed
         ``batches``) and return the stage-time / hit-rate report.
 
+        ``config`` is the one knob object (:class:`~repro.core.config.
+        EngineConfig`): mode, executor window, the four gather knobs, the
+        layer-wise chunk size and the refresh trigger.  The loose keyword
+        forms below remain as a deprecated one-release shim — any passed
+        value merges over ``config`` via :func:`~repro.core.config.
+        coalesce`, bit-for-bit equivalent to passing the config directly
+        (tests/test_config.py).  Unset knobs default from the prepared
+        pipeline; outputs and hit accounting are identical under every
+        knob combination (equivalence-tested), only where the miss bytes
+        move (and therefore wall clock) changes.
+
+        ``config.mode="layerwise"`` dispatches to the chunked full-graph
+        executor (:func:`~repro.runtime.layerwise.run_layerwise`) —
+        scoring EVERY node in node-range chunks, layer by layer, with the
+        intermediate embeddings spilled host-side behind their own cache —
+        and returns its :class:`~repro.runtime.layerwise.LayerwiseReport`
+        instead (``batches``/``max_batches``/``refresh`` do not apply).
+
         ``batches`` overrides the dataset-derived schedule (and RAIN's
         ``batch_order``) — the serving layer and the equivalence tests use
-        it to run an exact per-stream batch list.  ``prefetch`` /
-        ``use_kernel`` / ``gather_buffers`` / ``dedup`` default from the
-        prepared pipeline; outputs and hit accounting are identical with
-        any combination (equivalence-tested), only where the miss bytes
-        move (and therefore wall clock) changes.
+        it to run an exact per-stream batch list.
 
         ``pipeline_depth`` additionally accepts ``"auto"`` (derive the
         window from a measured compute:prep probe, see
-        :meth:`resolve_pipeline_depth`).  ``refresh`` takes a
-        :class:`~repro.runtime.cache_refresh.RefreshConfig`: an interval
-        mode re-allocates and delta re-fills the caches every N retired
-        batches from live telemetry.  Outputs are bit-identical with
-        refresh on or off (refreshes move bytes, not values); hit
-        accounting then comes per epoch via ``report.epoch_hits``.  With
-        BOTH ``"auto"`` depth and refresh enabled, each refresh re-derives
-        the window from the refreshed stage laps and applies it to the
-        live executor (the warmup-time probe only seeds the initial
-        depth)."""
+        :meth:`resolve_pipeline_depth`; in layer-wise mode ``"auto"``
+        resolves to 2 — chunk prep is pure gather, one overlap slot hides
+        it).  ``refresh`` takes a
+        :class:`~repro.runtime.cache_refresh.RefreshConfig` (or set the
+        config's ``refresh_mode`` fields): an interval mode re-allocates
+        and delta re-fills the caches every N retired batches from live
+        telemetry.  Outputs are bit-identical with refresh on or off
+        (refreshes move bytes, not values); hit accounting then comes per
+        epoch via ``report.epoch_hits``.  With BOTH ``"auto"`` depth and
+        refresh enabled, each refresh re-derives the window from the
+        refreshed stage laps and applies it to the live executor (the
+        warmup-time probe only seeds the initial depth)."""
         if self.pipeline is None:
             raise RuntimeError("call prepare() first")
         pipe = self.pipeline
+        cfg = coalesce(
+            config,
+            _context="GNNInferenceEngine.run",
+            pipeline_depth=pipeline_depth,
+            prefetch=prefetch,
+            use_kernel=use_kernel,
+            gather_buffers=gather_buffers,
+            dedup=dedup,
+        )
+        if refresh is None:
+            refresh = cfg.refresh_config()
+        requested_depth = (
+            self.pipeline_depth if cfg.pipeline_depth is None else cfg.pipeline_depth
+        )
+        if cfg.mode == "layerwise":
+            from repro.runtime.layerwise import run_layerwise
+
+            depth = 2 if requested_depth == "auto" else int(requested_depth)
+            report = run_layerwise(
+                self.dataset,
+                pipe,
+                self.params,
+                model=self.model,
+                config=cfg.resolved(pipe, pipeline_depth=depth),
+            )
+            self.last_outputs = [report.outputs]
+            return report
         if batches is None:
             batches = self._batches(max_batches)
-        requested_depth = self.pipeline_depth if pipeline_depth is None else pipeline_depth
         depth = self.resolve_pipeline_depth(
-            pipeline_depth, seeds=batches[0] if batches else None
+            requested_depth, seeds=batches[0] if batches else None
         )
         if warmup:
             self.warmup(
                 batches[0],
-                prefetch=prefetch,
-                use_kernel=use_kernel,
-                gather_buffers=gather_buffers,
-                dedup=dedup,
+                prefetch=cfg.prefetch,
+                use_kernel=cfg.use_kernel,
+                gather_buffers=cfg.gather_buffers,
+                dedup=cfg.dedup,
             )
 
         # All cross-batch state (RNG stream, RAIN's reuse map, counters)
@@ -872,10 +941,10 @@ class GNNInferenceEngine:
             num_nodes=self.dataset.num_nodes,
             key=jax.random.PRNGKey(self.seed + 1),
             collect_outputs=collect_outputs,
-            prefetch=prefetch,
-            use_kernel=use_kernel,
-            gather_buffers=gather_buffers,
-            dedup=dedup,
+            prefetch=cfg.prefetch,
+            use_kernel=cfg.use_kernel,
+            gather_buffers=cfg.gather_buffers,
+            dedup=cfg.dedup,
         )
         clock = StageClock(overlap=depth > 1)
         manager = None
@@ -925,6 +994,15 @@ class GNNInferenceEngine:
         executor.run(batches)
         self.last_outputs = rt.outputs
 
+        # The config echoed by the report is the RESOLVED one — every knob
+        # read back off the runtime that executed (rt.dedup already folds
+        # in RAIN's reuse exclusion), so the echo cannot drift.
+        resolved_cfg = cfg.resolved(pipe, pipeline_depth=depth).replace(
+            prefetch=rt.prefetch,
+            use_kernel=rt.use_kernel,
+            gather_buffers=rt.gather_buffers,
+            dedup=rt.dedup,
+        )
         return InferenceReport(
             policy=pipe.name,
             num_batches=len(batches),
@@ -946,4 +1024,5 @@ class GNNInferenceEngine:
             gathered_rows=rt.gathered_rows,
             refresh_events=list(manager.events) if manager is not None else [],
             epoch_hits=rt.epoch_hit_rates() if manager is not None else None,
+            config=resolved_cfg,
         )

@@ -47,6 +47,7 @@ from typing import Sequence
 import jax
 import numpy as np
 
+from repro.core.config import EngineConfig, ServeConfig, coalesce
 from repro.runtime.gnn_engine import (
     GNNInferenceEngine,
     PCIE4_BW,
@@ -193,6 +194,10 @@ class ServeReport:
     # allocation accounting; single-device runs leave the defaults.
     num_shards: int = 1
     shards: list | None = None
+    # The RESOLVED ServeConfig the serve loop actually ran with (knobs and
+    # caps read back off the live server at report time, so the echo
+    # reflects e.g. a refresh-resized auto window, never the request).
+    config: ServeConfig | None = None
 
     @property
     def total_batches(self) -> int:
@@ -285,6 +290,8 @@ class ServeReport:
             "p99_latency_s": round(self.p99_latency_s, 4),
             "per_stream": [s.summary() for s in self.streams],
         }
+        if self.config is not None:
+            out["config"] = self.config.to_dict()
         if self.admission is not None:
             out["admission"] = self.admission
             out["requests_shed"] = self.requests_shed
@@ -334,7 +341,8 @@ class MultiStreamServer:
         self,
         engine: GNNInferenceEngine,
         *,
-        depth: int | str = 2,
+        config: ServeConfig | None = None,
+        depth: int | str | None = None,
         max_inflight_per_stream: int | None = None,
         prefetch: bool | None = None,
         use_kernel: bool | None = None,
@@ -344,6 +352,31 @@ class MultiStreamServer:
     ):
         if engine.pipeline is None:
             raise RuntimeError("prepare() the engine before constructing the server")
+        # ``config`` is the one knob object (ServeConfig wrapping an
+        # EngineConfig); the loose keywords remain as a deprecated
+        # one-release shim — any passed value merges over the config
+        # (coalesce), bit-for-bit equivalent to passing it directly.
+        cfg = coalesce(
+            config,
+            ServeConfig,
+            _context=type(self).__name__,
+            max_inflight=max_inflight_per_stream,
+        )
+        if any(v is not None for v in (depth, prefetch, use_kernel, gather_buffers, dedup)):
+            cfg = cfg.replace(
+                engine=coalesce(
+                    cfg.engine,
+                    EngineConfig,
+                    _context=type(self).__name__,
+                    pipeline_depth=depth,
+                    prefetch=prefetch,
+                    use_kernel=use_kernel,
+                    gather_buffers=gather_buffers,
+                    dedup=dedup,
+                )
+            )
+        self.config = cfg
+        depth = 2 if cfg.engine.pipeline_depth is None else cfg.engine.pipeline_depth
         self._auto_depth = depth == "auto"
         if depth == "auto":
             depth = engine.resolve_pipeline_depth("auto")
@@ -352,6 +385,8 @@ class MultiStreamServer:
         self.engine = engine
         self.depth = depth
         pipe = engine.pipeline
+        if refresh is None:
+            refresh = cfg.engine.refresh_config()
         self.refresh_manager = None
         if refresh is not None and refresh.enabled:
             from repro.runtime.cache_refresh import CacheRefreshManager
@@ -369,19 +404,22 @@ class MultiStreamServer:
         self._started = False  # join/leave events fire only once serving began
         self._executor = None  # live executor during run() (auto-depth hook)
         self._serve_t0 = None  # perf_counter at serve start (arrival clock origin)
-        self.prefetch = pipe.prefetch if prefetch is None else prefetch
-        self.use_kernel = pipe.use_kernel if use_kernel is None else use_kernel
-        self.gather_buffers = pipe.gather_buffers if gather_buffers is None else gather_buffers
-        self.dedup = (pipe.dedup if dedup is None else dedup) and not pipe.reuse_prev_batch
+        eng_cfg = cfg.engine
+        self.prefetch = pipe.prefetch if eng_cfg.prefetch is None else eng_cfg.prefetch
+        self.use_kernel = pipe.use_kernel if eng_cfg.use_kernel is None else eng_cfg.use_kernel
+        self.gather_buffers = (
+            pipe.gather_buffers if eng_cfg.gather_buffers is None else eng_cfg.gather_buffers
+        )
+        self.dedup = (
+            pipe.dedup if eng_cfg.dedup is None else eng_cfg.dedup
+        ) and not pipe.reuse_prev_batch
         # Remember whether the cap was explicit: a defaulted cap follows
         # the window when refresh-aware auto depth resizes it mid-run (a
         # deeper window is useless if admission still stops at the old
         # depth), an explicit cap is the caller's backpressure contract
         # and stays put.
-        self._explicit_inflight_cap = max_inflight_per_stream is not None
-        self.max_inflight = (
-            max_inflight_per_stream if max_inflight_per_stream is not None else depth
-        )
+        self._explicit_inflight_cap = cfg.max_inflight is not None
+        self.max_inflight = cfg.max_inflight if cfg.max_inflight is not None else depth
         if self.max_inflight < 1:
             raise ValueError("max_inflight_per_stream must be >= 1")
         self.streams: list[StreamState] = []
@@ -583,6 +621,22 @@ class MultiStreamServer:
         self._executor = None
         return self._serve_report(wall)
 
+    def _resolved_config(self) -> ServeConfig:
+        """The ServeConfig the serve loop ACTUALLY ran with, read back off
+        the live server at report time — after auto-depth resolution (and
+        any refresh-driven resize), knob fallbacks to the prepared
+        pipeline, and the in-flight cap's follow-the-window default."""
+        return self.config.replace(
+            max_inflight=self.max_inflight,
+            engine=self.config.engine.replace(
+                pipeline_depth=self.depth,
+                prefetch=self.prefetch,
+                use_kernel=self.use_kernel,
+                gather_buffers=self.gather_buffers,
+                dedup=self.dedup,
+            ),
+        )
+
     def _serve_report(self, wall: float) -> ServeReport:
         pooled: list[float] = []
         for s in self.streams:
@@ -605,6 +659,7 @@ class MultiStreamServer:
             p50_latency_s=p50,
             p95_latency_s=p95,
             p99_latency_s=p99,
+            config=self._resolved_config(),
         )
 
     def _aggregate_epochs(self) -> dict[int, dict]:

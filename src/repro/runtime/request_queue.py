@@ -263,8 +263,13 @@ class RequestQueueServer(MultiStreamServer):
     ``"slo"`` (EDF + shed), a policy class, or an instance.
     """
 
-    def __init__(self, engine, *, admission="round-robin", **kw):
+    def __init__(self, engine, *, admission=None, **kw):
         super().__init__(engine, **kw)
+        if admission is None:
+            # ``admission`` stays a live keyword (it accepts policy classes
+            # and instances, which ServeConfig's string field cannot carry);
+            # when omitted it resolves from the coalesced ServeConfig.
+            admission = self.config.admission
         if isinstance(admission, str):
             try:
                 admission = ADMISSION_POLICIES[admission]
@@ -438,6 +443,11 @@ class RequestQueueServer(MultiStreamServer):
         rep.deadline_total = len(with_deadline)
         rep.deadline_hits = sum(1 for r in with_deadline if r.deadline_met)
         return rep
+
+    def _resolved_config(self):
+        # Echo the policy actually installed (a class/instance passed via
+        # the ``admission`` keyword may differ from the config string).
+        return super()._resolved_config().replace(admission=self.policy.name)
 
     def _serve_report(self, wall: float) -> ServeReport:
         rep = super()._serve_report(wall)

@@ -208,6 +208,11 @@ class ShardedServer(MultiStreamServer):
 
     def __init__(self, engine, *, num_shards: int | None = None, mesh=None, **kwargs):
         super().__init__(engine, **kwargs)
+        if num_shards is None and self.config.mesh:
+            # ServeConfig.mesh is the requested shard count (0 = derive
+            # from the device mesh); the ``mesh`` keyword here is the JAX
+            # mesh object itself and stays a live parameter.
+            num_shards = self.config.mesh
         if mesh is None:
             mesh = make_serving_mesh(num_shards or 1)
         devices = serving_devices(mesh)
@@ -358,6 +363,11 @@ class ShardedServer(MultiStreamServer):
                 }
             out.append(entry)
         return out
+
+    def _resolved_config(self):
+        # Echo the shard count actually built (mesh=0 requests derive it
+        # from the device mesh, so the request alone doesn't say).
+        return super()._resolved_config().replace(mesh=self.num_shards)
 
     def _serve_report(self, wall: float) -> ServeReport:
         rep = super()._serve_report(wall)

@@ -1,0 +1,346 @@
+"""Typed config API (core/config.py): round-trips, validation, coalesce
+shim semantics, and bit-for-bit equivalence of the ``config=`` path against
+the deprecated loose-kwarg path.
+
+The equivalence tests share ONE prepared pipeline between the legacy-kwarg
+engine and the config engine (the tests/test_pipeline_executor.py pattern):
+preparation measures stage wall times for the Eq. 1 split, so separately
+prepared engines can land different cache contents — sharing the pipeline
+is what makes "bit-for-bit" a meaningful claim about the call styles
+rather than about cache luck.
+"""
+
+import argparse
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.config import (
+    DEFAULT_CHUNK_SIZE,
+    INFERENCE_MODES,
+    REFRESH_MODES,
+    EngineConfig,
+    ServeConfig,
+    coalesce,
+)
+from repro.runtime import cache_refresh
+from repro.runtime.gnn_engine import GNNInferenceEngine
+from repro.runtime.gnn_serve import MultiStreamServer, make_stream_batches
+
+FANOUTS = (3, 2)
+BATCH = 64
+KW = dict(total_cache_bytes=200_000, n_presample=2)
+
+
+def _paired_engines(dataset, policy="dci"):
+    """Legacy-kwarg engine and config engine over the SAME prepared pipeline."""
+    legacy = GNNInferenceEngine(dataset, fanouts=FANOUTS, batch_size=BATCH)
+    legacy.prepare(policy, **KW)
+    cfg_eng = GNNInferenceEngine(
+        dataset, fanouts=FANOUTS, batch_size=BATCH, params=legacy.params
+    )
+    cfg_eng.pipeline = legacy.pipeline
+    return legacy, cfg_eng
+
+
+# --------------------------------------------------------------- round-trips
+
+
+def test_refresh_modes_mirror_runtime():
+    # core duplicates the runtime tuple to stay import-cycle-free; this is
+    # the tripwire if either side ever grows a mode alone.
+    assert REFRESH_MODES == tuple(cache_refresh.MODES)
+
+
+def test_engine_config_roundtrip():
+    cfg = EngineConfig(
+        mode="layerwise",
+        pipeline_depth=3,
+        prefetch=True,
+        use_kernel=False,
+        gather_buffers=1,
+        dedup=True,
+        chunk_size=77,
+        refresh_mode="interval",
+        refresh_interval=3,
+        refresh_miss_threshold=0.4,
+    )
+    assert EngineConfig.from_dict(cfg.to_dict()) == cfg
+    # unknown keys are ignored (reports may grow fields the config lacks)
+    assert EngineConfig.from_dict({**cfg.to_dict(), "junk": 1}) == cfg
+    # defaults round-trip too (all-None knobs survive)
+    assert EngineConfig.from_dict(EngineConfig().to_dict()) == EngineConfig()
+
+
+def test_serve_config_roundtrip():
+    cfg = ServeConfig(
+        engine=EngineConfig(pipeline_depth="auto", dedup=True),
+        max_inflight=3,
+        admission="edf",
+        slo_ms=25.0,
+        arrival="poisson",
+        mean_interarrival_ms=10.0,
+        mesh=2,
+    )
+    back = ServeConfig.from_dict(cfg.to_dict())
+    assert back == cfg
+    assert isinstance(back.engine, EngineConfig)
+
+
+def test_from_args_parity():
+    # The exact namespace launch/infer_gnn.py hands over: every config
+    # field must be pulled from its arg, none silently defaulted.
+    ns = argparse.Namespace(
+        mode="layerwise",
+        pipeline_depth="auto",
+        prefetch=True,
+        use_kernel=True,
+        gather_buffers=1,
+        dedup=True,
+        chunk_size=123,
+        refresh_mode="interval",
+        refresh_interval=5,
+        refresh_miss_threshold=0.2,
+        max_inflight=4,
+        admission="slo",
+        slo_ms=30.0,
+        arrival="burst",
+        mean_interarrival_ms=5.0,
+        mesh=2,
+    )
+    cfg = ServeConfig.from_args(ns)
+    assert cfg.engine == EngineConfig(
+        mode="layerwise",
+        pipeline_depth="auto",
+        prefetch=True,
+        use_kernel=True,
+        gather_buffers=1,
+        dedup=True,
+        chunk_size=123,
+        refresh_mode="interval",
+        refresh_interval=5,
+        refresh_miss_threshold=0.2,
+    )
+    assert (cfg.max_inflight, cfg.admission, cfg.slo_ms) == (4, "slo", 30.0)
+    assert (cfg.arrival, cfg.mean_interarrival_ms, cfg.mesh) == ("burst", 5.0, 2)
+    assert ServeConfig.from_dict(cfg.to_dict()) == cfg
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        dict(mode="bogus"),
+        dict(refresh_mode="bogus"),
+        dict(pipeline_depth=0),
+        dict(gather_buffers=0),
+        dict(chunk_size=0),
+    ],
+)
+def test_engine_config_validation(kw):
+    with pytest.raises(ValueError):
+        EngineConfig(**kw)
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [dict(max_inflight=0), dict(mesh=-1), dict(arrival="sometimes")],
+)
+def test_serve_config_validation(kw):
+    with pytest.raises(ValueError):
+        ServeConfig(**kw)
+
+
+def test_auto_depth_allowed():
+    assert EngineConfig(pipeline_depth="auto").pipeline_depth == "auto"
+
+
+def test_modes_are_the_documented_pair():
+    assert INFERENCE_MODES == ("sampling", "layerwise")
+
+
+def test_refresh_config_build():
+    assert EngineConfig().refresh_config() is None
+    built = EngineConfig(
+        refresh_mode="interval", refresh_interval=4, refresh_miss_threshold=0.25
+    ).refresh_config()
+    assert built == cache_refresh.RefreshConfig(
+        mode="interval", interval_batches=4, miss_threshold=0.25
+    )
+    assert built.enabled
+
+
+def test_resolved_fills_every_none():
+    class _Pipe:
+        prefetch = True
+        use_kernel = False
+        gather_buffers = 1
+        dedup = True
+
+    r = EngineConfig().resolved(_Pipe(), pipeline_depth=2)
+    assert r == EngineConfig(
+        pipeline_depth=2,
+        prefetch=True,
+        use_kernel=False,
+        gather_buffers=1,
+        dedup=True,
+        chunk_size=DEFAULT_CHUNK_SIZE,
+    )
+    # explicit knobs beat the pipeline defaults
+    explicit = EngineConfig(prefetch=False, chunk_size=9).resolved(_Pipe(), pipeline_depth=1)
+    assert (explicit.prefetch, explicit.chunk_size) == (False, 9)
+
+
+# ----------------------------------------------------------------- coalesce
+
+
+def test_coalesce_no_legacy_no_warning():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert coalesce(None) == EngineConfig()
+        cfg = EngineConfig(prefetch=True)
+        # None legacy values mean "not specified" — ignored silently
+        assert coalesce(cfg, prefetch=None, dedup=None) == cfg
+
+
+def test_coalesce_merges_and_warns():
+    with pytest.warns(DeprecationWarning, match="dedup, prefetch"):
+        merged = coalesce(EngineConfig(use_kernel=True), prefetch=True, dedup=False)
+    assert merged == EngineConfig(use_kernel=True, prefetch=True, dedup=False)
+
+
+def test_coalesce_serve_level():
+    with pytest.warns(DeprecationWarning, match="MultiStreamServer"):
+        merged = coalesce(
+            ServeConfig(), ServeConfig, _context="MultiStreamServer", max_inflight=3
+        )
+    assert merged == ServeConfig(max_inflight=3)
+
+
+def test_coalesce_rejects_wrong_config_type():
+    with pytest.raises(TypeError):
+        coalesce(ServeConfig(), EngineConfig)
+    with pytest.raises(TypeError):
+        coalesce(EngineConfig(), ServeConfig)
+
+
+# --------------------------------------------- shim bit-for-bit equivalence
+
+
+@pytest.mark.parametrize(
+    "dedup,prefetch,refresh_on",
+    [
+        (False, False, False),
+        (True, False, False),
+        (False, True, False),
+        (True, True, False),
+        (False, False, True),
+        (True, True, True),
+    ],
+)
+def test_run_shim_equivalence(small_dataset, dedup, prefetch, refresh_on):
+    """engine.run(loose kwargs) ≡ engine.run(config=EngineConfig(...)) on a
+    shared prepared pipeline, across the dedup × prefetch × refresh grid."""
+    legacy_eng, cfg_eng = _paired_engines(small_dataset)
+    legacy_refresh = (
+        cache_refresh.RefreshConfig(mode="interval", interval_batches=2)
+        if refresh_on
+        else None
+    )
+    with pytest.warns(DeprecationWarning, match="GNNInferenceEngine.run"):
+        r1 = legacy_eng.run(
+            max_batches=4,
+            pipeline_depth=2,
+            dedup=dedup,
+            prefetch=prefetch,
+            refresh=legacy_refresh,
+            collect_outputs=True,
+        )
+    o1 = legacy_eng.last_outputs
+    refresh_fields = (
+        dict(refresh_mode="interval", refresh_interval=2) if refresh_on else {}
+    )
+    cfg = EngineConfig(pipeline_depth=2, dedup=dedup, prefetch=prefetch, **refresh_fields)
+    r2 = cfg_eng.run(max_batches=4, config=cfg, collect_outputs=True)
+    o2 = cfg_eng.last_outputs
+
+    assert r1.num_batches == r2.num_batches
+    assert len(o1) == len(o2) == r1.num_batches
+    for a, b in zip(o1, o2):
+        np.testing.assert_array_equal(a, b)
+    if refresh_on:
+        # The first run's refresh re-fills the SHARED caches in place, so
+        # hit counters are per-epoch quantities, not comparable across the
+        # two runs — but the interval trigger itself is deterministic.
+        assert len(r1.refresh_events) == len(r2.refresh_events) > 0
+    else:
+        assert (r1.feat_hits, r1.feat_lookups) == (r2.feat_hits, r2.feat_lookups)
+        assert (r1.adj_hits, r1.adj_lookups) == (r2.adj_hits, r2.adj_lookups)
+    # Both reports echo the same resolved knobs.  Refresh fields are
+    # normalized out: the legacy path hands the runtime RefreshConfig
+    # object straight to run(), so only the config path records the
+    # trigger in the echo.
+    norm = dict(refresh_mode="off", refresh_interval=8, refresh_miss_threshold=None)
+    assert r1.config.replace(**norm) == r2.config.replace(**norm)
+    assert r1.config.pipeline_depth == 2
+    assert (r1.config.dedup, r1.config.prefetch) == (dedup, prefetch)
+
+
+def test_serve_shim_equivalence(small_dataset):
+    """MultiStreamServer(loose kwargs) ≡ MultiStreamServer(config=...) over
+    one shared engine+pipeline: identical per-stream outputs, hit counters,
+    and resolved-config echo."""
+    eng = GNNInferenceEngine(small_dataset, fanouts=FANOUTS, batch_size=BATCH)
+    eng.prepare("dci", stream_seeds=[eng.seed, eng.seed + 1], **KW)
+    queues = make_stream_batches(
+        small_dataset, num_streams=2, batches_per_stream=3, batch_size=BATCH, seed=eng.seed
+    )
+
+    def _serve(server):
+        states = [
+            server.add_stream(q, seed=eng.seed + sid, collect_outputs=True)
+            for sid, q in enumerate(queues)
+        ]
+        rep = server.run()
+        return rep, [s.runtime.outputs for s in states]
+
+    with pytest.warns(DeprecationWarning, match="MultiStreamServer"):
+        legacy = MultiStreamServer(
+            eng, depth=2, prefetch=True, dedup=True, max_inflight_per_stream=2
+        )
+    r1, outs1 = _serve(legacy)
+    cfg_server = MultiStreamServer(
+        eng,
+        config=ServeConfig(
+            engine=EngineConfig(pipeline_depth=2, prefetch=True, dedup=True),
+            max_inflight=2,
+        ),
+    )
+    r2, outs2 = _serve(cfg_server)
+
+    for s1, s2 in zip(outs1, outs2):
+        assert len(s1) == len(s2) == 3
+        for a, b in zip(s1, s2):
+            np.testing.assert_array_equal(a, b)
+    assert (r1.feat_hits, r1.feat_lookups) == (r2.feat_hits, r2.feat_lookups)
+    assert legacy._resolved_config() == cfg_server._resolved_config()
+    assert r1.config == r2.config
+    assert r1.config.max_inflight == 2
+    assert r1.config.engine.pipeline_depth == 2
+    # the echo lands in the JSON summary both ways
+    assert r1.summary()["config"] == r2.summary()["config"]
+
+
+def test_report_echoes_resolved_config(small_dataset):
+    """Satellite fix: the report's knob echo is the RESOLVED config the run
+    executed with, not the knobs the constructor happened to see."""
+    eng = GNNInferenceEngine(small_dataset, fanouts=FANOUTS, batch_size=BATCH)
+    eng.prepare("dci", **KW)
+    rep = eng.run(max_batches=2, config=EngineConfig(pipeline_depth=2, prefetch=True))
+    echo = rep.summary()["config"]
+    assert echo["pipeline_depth"] == 2
+    assert echo["prefetch"] is True
+    assert echo["mode"] == "sampling"
+    # every inheritable knob is concrete in the echo — None never leaks
+    for knob in ("prefetch", "use_kernel", "gather_buffers", "dedup", "chunk_size"):
+        assert echo[knob] is not None
