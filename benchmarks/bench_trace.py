@@ -1,0 +1,106 @@
+"""Tracing overhead gate (beyond-paper observability layer).
+
+Two budgets, both measured inside ONE process so the comparison never
+crosses a machine boundary:
+
+  * disabled path — a run handed no tracer goes through the shared
+    ``NULL_TRACER`` no-op object.  We microbenchmark the no-op span
+    enter/exit, multiply by the span count an *enabled* run of the same
+    workload actually emits, and express that as a fraction of the
+    untraced run's wall clock: the modeled cost of the null path must
+    stay under 1% (in practice it is parts-per-million).
+  * enabled path — the same engine/workload run back-to-back untraced
+    then traced (+ a metrics registry); the traced wall clock must stay
+    within 5% of the untraced one, and the outputs must be bit-for-bit
+    identical (the trace only reads wall clocks and appends to host
+    lists).
+
+Both checks feed the committed-baseline regression gate
+(``benchmarks/run.py --check-against``): the booleans must stay true,
+and the measured ratios are snapshotted for drift visibility.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, make_engine
+from repro.core.config import EngineConfig
+from repro.core.trace import NULL_TRACER, MetricsRegistry, Tracer
+
+DISABLED_BUDGET = 0.01  # modeled null-path cost as a fraction of run time
+ENABLED_BUDGET = 1.05  # traced/untraced wall-clock ratio ceiling
+
+
+def _null_span_cost_us(iters: int = 50_000) -> float:
+    """Per-call cost of the NullTracer span enter/exit pair, in us."""
+    span = NULL_TRACER.span  # the exact attribute the hot loops touch
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        with span("stage", lane="slot 0", args=None):
+            pass
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(*, batch_size: int = 256, max_batches: int = 6):
+    """Measure disabled-path and enabled-path tracing overhead."""
+    eng = make_engine("ogbn-products", batch_size=batch_size)
+    eng.prepare("dci", total_cache_bytes=2_000_000)
+    cfg = EngineConfig(pipeline_depth=2)
+    eng.run(max_batches=2, config=cfg)  # compile outside the timed windows
+
+    kw = dict(max_batches=max_batches, config=cfg, collect_outputs=True)
+    t0 = time.perf_counter()
+    eng.run(**kw)
+    t_off = time.perf_counter() - t0
+    out_off = [np.asarray(o) for o in eng.last_outputs]
+
+    tracer = Tracer()
+    metrics = MetricsRegistry()
+    t0 = time.perf_counter()
+    eng.run(**kw, tracer=tracer, metrics=metrics)
+    t_on = time.perf_counter() - t0
+    out_on = [np.asarray(o) for o in eng.last_outputs]
+
+    # One more untraced run bounds same-session noise: the traced run is
+    # gated against the *best* untraced sample, tightening the comparison
+    # on jittery shared runners.
+    t0 = time.perf_counter()
+    eng.run(**kw)
+    t_off = min(t_off, time.perf_counter() - t0)
+
+    n_spans = sum(1 for e in tracer.events if e["ph"] == "X")
+    span_cost_us = _null_span_cost_us()
+    disabled_frac = (span_cost_us * 1e-6 * n_spans) / max(t_off, 1e-9)
+    enabled_ratio = t_on / max(t_off, 1e-9)
+    outputs_identical = len(out_off) == len(out_on) and all(
+        np.array_equal(a, b) for a, b in zip(out_off, out_on)
+    )
+
+    rows = [
+        {
+            "null_span_cost_us": span_cost_us,
+            "n_spans": n_spans,
+            "t_untraced_s": t_off,
+            "t_traced_s": t_on,
+            "disabled_modeled_frac": disabled_frac,
+            "enabled_ratio": enabled_ratio,
+        }
+    ]
+    checks = {
+        "trace_disabled_under_1pct": disabled_frac < DISABLED_BUDGET,
+        "trace_enabled_within_5pct": enabled_ratio <= ENABLED_BUDGET,
+        "trace_outputs_identical": bool(outputs_identical),
+        "trace_disabled_modeled_frac": disabled_frac,
+        "trace_enabled_ratio": enabled_ratio,
+    }
+    emit(
+        "trace/overhead",
+        t_on * 1e6 / max_batches,
+        f"null_span={span_cost_us:.3f}us;spans={n_spans};"
+        f"disabled_frac={disabled_frac:.6f};enabled_ratio={enabled_ratio:.3f};"
+        f"identical={outputs_identical}",
+    )
+    return rows, checks

@@ -1,0 +1,124 @@
+"""Summarize (and gate on) a Chrome trace written by ``infer_gnn --trace``.
+
+Prints per-lane utilization, per-stage time, the pipeline overlap
+fraction (how busy slot lanes are with >1 batch in flight — 0.0 for a
+serial depth-1 run, > 0 whenever overlap actually happened), top spans,
+and flow/counter inventories.  With gating flags it doubles as a CI
+check over the trace's *structure*:
+
+    python scripts/trace_summary.py out.json                 # human summary
+    python scripts/trace_summary.py out.json --json          # machine summary
+    python scripts/trace_summary.py out.json --strict        # schema gate
+    python scripts/trace_summary.py out.json --strict \\
+        --min-overlap 0.01 --require-flows --require-span refresh
+
+Exit status is nonzero when any requested gate fails:
+
+  --strict            every event passes repro.core.trace.validate_trace
+                      (ph/ts/pid/tid present, X spans carry dur >= 0,
+                      every flow id has exactly one start and one end)
+  --min-overlap F     overlap_fraction >= F (use with pipeline depth > 1)
+  --max-overlap F     overlap_fraction <= F (use 0 for a depth-1 run)
+  --require-flows     at least one complete flow (enqueue -> retire link)
+  --require-span N    at least one span named N (repeatable; e.g.
+                      ``--require-span refresh --require-span exchange``)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.core.trace import summarize_trace, validate_trace  # noqa: E402
+
+
+def _fmt_ms(v: float) -> str:
+    return f"{v:10.2f} ms"
+
+
+def render(summary: dict) -> str:
+    lines: list[str] = []
+    lines.append(f"trace extent      {_fmt_ms(summary['extent_ms'])}")
+    lines.append(f"events            {summary['n_events']:6d}   flows {summary['n_flows']}")
+    lines.append(f"overlap fraction  {summary['overlap_fraction']:10.3f}")
+    lines.append("")
+    lines.append("lane                     busy          util   spans")
+    for name, lane in summary["lanes"].items():
+        lines.append(
+            f"{name:20s} {_fmt_ms(lane['busy_ms'])}   {lane['utilization']:6.1%}   {lane['spans']:5d}"
+        )
+    lines.append("")
+    lines.append("stage                   total   count        max")
+    for name, st in summary["stages"].items():
+        lines.append(
+            f"{name:20s} {st['total_ms']:8.2f}   {st['count']:5d}   {st['max_ms']:8.2f}"
+        )
+    if summary["top_spans"]:
+        lines.append("")
+        lines.append(f"top {len(summary['top_spans'])} spans")
+        for sp in summary["top_spans"]:
+            lines.append(f"  {sp['dur_ms']:8.2f} ms  {sp['lane']:12s}  {sp['name']}")
+    if summary["counters"]:
+        lines.append("")
+        lines.append("counters: " + ", ".join(summary["counters"]))
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace JSON written by infer_gnn --trace")
+    ap.add_argument("--json", action="store_true", help="print the summary as JSON")
+    ap.add_argument("--top", type=int, default=5, help="top spans to list (default 5)")
+    ap.add_argument("--strict", action="store_true", help="fail on any schema violation")
+    ap.add_argument("--min-overlap", type=float, default=None)
+    ap.add_argument("--max-overlap", type=float, default=None)
+    ap.add_argument("--require-flows", action="store_true")
+    ap.add_argument(
+        "--require-span",
+        action="append",
+        default=[],
+        metavar="NAME",
+        help="require at least one span with this name (repeatable)",
+    )
+    args = ap.parse_args(argv)
+
+    with open(args.trace, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    events = doc["traceEvents"] if isinstance(doc, dict) else doc
+
+    failures: list[str] = []
+    if args.strict:
+        for err in validate_trace(events):
+            failures.append(f"schema: {err}")
+
+    summary = summarize_trace(events, top=args.top)
+    if args.min_overlap is not None and summary["overlap_fraction"] < args.min_overlap:
+        failures.append(
+            f"overlap_fraction {summary['overlap_fraction']:.4f} < --min-overlap {args.min_overlap}"
+        )
+    if args.max_overlap is not None and summary["overlap_fraction"] > args.max_overlap:
+        failures.append(
+            f"overlap_fraction {summary['overlap_fraction']:.4f} > --max-overlap {args.max_overlap}"
+        )
+    if args.require_flows and summary["n_flows"] < 1:
+        failures.append("no complete flows in trace (--require-flows)")
+    span_names = {e.get("name") for e in events if e.get("ph") == "X"}
+    for name in args.require_span:
+        if name not in span_names:
+            failures.append(f"missing required span {name!r}")
+
+    print(json.dumps(summary, indent=1) if args.json else render(summary))
+    if failures:
+        print("\nFAIL", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

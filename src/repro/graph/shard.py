@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.trace import resolve_tracer
 from repro.graph.features import FeatureStore, PrefetchedMisses
 from repro.graph.sampling import pow2_bucket
 
@@ -281,6 +282,7 @@ class ShardedFeatureStore:
         gather_buffers: int = 2,
         prefetched: ShardedPrefetch | None = None,
         row_block: int | None = None,
+        tracer=None,
     ):
         """Per-shard gather + exchange-back + reassembly.
 
@@ -288,32 +290,44 @@ class ShardedFeatureStore:
         positions — bit-for-bit :meth:`FeatureStore.gather` over the same
         ids: every shard's rows are copies of the same host/hot rows, the
         exchange is pure ``device_put``/concat, and the inverse
-        permutation restores the original position order."""
+        permutation restores the original position order.
+
+        ``tracer`` (core/trace.py, optional) records one ``exchange`` span
+        per participating shard on its own ``shard s`` lane — the local
+        gather dispatch plus the exchange-back ``device_put`` — and a
+        ``reassemble`` span for the concat + inverse permutation."""
+        tracer = resolve_tracer(tracer)
         parts_f: list = []
         parts_h: list = []
         for s, buf in enumerate(part.seg_ids):
             if buf is None:
                 continue
-            dev = self.devices[s % len(self.devices)] if self.devices else None
-            ids_dev = jax.device_put(buf, dev) if dev is not None else jnp.asarray(buf)
-            pf = prefetched.parts[s] if prefetched is not None else None
-            feats_s, hit_s = self.shards[s].gather(
-                ids_dev,
-                use_kernel=use_kernel,
-                gather_buffers=gather_buffers,
-                prefetched=pf,
-                row_block=row_block,
-            )
-            n = part.seg_len[s]
-            feats_s, hit_s = feats_s[:n], hit_s[:n]
-            if self.assemble_device is not None:
-                feats_s = jax.device_put(feats_s, self.assemble_device)
-                hit_s = jax.device_put(hit_s, self.assemble_device)
+            with tracer.span(
+                "exchange",
+                lane=f"shard {s}",
+                args={"rows": part.seg_len[s]} if tracer.enabled else None,
+            ):
+                dev = self.devices[s % len(self.devices)] if self.devices else None
+                ids_dev = jax.device_put(buf, dev) if dev is not None else jnp.asarray(buf)
+                pf = prefetched.parts[s] if prefetched is not None else None
+                feats_s, hit_s = self.shards[s].gather(
+                    ids_dev,
+                    use_kernel=use_kernel,
+                    gather_buffers=gather_buffers,
+                    prefetched=pf,
+                    row_block=row_block,
+                )
+                n = part.seg_len[s]
+                feats_s, hit_s = feats_s[:n], hit_s[:n]
+                if self.assemble_device is not None:
+                    feats_s = jax.device_put(feats_s, self.assemble_device)
+                    hit_s = jax.device_put(hit_s, self.assemble_device)
             parts_f.append(feats_s)
             parts_h.append(hit_s)
-        feats = parts_f[0] if len(parts_f) == 1 else jnp.concatenate(parts_f, axis=0)
-        hit = parts_h[0] if len(parts_h) == 1 else jnp.concatenate(parts_h, axis=0)
-        if part.inv is not None:
-            inv = jnp.asarray(part.inv.astype(np.int32))
-            feats, hit = feats[inv], hit[inv]
+        with tracer.span("reassemble", lane="exchange"):
+            feats = parts_f[0] if len(parts_f) == 1 else jnp.concatenate(parts_f, axis=0)
+            hit = parts_h[0] if len(parts_h) == 1 else jnp.concatenate(parts_h, axis=0)
+            if part.inv is not None:
+                inv = jnp.asarray(part.inv.astype(np.int32))
+                feats, hit = feats[inv], hit[inv]
         return feats, hit

@@ -20,6 +20,7 @@ import json
 
 from repro.core.config import INFERENCE_MODES, ServeConfig
 from repro.core.policies import ADMISSION_POLICIES, POLICIES
+from repro.core.trace import MetricsRegistry, Tracer
 from repro.graph import load_dataset
 from repro.runtime.cache_refresh import MODES as REFRESH_MODES
 from repro.runtime.gnn_engine import GNNInferenceEngine
@@ -189,7 +190,51 @@ def main() -> None:
         "mesh).  0 (default) keeps the single-device servers; outputs and "
         "hit accounting are bit-identical at any mesh size",
     )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="OUT.json",
+        help="record a span/event timeline of the run (core/trace.py) and "
+        "write it as Chrome trace-event JSON — load it in Perfetto "
+        "(ui.perfetto.dev) or chrome://tracing, or summarize it with "
+        "scripts/trace_summary.py.  Off (default) = the NullTracer no-op "
+        "path; outputs are bit-for-bit identical either way",
+    )
+    ap.add_argument(
+        "--trace-jax",
+        action="store_true",
+        help="also bridge every span into jax.profiler.TraceAnnotation so "
+        "spans show up inside a JAX/XLA profiler capture (needs --trace)",
+    )
+    ap.add_argument(
+        "--metrics",
+        default=None,
+        metavar="OUT",
+        help="collect a structured metrics snapshot (counters/gauges/"
+        "histograms, core/trace.py MetricsRegistry) and write it to OUT: "
+        "Prometheus text exposition when OUT ends in .prom/.txt, JSON "
+        "otherwise.  The snapshot is also embedded in the printed report "
+        "under the 'metrics' key",
+    )
     args = ap.parse_args()
+
+    if args.trace_jax and args.trace is None:
+        ap.error("--trace-jax requires --trace")
+    tracer = Tracer(jax_annotations=args.trace_jax) if args.trace is not None else None
+    metrics = MetricsRegistry() if args.metrics is not None else None
+
+    def finish(rep) -> None:
+        print(json.dumps(rep.summary(), indent=1))
+        if tracer is not None:
+            tracer.export(args.trace)
+        if metrics is not None:
+            text = (
+                metrics.to_prometheus()
+                if args.metrics.endswith((".prom", ".txt"))
+                else metrics.to_json()
+            )
+            with open(args.metrics, "w", encoding="utf-8") as fh:
+                fh.write(text)
 
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
     if args.arrival == "burst":
@@ -216,8 +261,8 @@ def main() -> None:
     if args.mode == "layerwise":
         # Full-graph scoring is a whole-dataset pass — the serving
         # front-ends (streams/arrival/mesh) are sampling-mode machinery.
-        rep = eng.run(config=cfg.engine)
-        print(json.dumps(rep.summary(), indent=1))
+        rep = eng.run(config=cfg.engine, tracer=tracer, metrics=metrics)
+        finish(rep)
         return
     if args.arrival != "none":
         per_stream = args.batches_per_stream
@@ -258,18 +303,18 @@ def main() -> None:
                 slo_s=slo_s,
                 seed=eng.seed,
             )
-        server = RequestQueueServer(eng, config=cfg)
+        server = RequestQueueServer(eng, config=cfg, tracer=tracer, metrics=metrics)
         for sid, requests in enumerate(trace):
             server.add_request_stream(requests, seed=eng.seed + sid)
         rep = server.run()
-        print(json.dumps(rep.summary(), indent=1))
+        finish(rep)
     elif args.streams > 1 or args.mesh > 0:
         if args.mesh > 0:
             from repro.runtime.sharded_serve import ShardedServer
 
-            server = ShardedServer(eng, config=cfg)
+            server = ShardedServer(eng, config=cfg, tracer=tracer, metrics=metrics)
         else:
-            server = MultiStreamServer(eng, config=cfg)
+            server = MultiStreamServer(eng, config=cfg, tracer=tracer, metrics=metrics)
         per_stream = args.batches_per_stream
         if args.max_batches is not None:
             per_stream = min(per_stream, args.max_batches)
@@ -284,10 +329,15 @@ def main() -> None:
         for sid, queue in enumerate(queues):
             server.add_stream(queue, seed=seeds[sid])
         rep = server.run()
-        print(json.dumps(rep.summary(), indent=1))
+        finish(rep)
     else:
-        rep = eng.run(config=cfg.engine, max_batches=args.max_batches)
-        print(json.dumps(rep.summary(), indent=1))
+        rep = eng.run(
+            config=cfg.engine,
+            max_batches=args.max_batches,
+            tracer=tracer,
+            metrics=metrics,
+        )
+        finish(rep)
 
 
 if __name__ == "__main__":

@@ -58,6 +58,7 @@ from repro.core.allocation import reallocate_capacity
 from repro.core.cache import CacheRefreshDelta
 from repro.core.presample import run_presampling
 from repro.core.telemetry import WorkloadTelemetry, merge_windows
+from repro.core.trace import NULL_TRACER
 from repro.graph.csc import BYTES_PER_ADJ_ELEMENT
 
 __all__ = ["RefreshConfig", "RefreshEvent", "CacheRefreshManager"]
@@ -179,6 +180,10 @@ class CacheRefreshManager:
         self.fanouts = tuple(fanouts)
         self.batch_size = batch_size
         self.config = config
+        # Settable observability handle (core/trace.py): the owning
+        # engine/server installs its tracer; refreshes then land as epoch
+        # spans + allocation-split counters on the "refresh" lane.
+        self.tracer = NULL_TRACER
         self.telemetry = WorkloadTelemetry(dataset.num_nodes, dataset.graph.num_edges)
         # Weighted-merge mode: per-stream accumulators keyed by the
         # serving layer's stream key; empty under "none" (shared sink).
@@ -384,6 +389,27 @@ class CacheRefreshManager:
     def refresh(self, reason: str = "manual") -> RefreshEvent:
         """Fold the current telemetry window into history, re-run Eq. 1 on
         the measured stage ratio, and apply the delta re-fill."""
+        with self.tracer.span("refresh", lane="refresh", args={"reason": reason}):
+            event = self._refresh(reason)
+        if self.tracer.enabled:
+            # The Eq. 1 split the epoch landed on, as counter tracks — the
+            # timeline shows allocation drift across refreshes at a glance.
+            self.tracer.counter(
+                "allocation_bytes",
+                {
+                    "adj": float(event.delta.allocation.adj_bytes),
+                    "feat": float(event.delta.allocation.feat_bytes),
+                },
+            )
+            self.tracer.counter(
+                "refresh_window", {"miss_rate": float(event.window_miss_rate)}
+            )
+            self.tracer.instant(
+                "epoch", lane="refresh", args={"epoch": event.epoch, "reason": reason}
+            )
+        return event
+
+    def _refresh(self, reason: str) -> RefreshEvent:
         t0 = time.perf_counter()
         for clock in self._clocks:
             self.telemetry.pull_times(clock)

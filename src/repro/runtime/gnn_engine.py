@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core.config import EngineConfig, coalesce
 from repro.core.policies import PreparedPipeline, prepare
+from repro.core.trace import resolve_tracer
 from repro.graph.datasets import SyntheticGraphDataset
 from repro.graph.sampling import pow2_bucket, sample_blocks
 from repro.kernels.cached_gather.kernel import ROW_BLOCK
@@ -112,6 +113,9 @@ class InferenceReport:
     # concrete, server-level overrides applied) — the single source the
     # knob echo comes from, so it can never drift from execution.
     config: EngineConfig | None = None
+    # MetricsRegistry.snapshot() at report time when the run was given a
+    # registry (``--metrics``); None otherwise.
+    metrics: dict | None = None
 
     @property
     def total_seconds(self) -> float:
@@ -194,6 +198,8 @@ class InferenceReport:
             # hides exactly the recovery a refresh exists to produce.
             out["refresh_events"] = [e.summary() for e in self.refresh_events]
             out["per_epoch"] = self.epoch_hits
+        if self.metrics is not None:
+            out["metrics"] = self.metrics
         return out
 
 
@@ -263,6 +269,9 @@ class StreamRuntime:
         # Serve-time telemetry sink (set by the refresh manager); None in
         # the default path, which then records nothing at retire.
         self.telemetry = None
+        # Observability handle (core/trace.py), installed by the owning
+        # engine/server; the no-op default keeps stage methods free.
+        self.tracer = resolve_tracer(None)
         self.outputs: list[np.ndarray] | None = [] if collect_outputs else None
         # RAIN cross-batch reuse state (only touched when the policy asks).
         self._prev_map = np.full(num_nodes, -1, np.int64)
@@ -846,9 +855,21 @@ class GNNInferenceEngine:
         gather_buffers: int | None = None,
         dedup: bool | None = None,
         refresh=None,
+        tracer=None,
+        metrics=None,
     ):
         """Run inference over the dataset's test batches (or explicit seed
         ``batches``) and return the stage-time / hit-rate report.
+
+        ``tracer``/``metrics`` are live observability handles
+        (core/trace.py) — keyword-only and not part of ``EngineConfig``
+        (which stays a frozen JSON-safe value object).  A
+        :class:`~repro.core.trace.Tracer` records the run's timeline
+        (slot-lane batch/stage spans, refresh epochs); a
+        :class:`~repro.core.trace.MetricsRegistry` is folded with the
+        run's aggregate outcomes and snapshotted onto ``report.metrics``.
+        Both default to off with effectively zero cost, and neither
+        perturbs outputs (bit-for-bit equivalence-tested).
 
         ``config`` is the one knob object (:class:`~repro.core.config.
         EngineConfig`): mode, executor window, the four gather knobs, the
@@ -913,9 +934,12 @@ class GNNInferenceEngine:
                 self.params,
                 model=self.model,
                 config=cfg.resolved(pipe, pipeline_depth=depth),
+                tracer=tracer,
+                metrics=metrics,
             )
             self.last_outputs = [report.outputs]
             return report
+        tracer = resolve_tracer(tracer)
         if batches is None:
             batches = self._batches(max_batches)
         depth = self.resolve_pipeline_depth(
@@ -946,6 +970,7 @@ class GNNInferenceEngine:
             gather_buffers=cfg.gather_buffers,
             dedup=cfg.dedup,
         )
+        rt.tracer = tracer
         clock = StageClock(overlap=depth > 1)
         manager = None
         if refresh is not None and refresh.enabled:
@@ -959,6 +984,7 @@ class GNNInferenceEngine:
                 config=refresh,
             )
             manager.register_clock(clock, key=0)
+            manager.tracer = tracer
             rt.telemetry = manager.telemetry_for(0)
             if warmup:
                 # Refresh-aware warmup: a growing delta re-fill would
@@ -990,6 +1016,7 @@ class GNNInferenceEngine:
             depth=depth,
             clock=clock,
             on_retire=on_retire,
+            tracer=tracer,
         )
         executor.run(batches)
         self.last_outputs = rt.outputs
@@ -1003,7 +1030,7 @@ class GNNInferenceEngine:
             gather_buffers=rt.gather_buffers,
             dedup=rt.dedup,
         )
-        return InferenceReport(
+        report = InferenceReport(
             policy=pipe.name,
             num_batches=len(batches),
             sample_seconds=clock.total("sample"),
@@ -1026,3 +1053,18 @@ class GNNInferenceEngine:
             epoch_hits=rt.epoch_hit_rates() if manager is not None else None,
             config=resolved_cfg,
         )
+        if metrics is not None:
+            metrics.counter("batches_total", policy=pipe.name).inc(report.num_batches)
+            metrics.gauge("feat_hit_rate", policy=pipe.name).set(report.feat_hit_rate)
+            metrics.gauge("adj_hit_rate", policy=pipe.name).set(report.adj_hit_rate)
+            for name in ("sample", "prefetch", "feature", "compute"):
+                metrics.gauge("stage_seconds", policy=pipe.name, stage=name).set(
+                    clock.total(name)
+                )
+            if report.epoch_hits:
+                for epoch, rates in report.epoch_hits.items():
+                    metrics.gauge("feat_hit_rate", policy=pipe.name, epoch=epoch).set(
+                        rates["feat_hit_rate"]
+                    )
+            report.metrics = metrics.snapshot()
+        return report

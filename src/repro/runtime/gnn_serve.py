@@ -48,6 +48,7 @@ import jax
 import numpy as np
 
 from repro.core.config import EngineConfig, ServeConfig, coalesce
+from repro.core.trace import resolve_tracer
 from repro.runtime.gnn_engine import (
     GNNInferenceEngine,
     PCIE4_BW,
@@ -99,6 +100,7 @@ class StreamState:
     seeds_served: int = 0
     latencies: list = dataclasses.field(default_factory=list)
     _admit_times: dict = dataclasses.field(default_factory=dict)
+    _flow_ids: dict = dataclasses.field(default_factory=dict)  # batch idx -> trace flow id
 
 
 @dataclasses.dataclass
@@ -198,6 +200,9 @@ class ServeReport:
     # caps read back off the live server at report time, so the echo
     # reflects e.g. a refresh-resized auto window, never the request).
     config: ServeConfig | None = None
+    # MetricsRegistry.snapshot() taken at report time when the server was
+    # given a registry (``--metrics``); None otherwise.
+    metrics: dict | None = None
 
     @property
     def total_batches(self) -> int:
@@ -309,6 +314,8 @@ class ServeReport:
         if self.shards is not None:
             out["num_shards"] = self.num_shards
             out["per_shard"] = self.shards
+        if self.metrics is not None:
+            out["metrics"] = self.metrics
         return out
 
 
@@ -349,9 +356,16 @@ class MultiStreamServer:
         gather_buffers: int | None = None,
         dedup: bool | None = None,
         refresh=None,
+        tracer=None,
+        metrics=None,
     ):
         if engine.pipeline is None:
             raise RuntimeError("prepare() the engine before constructing the server")
+        # Live observability handles (core/trace.py) — keyword-only and
+        # deliberately NOT part of ServeConfig, which stays a frozen,
+        # JSON-round-trippable value object.
+        self.tracer = resolve_tracer(tracer)
+        self.metrics = metrics
         # ``config`` is the one knob object (ServeConfig wrapping an
         # EngineConfig); the loose keywords remain as a deprecated
         # one-release shim — any passed value merges over the config
@@ -401,6 +415,7 @@ class MultiStreamServer:
             # Weighted telemetry merges (stream_weighting != "none") ask the
             # server for each stream's live pressure at refresh time.
             self.refresh_manager.set_weight_fn(self._stream_weight)
+            self.refresh_manager.tracer = self.tracer
         self._started = False  # join/leave events fire only once serving began
         self._executor = None  # live executor during run() (auto-depth hook)
         self._serve_t0 = None  # perf_counter at serve start (arrival clock origin)
@@ -450,6 +465,7 @@ class MultiStreamServer:
         if seed is None:
             seed = self.engine.seed + sid
         runtime = self._make_runtime(sid, seed, collect_outputs=collect_outputs)
+        runtime.tracer = self.tracer
         state = StreamState(
             stream_id=sid,
             seed=seed,
@@ -535,15 +551,77 @@ class MultiStreamServer:
             s.submitted += 1
             s.inflight += 1
             s.max_inflight_seen = max(s.max_inflight_seen, s.inflight)
+            if self.tracer.enabled:
+                self._trace_admit(s, batch=s.submitted - 1)
             yield (s, payload)
+
+    # ---------------------------------------------------------- tracing
+    def _enqueue_ts_us(self, s: StreamState, batch: int) -> float:
+        """Tracer timestamp at which batch ``batch`` of stream ``s`` was
+        enqueued.  The queue-backed server's batches all exist at serve
+        start; the request front-end overrides this with the request's
+        arrival clock."""
+        del s, batch
+        return self.tracer.ts_from(self._serve_t0) if self._serve_t0 is not None else 0.0
+
+    def _trace_admit(self, s: StreamState, *, batch: int) -> None:
+        """Request-lifecycle tracing at admission: a ``queued`` span
+        (enqueue → admit) on the stream's request lane, the start of the
+        batch's flow (linked through the executor's batch span to the
+        ``service`` span at retire), and queue-depth/inflight counters."""
+        tr = self.tracer
+        now = tr.now_us()
+        lane = f"req:s{s.stream_id}"
+        enq = min(self._enqueue_ts_us(s, batch), now)
+        tr.complete("queued", lane=lane, ts_us=enq, dur_us=now - enq, args={"batch": batch})
+        fid = tr.next_flow_id()
+        s._flow_ids[batch] = fid
+        # Anchored mid-span so Perfetto binds the arrow to the queued slice.
+        tr.flow_start(fid, "req", lane=lane, ts_us=(enq + now) / 2)
+        tr.counter(
+            "queue_depth", {f"s{st.stream_id}": float(len(st.queue)) for st in self.streams}
+        )
+        tr.counter("inflight", {"batches": float(sum(st.inflight for st in self.streams))})
+
+    def _trace_retire(self, ctx, s: StreamState, admit_t: float, now_t: float) -> None:
+        """The retire half of the lifecycle: a ``service`` span (admit →
+        retire), a flow step through the executor batch span the request
+        actually rode in (its window slot), and the flow end."""
+        tr = self.tracer
+        lane = f"req:s{s.stream_id}"
+        admit_us, now_us = tr.ts_from(admit_t), tr.ts_from(now_t)
+        tr.complete(
+            "service",
+            lane=lane,
+            ts_us=admit_us,
+            dur_us=now_us - admit_us,
+            args={"batch": s.retired, "epoch": ctx.epoch},
+        )
+        fid = s._flow_ids.pop(s.retired, None)
+        if fid is not None:
+            tr.flow_step(fid, "req", lane=f"slot {ctx.slot}", ts_us=ctx.trace_t0 + 1.0)
+            tr.flow_end(fid, "req", lane=lane, ts_us=(admit_us + now_us) / 2)
+        tr.counter("inflight", {"batches": float(sum(st.inflight for st in self.streams))})
 
     def _on_retire(self, ctx) -> None:
         s: StreamState = ctx.stream
         s.runtime.record(ctx)
-        s.latencies.append(time.perf_counter() - s._admit_times.pop(s.retired))
-        s.seeds_served += int(np.asarray(ctx.payload).shape[0])
-        s.retired += 1
+        now_t = time.perf_counter()
+        admit_t = s._admit_times.pop(s.retired)
+        latency = now_t - admit_t
+        s.latencies.append(latency)
+        n_seeds = int(np.asarray(ctx.payload).shape[0])
+        s.seeds_served += n_seeds
         s.inflight -= 1
+        if self.tracer.enabled:
+            self._trace_retire(ctx, s, admit_t, now_t)
+        if self.metrics is not None:
+            self.metrics.histogram("request_latency_ms", stream=s.stream_id).observe(
+                latency * 1e3
+            )
+            self.metrics.counter("batches_retired_total", stream=s.stream_id).inc()
+            self.metrics.counter("seeds_served_total", stream=s.stream_id).inc(n_seeds)
+        s.retired += 1
         if self.refresh_manager is not None:
             # Retire runs between dispatches, so an interval refresh lands
             # here — in-flight batches keep the old epoch's arrays.
@@ -613,13 +691,41 @@ class MultiStreamServer:
             depth=self.depth,
             clock_for=lambda c: c.stream.clock,
             on_retire=self._on_retire,
+            tracer=self.tracer,
         )
         self._executor = executor
         self._serve_t0 = t0 = time.perf_counter()
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "serve-start", lane="serve", args={"streams": len(self.streams)}
+            )
         executor.run_tagged(self._admission())
         wall = time.perf_counter() - t0
         self._executor = None
-        return self._serve_report(wall)
+        report = self._serve_report(wall)
+        if self.metrics is not None:
+            self._record_metrics(report)
+            report.metrics = self.metrics.snapshot()
+        return report
+
+    def _record_metrics(self, report: ServeReport) -> None:
+        """Fold the run's aggregate outcomes into the metrics registry —
+        the labelled-gauge view of what the report holds as dataclasses
+        (``feat_hit_rate{stream=...,epoch=...}`` et al.)."""
+        m = self.metrics
+        m.gauge("throughput_seeds_per_s").set(report.throughput_seeds_per_s)
+        for sr in report.streams:
+            m.gauge("feat_hit_rate", stream=sr.stream_id).set(sr.feat_hit_rate)
+            m.gauge("adj_hit_rate", stream=sr.stream_id).set(sr.adj_hit_rate)
+            if sr.requests_shed:
+                m.counter("requests_shed_total", stream=sr.stream_id).inc(sr.requests_shed)
+            if sr.epoch_hits:
+                for epoch, rates in sr.epoch_hits.items():
+                    m.gauge("feat_hit_rate", stream=sr.stream_id, epoch=epoch).set(
+                        rates["feat_hit_rate"]
+                    )
+        for ev in report.refresh_events:
+            m.counter("refresh_epochs_total", reason=ev.reason).inc()
 
     def _resolved_config(self) -> ServeConfig:
         """The ServeConfig the serve loop ACTUALLY ran with, read back off

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core.allocation import LayerwiseAllocation, allocate_layerwise_capacity
 from repro.core.config import EngineConfig
+from repro.core.trace import resolve_tracer
 from repro.core.policies import PreparedPipeline
 from repro.graph.datasets import SyntheticGraphDataset
 from repro.graph.features import (
@@ -184,6 +185,8 @@ class LayerwiseReport:
     allocation: LayerwiseAllocation | None = None
     config: EngineConfig | None = None  # the resolved knobs this run used
     outputs: np.ndarray | None = dataclasses.field(default=None, repr=False)
+    # MetricsRegistry.snapshot() at report time (``--metrics``); else None.
+    metrics: dict | None = None
 
     @property
     def total_seconds(self) -> float:
@@ -245,6 +248,8 @@ class LayerwiseReport:
         }
         if self.config is not None:
             out["config"] = self.config.to_dict()
+        if self.metrics is not None:
+            out["metrics"] = self.metrics
         return out
 
 
@@ -276,6 +281,8 @@ def run_layerwise(
     *,
     model: str,
     config: EngineConfig,
+    tracer=None,
+    metrics=None,
 ) -> LayerwiseReport:
     """Score EVERY node: L chained chunked layer passes over the node range.
 
@@ -285,6 +292,7 @@ def run_layerwise(
     forward within fp tolerance (summation order differs:
     ``segment_sum`` vs the sampled reshape-reduce) —
     tests/test_layerwise.py."""
+    tracer = resolve_tracer(tracer)
     graph = dataset.graph
     n = graph.num_nodes
     num_layers = len(params)
@@ -405,6 +413,7 @@ def run_layerwise(
             depth=depth,
             clock=clock,
             on_retire=on_retire,
+            tracer=tracer,
         )
         payloads = []
         for spec in plan.chunks:
@@ -436,17 +445,27 @@ def run_layerwise(
                     relu=relu,
                 )
             )
-        executor.run(payloads)
+        # One enclosing span per layer pass on the "layers" lane; the
+        # executor's slot lanes carry the per-chunk batch/stage spans
+        # nested under it in time, so a trace shows L layer blocks each
+        # filled with its chunk pipeline.
+        with tracer.span(
+            f"layer {layer}",
+            lane="layers",
+            args={"layer": layer, "chunks": plan.num_chunks} if tracer.enabled else None,
+        ):
+            executor.run(payloads)
 
         if relu:
             # Next layer's input store: the spilled table behind a fresh
             # embedding cache.  Only one is live at a time, so it gets the
             # full per-layer embedding share.
             t0 = time.perf_counter()
-            build_store = build_embedding_cache(out_host, access_counts, embed_bytes)
+            with tracer.span("embed-fill", lane="layers", args={"layer": layer}):
+                build_store = build_embedding_cache(out_host, access_counts, embed_bytes)
             state["fill_s"] += time.perf_counter() - t0
 
-    return LayerwiseReport(
+    report = LayerwiseReport(
         policy=pipe.name,
         num_nodes=n,
         num_layers=num_layers,
@@ -471,3 +490,11 @@ def run_layerwise(
         config=config,
         outputs=out_host,
     )
+    if metrics is not None:
+        metrics.counter("chunks_total", mode="layerwise").inc(num_layers * plan.num_chunks)
+        metrics.gauge("feat_hit_rate", mode="layerwise").set(report.feat_hit_rate)
+        metrics.gauge("embed_hit_rate", mode="layerwise").set(report.embed_hit_rate)
+        for name in ("gather", "prefetch", "compute"):
+            metrics.gauge("stage_seconds", mode="layerwise", stage=name).set(clock.total(name))
+        report.metrics = metrics.snapshot()
+    return report

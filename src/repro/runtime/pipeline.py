@@ -57,8 +57,10 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import heapq
 from typing import Any, Callable, Iterable, Sequence
 
+from repro.core.trace import resolve_tracer
 from repro.utils.timing import StageClock
 
 __all__ = ["BatchContext", "DRAIN", "PipelinedExecutor", "Stage"]
@@ -81,6 +83,13 @@ class _Drain:
 DRAIN = _Drain()
 
 
+def _stream_label(stream: Any) -> Any:
+    """Compact trace label for a batch's stream tag — the numeric
+    ``stream_id`` when the tag is a stream-state object, else ``str``."""
+    sid = getattr(stream, "stream_id", None)
+    return sid if sid is not None else str(stream)
+
+
 class BatchContext:
     """One mini-batch flowing through the pipeline.
 
@@ -93,9 +102,16 @@ class BatchContext:
     (runtime/cache_refresh.py) an epoch boundary can fall between two
     in-flight batches, and retire-time accounting attributes each batch to
     the epoch it actually dispatched against.
+
+    ``slot`` is the pipeline window slot the batch occupies while in
+    flight — the executor reuses the lowest free slot, so with depth ``d``
+    at most slots ``0..d-1`` exist.  It keys the batch's trace lane
+    (``slot 0`` …), making depth-``d`` overlap visible as ``d`` stacked
+    timeline lanes; ``trace_t0`` is the tracer timestamp of the batch's
+    dispatch start (µs), recorded only when tracing is enabled.
     """
 
-    __slots__ = ("index", "payload", "stream", "epoch", "outputs")
+    __slots__ = ("index", "payload", "stream", "epoch", "outputs", "slot", "trace_t0")
 
     def __init__(self, index: int, payload: Any, stream: Any = None):
         self.index = index
@@ -103,6 +119,8 @@ class BatchContext:
         self.stream = stream
         self.epoch = 0
         self.outputs: dict[str, Any] = {}
+        self.slot = 0
+        self.trace_t0 = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,6 +159,7 @@ class PipelinedExecutor:
         clock: StageClock | None = None,
         clock_for: Callable[[BatchContext], StageClock] | None = None,
         on_retire: Callable[[BatchContext], None] | None = None,
+        tracer=None,
     ):
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")
@@ -152,6 +171,26 @@ class PipelinedExecutor:
         self.clock = clock if clock is not None else StageClock(overlap=depth > 1)
         self.clock_for = clock_for
         self.on_retire = on_retire
+        self.tracer = resolve_tracer(tracer)
+        self._free_slots: list[int] = []  # min-heap of released window slots
+        self._next_slot = 0
+
+    def _acquire_slot(self) -> int:
+        """Lowest-numbered slot not held by an in-flight batch.  Lowest-
+        first reuse keeps the trace's slot lanes dense: a depth-``d`` run
+        uses exactly lanes ``slot 0 … slot d-1``, and a serial run stays
+        entirely on ``slot 0`` (overlap fraction exactly 0)."""
+        if self._free_slots:
+            return heapq.heappop(self._free_slots)
+        slot = self._next_slot
+        self._next_slot += 1
+        return slot
+
+    @staticmethod
+    def slot_lane(ctx: BatchContext) -> str:
+        """The trace lane of the window slot ``ctx`` occupies — serving
+        layers use it to anchor request flow steps onto the batch span."""
+        return f"slot {ctx.slot}"
 
     def _clock(self, ctx: BatchContext) -> StageClock:
         """The clock a batch's laps and drains are booked on: the stream's
@@ -185,6 +224,7 @@ class PipelinedExecutor:
         it waits on an external clock (request arrivals)."""
         window: collections.deque[BatchContext] = collections.deque()
         retired: list[BatchContext] = []
+        tracer = self.tracer
         index = 0
         for item in items:
             if item is DRAIN:
@@ -195,12 +235,24 @@ class PipelinedExecutor:
             ctx = BatchContext(index, payload, stream)
             index += 1
             clock = self._clock(ctx)
+            lane, args = "slot 0", None
+            ctx.slot = self._acquire_slot()
+            if tracer.enabled:
+                lane = f"slot {ctx.slot}"
+                args = {"batch": ctx.index}
+                if ctx.stream is not None:
+                    args["stream"] = _stream_label(ctx.stream)
+                ctx.trace_t0 = tracer.now_us()
             for st in self.stages:
                 sync = None
                 if st.sync is not None:
                     sync = (lambda s=st, c=ctx: s.sync(c))
-                with clock.stage(st.name, sync=sync):
-                    ctx.outputs[st.name] = st.fn(ctx)
+                # The trace span wraps the clock lap, so in serial mode it
+                # covers the stage's sync too — span durations and Eq. 1
+                # stage laps agree (asserted in tests/test_trace.py).
+                with tracer.span(st.name, lane=lane, args=args):
+                    with clock.stage(st.name, sync=sync):
+                        ctx.outputs[st.name] = st.fn(ctx)
             window.append(ctx)
             while len(window) > self.depth - 1:
                 retired.append(self._retire(window.popleft()))
@@ -210,6 +262,8 @@ class PipelinedExecutor:
 
     def _retire(self, ctx: BatchContext) -> BatchContext:
         clock = self._clock(ctx)
+        tracer = self.tracer
+        lane = f"slot {ctx.slot}" if tracer.enabled else "slot 0"
         if clock.overlap:
             # Drain every stage's sync value, in stage order, attributing
             # each wait to its own stage — otherwise in-flight work from
@@ -217,8 +271,21 @@ class PipelinedExecutor:
             # and the stage totals would under-count the loop's wall clock.
             for st in self.stages:
                 if st.sync is not None:
-                    clock.drain(st.name, st.sync(ctx))
+                    with tracer.span(f"drain:{st.name}" if tracer.enabled else "drain", lane=lane):
+                        clock.drain(st.name, st.sync(ctx))
         if self.on_retire is not None:
             self.on_retire(ctx)
+        if tracer.enabled:
+            # The batch's enclosing span: dispatch start → retired.  Slot
+            # lanes carry one such span per in-flight batch, so stacked
+            # batch spans across lanes *are* the pipeline overlap.
+            tracer.complete(
+                "batch",
+                lane=lane,
+                ts_us=ctx.trace_t0,
+                dur_us=tracer.now_us() - ctx.trace_t0,
+                args={"batch": ctx.index, "epoch": ctx.epoch},
+            )
+        heapq.heappush(self._free_slots, ctx.slot)
         ctx.outputs.clear()
         return ctx

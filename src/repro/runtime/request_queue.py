@@ -342,6 +342,13 @@ class RequestQueueServer(MultiStreamServer):
                     req.shed = True
                     s.shed_requests.append(req)
                     self.total_shed += 1
+                    if self.tracer.enabled:
+                        self.tracer.instant(
+                            "shed",
+                            lane=f"req:s{s.stream_id}",
+                            args={"request": req.request_id, "deadline_s": req.deadline_s},
+                        )
+                        self.tracer.counter("shed", {"total": float(self.total_shed)})
                     continue
                 if blown:
                     req.deferred = True  # keeps its slot, sorts deadline-free
@@ -404,7 +411,18 @@ class RequestQueueServer(MultiStreamServer):
             s.submitted += 1
             s.inflight += 1
             s.max_inflight_seen = max(s.max_inflight_seen, s.inflight)
+            if self.tracer.enabled:
+                self._trace_admit(s, batch=s.submitted - 1)
             yield (s, req.seeds)
+
+    def _enqueue_ts_us(self, s: StreamState, batch: int) -> float:
+        """Requests enqueue when they *arrive*, so the ``queued`` trace
+        span starts on the request's arrival clock — its full duration is
+        the queueing wait the enqueue→retire latency columns report."""
+        req = s._inflight_reqs.get(batch)
+        if req is None or self._serve_t0 is None:
+            return super()._enqueue_ts_us(s, batch)
+        return self.tracer.ts_from(self._serve_t0 + req.arrival_s)
 
     # ------------------------------------------------------------- retire
     def _on_retire(self, ctx) -> None:

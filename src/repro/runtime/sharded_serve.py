@@ -166,7 +166,7 @@ class ShardedStreamRuntime(StreamRuntime):
         for s, buf in enumerate(part.seg_ids):
             if buf is not None:
                 self.shard_gathered_rows[s] += len(buf)
-        return self.sharded.store.gather(part, **gather_kw)
+        return self.sharded.store.gather(part, tracer=self.tracer, **gather_kw)
 
     # ----------------------------------------------------------- accounting
     def record(self, ctx) -> None:

@@ -3,13 +3,19 @@
 ``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
 and renamed its replication-check flag ``check_rep`` → ``check_vma`` along the
 way.  ``shard_map_compat`` resolves whichever spelling this JAX exposes.
+``trace_annotation_compat`` resolves the profiler span-annotation context
+(``jax.profiler.TraceAnnotation``), degrading to a no-op context on builds
+without a profiler — the tracer (core/trace.py) uses it to line host spans
+up with device kernels under ``--trace-jax``.
 """
 
 from __future__ import annotations
 
+import contextlib
+
 import jax
 
-__all__ = ["shard_map_compat"]
+__all__ = ["shard_map_compat", "trace_annotation_compat"]
 
 
 def _resolve():
@@ -28,3 +34,14 @@ def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma: bool | None = N
     if check_vma is not None:
         kwargs[flag] = check_vma
     return fn(f, **kwargs)
+
+
+def trace_annotation_compat():
+    """A ``name -> context manager`` factory marking a host-side activity
+    span for the JAX device profiler, or a null context when this build
+    exposes no profiler annotation API."""
+    profiler = getattr(jax, "profiler", None)
+    annotation = getattr(profiler, "TraceAnnotation", None) if profiler is not None else None
+    if annotation is None:  # pragma: no cover - depends on the JAX build
+        return lambda name: contextlib.nullcontext()
+    return annotation

@@ -89,12 +89,24 @@ class Stopwatch:
 
     @contextlib.contextmanager
     def track(self, name: str, *, sync: object = None):
+        """Time one block.  ``sync`` is a device value — or, as in
+        :meth:`StageClock.stage`, a callable producing one — blocked on
+        before the timer stops, so lazily materialized outputs are charged
+        to the block that dispatched them."""
         t0 = time.perf_counter()
+        ok = False
         try:
             yield
+            ok = True
         finally:
-            if sync is not None:
-                jax.block_until_ready(sync)
+            # Evaluate-then-block, and only when the body succeeded —
+            # mirrors StageClock.stage so the two timers accept the same
+            # sync argument (a failed body has no output to wait for, and
+            # an exception from the sync callable must not mask the body's).
+            if ok and sync is not None:
+                value = sync() if callable(sync) else sync
+                if value is not None:
+                    jax.block_until_ready(value)
             dt = time.perf_counter() - t0
             self.totals[name] = self.totals.get(name, 0.0) + dt
             self.counts[name] = self.counts.get(name, 0) + 1
