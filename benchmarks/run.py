@@ -34,6 +34,7 @@ from benchmarks import (  # noqa: E402
     bench_cache_capacity,
     bench_drift,
     bench_end2end,
+    bench_faults,
     bench_hit_rates,
     bench_preprocessing,
     bench_presample_batches,
@@ -90,6 +91,10 @@ def quick_bench() -> dict:
     )
     print("# --- quick tracing overhead (disabled <1% modeled, enabled within 5%) ---")
     tr_rows, tr_checks = bench_trace.run(batch_size=128, max_batches=4)
+    print("# --- quick fault tolerance (fail-fast vs degraded availability) ---")
+    fl_rows, fl_checks = bench_faults.run(
+        num_streams=2, batches_per_stream=6, batch_size=64
+    )
     return {
         "end2end": e2e,
         "multistream": {"rows": ms_rows, "checks": ms_checks},
@@ -97,6 +102,7 @@ def quick_bench() -> dict:
         "sharded": {"rows": sh_rows, "checks": sh_checks},
         "layerwise": {"rows": lw_rows, "checks": lw_checks},
         "trace": {"rows": tr_rows, "checks": tr_checks},
+        "faults": {"rows": fl_rows, "checks": fl_checks},
     }
 
 
@@ -263,6 +269,39 @@ def check_against(baseline: dict, current: dict) -> list[tuple[str, bool, str]]:
                 base_tr["checks"].get(flag, True)
             )
             results.append((f"tr/checks/{flag}", ok, str(cur_tr_checks.get(flag))))
+
+    # Fault-tolerance gate: every compared quantity replays from seeded
+    # fault plans (a pure function of plan + call index), so the
+    # availability numbers are exact on any machine — no tolerance bands.
+    # Baselines written before the fault subsystem existed skip the gate.
+    base_fl = baseline.get("faults")
+    if base_fl is not None:
+        base_fl_checks = base_fl["checks"]
+        cur_fl_checks = current["faults"]["checks"]
+        for flag in (
+            "faults_zero_diff_identical",
+            "faults_failfast_collapses",
+            "faults_degraded_ge_0.99",
+            "faults_refresh_rollback_servable",
+            "faults_failover_identical",
+            "faults_failover_sums_tile",
+            "faults_failover_rejoined",
+        ):
+            ok = bool(cur_fl_checks.get(flag)) or not bool(base_fl_checks.get(flag, True))
+            results.append((f"fl/checks/{flag}", ok, str(cur_fl_checks.get(flag))))
+        # The availability contrast is THE claim of the fault layer: the
+        # same 5% miss-path fault plan, fail-fast vs degraded+retry.
+        # Deterministic replay makes both sides exact, so compare them to
+        # the acceptance thresholds directly rather than to the baseline.
+        cur_ff = cur_fl_checks["faults_failfast_availability"]
+        cur_dg = cur_fl_checks["faults_degraded_availability"]
+        results.append(
+            (
+                "fl/checks/availability_contrast",
+                cur_dg >= 0.99 and cur_ff <= 0.5,
+                f"degraded={cur_dg} (>=0.99) vs fail-fast={cur_ff} (<=0.5)",
+            )
+        )
     return results
 
 
@@ -383,6 +422,9 @@ def main() -> None:
 
     print("# --- tracing overhead: no-op path modeled <1%, enabled within 5% (beyond-paper) ---")
     _, tr_checks = bench_trace.run(batch_size=256)
+
+    print("# --- fault tolerance: availability under injected failures (beyond-paper) ---")
+    _, fl_checks = bench_faults.run()
 
     print("# --- online cache refresh under seed-distribution drift (beyond-paper) ---")
     drift_rows, drift_checks = bench_drift.run(batches_per_phase=8, batch_size=256)
@@ -516,6 +558,19 @@ def main() -> None:
             "Drift: online refresh beats the static cache post-shift, by delta re-fill",
             drift_checks["refreshed_beats_static_post_shift"]
             and drift_checks["delta_refill_no_full_build"],
+        )
+    )
+    checks.append(
+        (
+            "Faults: degraded+retry serves >=0.99 availability where fail-fast collapses "
+            f"(degraded {fl_checks['faults_degraded_availability']:.3f} vs "
+            f"fail-fast {fl_checks['faults_failfast_availability']:.3f}), "
+            "zero-diff with the injector idle",
+            fl_checks["faults_degraded_ge_0.99"]
+            and fl_checks["faults_failfast_collapses"]
+            and fl_checks["faults_zero_diff_identical"]
+            and fl_checks["faults_failover_identical"]
+            and fl_checks["faults_refresh_rollback_servable"],
         )
     )
     checks.append(

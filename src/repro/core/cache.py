@@ -127,6 +127,7 @@ class DualCache:
         allocation: CacheAllocation,
         node_counts: np.ndarray,
         edge_counts: np.ndarray,
+        injector=None,
     ) -> CacheRefreshDelta:
         """Swap both caches to a new allocation/ranking as a delta re-fill.
 
@@ -137,38 +138,62 @@ class DualCache:
         dispatched against the previous epoch's arrays keep them alive
         (JAX arrays are immutable) and retire normally — the swap is a
         pointer flip on this object, visible to the next stage dispatch.
+
+        The swap is TRANSACTIONAL: exactly five attributes mutate
+        (``dgraph``, ``store``, ``allocation``, ``_adj_cache``, ``epoch``),
+        and any failure mid-apply — including an injected ``refresh_fill``
+        fault (core/faults.py), charged deliberately *between* the
+        attribute writes to model a re-fill dying half-applied — restores
+        all five from a snapshot before re-raising.  The old epoch's
+        arrays are immutable and still referenced by the snapshot, so
+        rollback is a pointer flip back: membership, epoch, and every
+        byte of cache state are exactly the pre-refresh values
+        (property-tested in tests/test_faults.py), and the caller keeps
+        serving the stale epoch.
         """
         if not self.refreshable:
             raise ValueError("this DualCache was built without refresh context (none())")
-        node_totals = node_visit_totals(self._graph, edge_counts)
-        new_adj, adj_stats = refresh_adj_cache(
-            self._graph, self._sorted_row, self._adj_cache, node_totals, allocation.adj_bytes
-        )
-        new_store, feat_stats = refresh_feature_cache(
-            self.store, node_counts, allocation.feat_bytes
-        )
-        cache_row = new_adj.cache_row_index
-        # Pad the device copy to a grow-only power-of-two physical size:
-        # the sampler's programs specialize on this array's SHAPE, so an
-        # exact-size copy would force a sample_blocks recompile on every
-        # epoch (and the recompile would land inside the next window's
-        # sample lap, feeding back into the Eq. 1 ratio).  Padded tail
-        # entries are never read — the hit test is ``r < cached_len``.
-        phys = max(self.dgraph.cache_row_index.shape[0], 1)
-        while phys < cache_row.shape[0]:
-            phys *= 2
-        if cache_row.shape[0] < phys:
-            cache_row = np.concatenate([cache_row, np.zeros(phys - cache_row.shape[0], np.int32)])
-        self.dgraph = dataclasses.replace(
-            self.dgraph,
-            cache_ptr=jnp.asarray(new_adj.cache_ptr, jnp.int32),
-            cache_row_index=jnp.asarray(cache_row, jnp.int32),
-            cached_len=jnp.asarray(new_adj.cached_len, jnp.int32),
-        )
-        self.store = new_store
-        self.allocation = allocation
-        self._adj_cache = new_adj
-        self.epoch += 1
+        snapshot = (self.dgraph, self.store, self.allocation, self._adj_cache, self.epoch)
+        try:
+            node_totals = node_visit_totals(self._graph, edge_counts)
+            new_adj, adj_stats = refresh_adj_cache(
+                self._graph, self._sorted_row, self._adj_cache, node_totals, allocation.adj_bytes
+            )
+            new_store, feat_stats = refresh_feature_cache(
+                self.store, node_counts, allocation.feat_bytes
+            )
+            cache_row = new_adj.cache_row_index
+            # Pad the device copy to a grow-only power-of-two physical size:
+            # the sampler's programs specialize on this array's SHAPE, so an
+            # exact-size copy would force a sample_blocks recompile on every
+            # epoch (and the recompile would land inside the next window's
+            # sample lap, feeding back into the Eq. 1 ratio).  Padded tail
+            # entries are never read — the hit test is ``r < cached_len``.
+            phys = max(self.dgraph.cache_row_index.shape[0], 1)
+            while phys < cache_row.shape[0]:
+                phys *= 2
+            if cache_row.shape[0] < phys:
+                cache_row = np.concatenate(
+                    [cache_row, np.zeros(phys - cache_row.shape[0], np.int32)]
+                )
+            self.dgraph = dataclasses.replace(
+                self.dgraph,
+                cache_ptr=jnp.asarray(new_adj.cache_ptr, jnp.int32),
+                cache_row_index=jnp.asarray(cache_row, jnp.int32),
+                cached_len=jnp.asarray(new_adj.cached_len, jnp.int32),
+            )
+            self.store = new_store
+            if injector is not None:
+                # Mid-apply on purpose: dgraph/store already swapped, the
+                # rest not — the worst-case partial state rollback must
+                # cleanly undo.
+                injector.check("refresh_fill")
+            self.allocation = allocation
+            self._adj_cache = new_adj
+            self.epoch += 1
+        except BaseException:
+            (self.dgraph, self.store, self.allocation, self._adj_cache, self.epoch) = snapshot
+            raise
         return CacheRefreshDelta(
             epoch=self.epoch, allocation=allocation, feat=feat_stats, adj=adj_stats
         )

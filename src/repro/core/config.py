@@ -179,13 +179,31 @@ class ServeConfig:
     arrival: str = "none"  # none | poisson | burst | flash-crowd
     mean_interarrival_ms: float = 50.0  # poisson arrival spacing
     mesh: int = 0  # shard the feature store across this many mesh devices
+    # Fault tolerance (core/faults.py + core/retry.py).  ``faults`` is a
+    # FaultPlan JSON path (None = no injector, the bit-for-bit baseline);
+    # ``fault_policy`` is what a guarded-site failure does: "fail" fails
+    # fast, "retry" retries with bounded backoff then fails, "shed"
+    # retries then sheds just the failing request and keeps serving.
+    faults: str | None = None
+    fault_policy: str = "fail"  # fail | retry | shed
+    retry_attempts: int = 3  # per guarded call, incl. the first attempt
+    retry_backoff_ms: float = 1.0  # base backoff before attempt 2
+    retry_timeout_ms: float | None = None  # per-attempt wall budget
+    degraded_mode: bool = False  # cache-only fallback when the miss path is down
 
     def __post_init__(self):
         _check(self.arrival, ("none", "poisson", "burst", "flash-crowd"), "arrival")
+        _check(self.fault_policy, ("fail", "retry", "shed"), "fault_policy")
         if self.max_inflight is not None and self.max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {self.max_inflight}")
         if self.mesh < 0:
             raise ValueError(f"mesh must be >= 0, got {self.mesh}")
+        if self.retry_attempts < 1:
+            raise ValueError(f"retry_attempts must be >= 1, got {self.retry_attempts}")
+        if self.retry_backoff_ms < 0:
+            raise ValueError(f"retry_backoff_ms must be >= 0, got {self.retry_backoff_ms}")
+        if self.retry_timeout_ms is not None and self.retry_timeout_ms <= 0:
+            raise ValueError(f"retry_timeout_ms must be > 0, got {self.retry_timeout_ms}")
 
     def replace(self, **kw) -> "ServeConfig":
         return dataclasses.replace(self, **kw)
@@ -205,6 +223,9 @@ class ServeConfig:
 
     @classmethod
     def from_args(cls, args) -> "ServeConfig":
+        fault_policy = getattr(args, "fault_policy", None)
+        if fault_policy is None:
+            fault_policy = "retry" if getattr(args, "retry", False) else "fail"
         return cls(
             engine=EngineConfig.from_args(args),
             max_inflight=args.max_inflight,
@@ -213,6 +234,25 @@ class ServeConfig:
             arrival=args.arrival,
             mean_interarrival_ms=args.mean_interarrival_ms,
             mesh=args.mesh,
+            faults=getattr(args, "faults", None),
+            fault_policy=fault_policy,
+            retry_attempts=getattr(args, "retry_attempts", 3),
+            retry_backoff_ms=getattr(args, "retry_backoff_ms", 1.0),
+            retry_timeout_ms=getattr(args, "retry_timeout_ms", None),
+            degraded_mode=getattr(args, "degraded_mode", False),
+        )
+
+    def retry_policy(self):
+        """The :class:`~repro.core.retry.RetryPolicy` these fields
+        describe, or ``None`` under fail-fast (``fault_policy="fail"``)."""
+        if self.fault_policy == "fail":
+            return None
+        from repro.core.retry import RetryPolicy
+
+        return RetryPolicy(
+            max_attempts=self.retry_attempts,
+            backoff_s=self.retry_backoff_ms * 1e-3,
+            timeout_s=None if self.retry_timeout_ms is None else self.retry_timeout_ms * 1e-3,
         )
 
 

@@ -124,6 +124,7 @@ class FeatureStore:
         pack_in_thread: bool = True,
         num_live: int | None = None,
         device=None,
+        injector=None,
     ) -> PrefetchedMisses:
         """Stage the missed host rows for a batch onto the device.
 
@@ -152,7 +153,14 @@ class FeatureStore:
         ``device`` commits the staged buffers to a specific device — the
         sharded path stages each shard's misses onto that shard's device
         so the consuming per-shard gather never mixes committed devices.
-        ``None`` (default) keeps the single-device placement."""
+        ``None`` (default) keeps the single-device placement.
+
+        ``injector`` (core/faults.py, optional) charges one ``prefetch``
+        fault-site call before any staging work — the check precedes every
+        state mutation and the staging itself is pure, so a faulted call
+        is safely retryable."""
+        if injector is not None:
+            injector.check("prefetch")
         nodes = np.asarray(nodes)
         live = nodes if num_live is None else nodes[:num_live]
         miss = np.nonzero(self.position_np()[live] < 0)[0].astype(np.int32)
@@ -196,6 +204,7 @@ class FeatureStore:
         gather_buffers: int = 2,
         prefetched: PrefetchedMisses | None = None,
         row_block: int | None = None,
+        injector=None,
     ) -> tuple[jax.Array, jax.Array]:
         """Two-source gather. Returns ``(features[S, F], hit[S])``.
 
@@ -218,7 +227,16 @@ class FeatureStore:
         of one per row.  Correct for any index order — broken runs fall
         back to per-row copies inside the kernel — so the output stays
         bit-identical to every other route.
+
+        ``injector`` (core/faults.py, optional) charges a ``host_fetch``
+        fault-site call (the miss path's host read) and, on the kernel
+        route, a ``kernel_gather`` call — both before any device dispatch,
+        so a faulted gather is safely retryable.
         """
+        if injector is not None:
+            injector.check("host_fetch")
+            if use_kernel:
+                injector.check("kernel_gather")
         indices = indices.astype(jnp.int32)
         pos = self.position_map[indices]
         hit = pos >= 0
@@ -264,6 +282,23 @@ class FeatureStore:
         # Misses overwrite their rows of the hot gather — S·F + M·F work
         # instead of the two full gathers + select of the table path.
         return cached.at[prefetched.idx].set(prefetched.rows, mode="drop"), hit
+
+    def gather_cache_only(self, indices: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Degraded-mode gather: hit rows from the device cache, miss rows
+        ZERO-FILLED — never touches the host table.
+
+        The fallback the serving layer uses when the miss path is down
+        (core/faults.py ``host_fetch``): hit rows are bit-identical to
+        :meth:`gather`'s, misses are explicitly wrong (zeros) and the
+        request is marked ``degraded`` — availability over fidelity.  The
+        hit mask is the usual ``position_map`` lookup, so hit accounting
+        stays comparable with the healthy path."""
+        indices = indices.astype(jnp.int32)
+        pos = self.position_map[indices]
+        hit = pos >= 0
+        safe_pos = jnp.maximum(pos, 0)
+        cached = self.hot_table[jnp.minimum(safe_pos, self.hot_table.shape[0] - 1)]
+        return jnp.where(hit[:, None], cached, jnp.zeros_like(cached)), hit
 
 
 jax.tree_util.register_pytree_node(

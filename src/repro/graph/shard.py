@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.faults import InjectedFault
 from repro.core.trace import resolve_tracer
 from repro.graph.features import FeatureStore, PrefetchedMisses
 from repro.graph.sampling import pow2_bucket
@@ -250,17 +251,25 @@ class ShardedFeatureStore:
         )
 
     # ----------------------------------------------------------- prefetch
-    def prefetch(self, part: ShardPartition, *, pack_in_thread: bool = True) -> ShardedPrefetch:
+    def prefetch(
+        self,
+        part: ShardPartition,
+        *,
+        pack_in_thread: bool = True,
+        down: set | None = None,
+    ) -> ShardedPrefetch:
         """Stage each shard's live missed rows onto that shard's device.
 
         Mirrors :meth:`FeatureStore.prefetch_misses` per shard with
         ``num_live=seg_live[s]``: the union of per-shard live windows is
         exactly the frontier's live prefix, so the summed staging count —
-        and the rows staged — match the single-device path."""
+        and the rows staged — match the single-device path.  Shards in
+        ``down`` (failover, see :meth:`gather`) are skipped — their device
+        is lost, and the host-path failover gather reads nothing staged."""
         parts: list = []
         total = 0
         for s, buf in enumerate(part.seg_ids):
-            if buf is None:
+            if buf is None or (down is not None and s in down):
                 parts.append(None)
                 continue
             staged = self.shards[s].prefetch_misses(
@@ -283,6 +292,8 @@ class ShardedFeatureStore:
         prefetched: ShardedPrefetch | None = None,
         row_block: int | None = None,
         tracer=None,
+        injector=None,
+        down: set | None = None,
     ):
         """Per-shard gather + exchange-back + reassembly.
 
@@ -292,16 +303,48 @@ class ShardedFeatureStore:
         exchange is pure ``device_put``/concat, and the inverse
         permutation restores the original position order.
 
+        ``injector`` (core/faults.py, optional) charges one
+        ``shard_exchange`` fault site per participating shard — restricted
+        to the rule's named ``shard`` when it has one — with the raised
+        :class:`InjectedFault` carrying the victim shard id.  ``down``
+        names shards currently failed over: their segments skip the
+        device exchange entirely and are served from the shard's HOST
+        mirror (numpy, host memory — the path that survives a lost
+        device).  Host-mirror rows are the same bits the device tables
+        were filled from and the hit mask still comes from the shard's
+        position map, so failover changes WHERE bytes come from, never
+        values or hit accounting (per-shard sums still tile the global
+        counters — tests/test_faults.py).
+
         ``tracer`` (core/trace.py, optional) records one ``exchange`` span
         per participating shard on its own ``shard s`` lane — the local
         gather dispatch plus the exchange-back ``device_put`` — and a
-        ``reassemble`` span for the concat + inverse permutation."""
+        ``reassemble`` span for the concat + inverse permutation;
+        failed-over segments get a ``failover`` span instead."""
         tracer = resolve_tracer(tracer)
+        rule = injector.plan.rule_for("shard_exchange") if injector is not None else None
         parts_f: list = []
         parts_h: list = []
         for s, buf in enumerate(part.seg_ids):
             if buf is None:
                 continue
+            if down is not None and s in down:
+                with tracer.span(
+                    "failover",
+                    lane=f"shard {s}",
+                    args={"rows": part.seg_len[s]} if tracer.enabled else None,
+                ):
+                    feats_s, hit_s = self._failover_gather(s, buf, part.seg_len[s])
+                parts_f.append(feats_s)
+                parts_h.append(hit_s)
+                continue
+            if rule is not None and (rule.shard is None or rule.shard == s):
+                try:
+                    injector.check("shard_exchange")
+                except InjectedFault as err:
+                    if err.shard is None:
+                        err.shard = s  # attribute the loss to this exchange
+                    raise
             with tracer.span(
                 "exchange",
                 lane=f"shard {s}",
@@ -331,3 +374,24 @@ class ShardedFeatureStore:
                 inv = jnp.asarray(part.inv.astype(np.int32))
                 feats, hit = feats[inv], hit[inv]
         return feats, hit
+
+    def _failover_gather(self, s: int, buf: np.ndarray, n: int):
+        """Serve a DOWN shard's segment from its host mirror.
+
+        The numpy host mirror (``_host_np``, seeded at partition time)
+        lives in host memory and survives the loss of the shard's device;
+        rows are the same bits the device tables hold and the hit mask is
+        the same position-map test, so the failover route is bit-for-bit
+        the exchange route — only slower (host gather + one device_put of
+        the segment).  ``n`` trims the pow2 pad before assembly, exactly
+        like the exchange path."""
+        fb = self.shards[s]
+        local = np.asarray(buf[:n], np.int64)
+        feats_np = fb.host_np()[local]
+        hit_np = fb.position_np()[local] >= 0
+        if self.assemble_device is not None:
+            return (
+                jax.device_put(feats_np, self.assemble_device),
+                jax.device_put(hit_np, self.assemble_device),
+            )
+        return jnp.asarray(feats_np), jnp.asarray(hit_np)

@@ -207,6 +207,58 @@ def main() -> None:
         "spans show up inside a JAX/XLA profiler capture (needs --trace)",
     )
     ap.add_argument(
+        "--faults",
+        default=None,
+        metavar="PLAN.json",
+        help="inject deterministic faults from a FaultPlan JSON file "
+        "(core/faults.py): named serve-path sites (adj_fetch, host_fetch, "
+        "prefetch, kernel_gather, shard_exchange, refresh_fill) fail or "
+        "delay on seeded per-site schedules.  Replay is a pure function of "
+        "the plan — the same plan + same run produces the same faults.  "
+        "Off (default) = no injector, the bit-for-bit baseline",
+    )
+    ap.add_argument(
+        "--fault-policy",
+        default=None,
+        choices=("fail", "retry", "shed"),
+        help="what a guarded-site failure does: 'fail' fails fast (default), "
+        "'retry' retries with bounded exponential backoff then fails, 'shed' "
+        "retries then sheds just the failing request and keeps serving",
+    )
+    ap.add_argument(
+        "--retry",
+        action="store_true",
+        help="shorthand for --fault-policy retry",
+    )
+    ap.add_argument(
+        "--retry-attempts",
+        type=int,
+        default=3,
+        help="attempts per guarded call including the first (fault policies "
+        "retry/shed)",
+    )
+    ap.add_argument(
+        "--retry-backoff-ms",
+        type=float,
+        default=1.0,
+        help="base backoff before attempt 2; doubles per attempt with "
+        "deterministic seeded jitter, capped (core/retry.py RetryPolicy)",
+    )
+    ap.add_argument(
+        "--retry-timeout-ms",
+        type=float,
+        default=None,
+        help="per-attempt wall-clock budget; an attempt over budget raises "
+        "StageTimeout, which retries like a fault (default: no timeout)",
+    )
+    ap.add_argument(
+        "--degraded-mode",
+        action="store_true",
+        help="serve degraded instead of failing when the miss path is down: "
+        "cache-only feature service (hit rows real, miss rows zero, requests "
+        "marked degraded) and prefetch skipping.  Composes with --fault-policy",
+    )
+    ap.add_argument(
         "--metrics",
         default=None,
         metavar="OUT",
@@ -306,7 +358,9 @@ def main() -> None:
         server = RequestQueueServer(eng, config=cfg, tracer=tracer, metrics=metrics)
         for sid, requests in enumerate(trace):
             server.add_request_stream(requests, seed=eng.seed + sid)
-        rep = server.run()
+        # Under a fault plan, a fail-fast abort still prints the partial
+        # report (with the 'error' field) instead of a traceback.
+        rep = server.run(raise_on_error=args.faults is None)
         finish(rep)
     elif args.streams > 1 or args.mesh > 0:
         if args.mesh > 0:
@@ -328,14 +382,24 @@ def main() -> None:
         seeds = stream_seeds if stream_seeds is not None else [eng.seed]
         for sid, queue in enumerate(queues):
             server.add_stream(queue, seed=seeds[sid])
-        rep = server.run()
+        rep = server.run(raise_on_error=args.faults is None)
         finish(rep)
     else:
+        # The servers above resolve the injector from cfg.faults; the
+        # single-stream engine takes live handles.
+        injector = None
+        if args.faults is not None:
+            from repro.core.faults import FaultInjector, FaultPlan
+
+            injector = FaultInjector(FaultPlan.load(args.faults), tracer=tracer)
         rep = eng.run(
             config=cfg.engine,
             max_batches=args.max_batches,
             tracer=tracer,
             metrics=metrics,
+            injector=injector,
+            retry_policy=cfg.retry_policy(),
+            degraded_mode=cfg.degraded_mode,
         )
         finish(rep)
 

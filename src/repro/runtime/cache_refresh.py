@@ -61,7 +61,7 @@ from repro.core.telemetry import WorkloadTelemetry, merge_windows
 from repro.core.trace import NULL_TRACER
 from repro.graph.csc import BYTES_PER_ADJ_ELEMENT
 
-__all__ = ["RefreshConfig", "RefreshEvent", "CacheRefreshManager"]
+__all__ = ["RefreshConfig", "RefreshEvent", "RefreshFailure", "CacheRefreshManager"]
 
 MODES = ("off", "interval", "events", "all")
 STREAM_WEIGHTINGS = ("none", "queue-depth", "slo-pressure")
@@ -158,6 +158,33 @@ class RefreshEvent:
         }
 
 
+@dataclasses.dataclass(frozen=True)
+class RefreshFailure:
+    """One refresh that failed mid-apply and rolled back.
+
+    ``DualCache.refresh`` is transactional, so a failure leaves the cache
+    byte-for-byte on the old (still servable) epoch — ``epoch`` here is
+    that stale epoch, unchanged.  The telemetry window folded into history
+    before the apply STAYS folded: the next trigger retries the
+    re-allocation from the richer history rather than replaying the lost
+    window."""
+
+    reason: str  # the trigger that fired the failed refresh
+    error: str  # repr of the exception that aborted the apply
+    epoch: int  # the epoch still being served (pre-refresh, post-rollback)
+    pause_seconds: float
+    window_batches: int
+
+    def summary(self) -> dict:
+        return {
+            "reason": self.reason,
+            "error": self.error,
+            "epoch": self.epoch,
+            "pause_s": round(self.pause_seconds, 4),
+            "window_batches": self.window_batches,
+        }
+
+
 class CacheRefreshManager:
     """Drives telemetry → Eq. 1 re-allocation → DualCache delta re-fills.
 
@@ -184,6 +211,11 @@ class CacheRefreshManager:
         # engine/server installs its tracer; refreshes then land as epoch
         # spans + allocation-split counters on the "refresh" lane.
         self.tracer = NULL_TRACER
+        # Settable fault-injection handle (core/faults.py): when the
+        # owning server installs one, each apply charges a ``refresh_fill``
+        # site call; a triggered fault rolls back (see RefreshFailure).
+        self.injector = None
+        self.failures: list[RefreshFailure] = []
         self.telemetry = WorkloadTelemetry(dataset.num_nodes, dataset.graph.num_edges)
         # Weighted-merge mode: per-stream accumulators keyed by the
         # serving layer's stream key; empty under "none" (shared sink).
@@ -386,11 +418,17 @@ class CacheRefreshManager:
         )
 
     # ------------------------------------------------------------ refresh
-    def refresh(self, reason: str = "manual") -> RefreshEvent:
+    def refresh(self, reason: str = "manual") -> RefreshEvent | None:
         """Fold the current telemetry window into history, re-run Eq. 1 on
-        the measured stage ratio, and apply the delta re-fill."""
+        the measured stage ratio, and apply the delta re-fill.
+
+        Returns ``None`` when the apply failed and rolled back (recorded
+        in :attr:`failures`) — the caches are byte-for-byte on the old
+        epoch and serving continues against it."""
         with self.tracer.span("refresh", lane="refresh", args={"reason": reason}):
             event = self._refresh(reason)
+        if event is None:
+            return None
         if self.tracer.enabled:
             # The Eq. 1 split the epoch landed on, as counter tracks — the
             # timeline shows allocation drift across refreshes at a glance.
@@ -409,7 +447,7 @@ class CacheRefreshManager:
             )
         return event
 
-    def _refresh(self, reason: str) -> RefreshEvent:
+    def _refresh(self, reason: str) -> RefreshEvent | None:
         t0 = time.perf_counter()
         for clock in self._clocks:
             self.telemetry.pull_times(clock)
@@ -451,11 +489,31 @@ class CacheRefreshManager:
             feat_need_bytes=self.dataset.features.nbytes,
         )
         allocation = self._clamp_step(caches.allocation, allocation)
-        delta = caches.refresh(
-            allocation=allocation,
-            node_counts=self._node_counts,
-            edge_counts=self._edge_counts,
-        )
+        try:
+            delta = caches.refresh(
+                allocation=allocation,
+                node_counts=self._node_counts,
+                edge_counts=self._edge_counts,
+                injector=self.injector,
+            )
+        except Exception as err:
+            # DualCache.refresh already rolled its state back; record the
+            # failure and keep serving the stale epoch (see RefreshFailure).
+            failure = RefreshFailure(
+                reason=reason,
+                error=repr(err),
+                epoch=caches.epoch,
+                pause_seconds=time.perf_counter() - t0,
+                window_batches=window.batches,
+            )
+            self.failures.append(failure)
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "refresh-rollback",
+                    lane="refresh",
+                    args={"reason": reason, "epoch": caches.epoch, "error": type(err).__name__},
+                )
+            return None
         if self._compute_s > 0.0:
             # Refresh-aware "auto" pipeline depth: re-derive the executor
             # window from the refreshed prep:compute ratio (the same

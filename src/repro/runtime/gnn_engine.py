@@ -33,7 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import EngineConfig, coalesce
+from repro.core.faults import InjectedFault
 from repro.core.policies import PreparedPipeline, prepare
+from repro.core.retry import RetryExhausted, StageTimeout, call_with_retry
 from repro.core.trace import resolve_tracer
 from repro.graph.datasets import SyntheticGraphDataset
 from repro.graph.sampling import pow2_bucket, sample_blocks
@@ -235,6 +237,9 @@ class StreamRuntime:
         use_kernel: bool | None = None,
         gather_buffers: int | None = None,
         dedup: bool | None = None,
+        injector=None,
+        retry_policy=None,
+        degraded_mode: bool = False,
     ):
         self.pipe = pipe
         self.params = params
@@ -253,6 +258,17 @@ class StreamRuntime:
         # of the redundancy dedup targets — so the two are mutually
         # exclusive and reuse wins.
         self.dedup = (pipe.dedup if dedup is None else dedup) and not pipe.reuse_prev_batch
+        # Fault-tolerance wiring (core/faults.py, core/retry.py): with the
+        # injector absent and no retry policy, every guard below is a single
+        # ``is not None`` test — the stage bytecode, RNG draws, and all
+        # accounting are bit-identical to a build without this subsystem.
+        self.injector = injector
+        self.retry_policy = retry_policy
+        self.degraded_mode = degraded_mode
+        self.stage_retries = 0  # backoff retries across all sites
+        self.degraded_batches = 0  # batches served cache-only (miss path down)
+        self.kernel_fallbacks = 0  # kernel_gather faults rerouted to the table path
+        self._retry_seq = 0  # per-stream retry-key sequence (deterministic jitter)
         self.adj_hits = 0
         self.adj_lookups = 0
         self.feat_hits = 0
@@ -278,12 +294,66 @@ class StreamRuntime:
         self._prev_feats = None
         self._prev_nodes = None
 
+    # ---------------------------------------------------- fault tolerance
+    def _with_retry(self, ctx, site: str, fn):
+        """Run ``fn`` under the stream's retry policy, charging backoff
+        retries to ``site``.  Only *injected* faults and per-stage timeouts
+        are retryable — real bugs propagate on the first attempt.  The
+        jitter key is ``(site, seq)`` with a per-stream sequence counter, so
+        the delay schedule is a pure function of the policy seed and the
+        order faults land, never of wall-clock."""
+        if self.retry_policy is None:
+            return fn()
+        self._retry_seq += 1
+        seq = self._retry_seq
+
+        def _on_retry(attempt, delay, err):
+            self.stage_retries += 1
+            ctx.outputs["_retried"] = ctx.outputs.get("_retried", 0) + 1
+            if self.tracer.enabled:
+                self.tracer.complete(
+                    "retry",
+                    lane="faults",
+                    ts_us=self.tracer.now_us(),
+                    dur_us=delay * 1e6,
+                    args={"site": site, "attempt": attempt},
+                )
+
+        return call_with_retry(
+            fn,
+            policy=self.retry_policy,
+            key=(site, seq),
+            retryable=(InjectedFault, StageTimeout),
+            on_retry=_on_retry,
+        )
+
+    def _mark_degraded(self, ctx) -> None:
+        """Flag the batch as served degraded (cache-only hit rows, zero
+        miss rows) so retire-time accounting and the serve report surface
+        it per request."""
+        self.degraded_batches += 1
+        ctx.outputs["_degraded"] = True
+        if self.tracer.enabled:
+            self.tracer.complete(
+                "degraded",
+                lane="faults",
+                ts_us=self.tracer.now_us(),
+                dur_us=0.0,
+                args={"site": "host_fetch"},
+            )
+
     # ------------------------------------------------------------- stages
     def sample(self, ctx):
         # Stamp the cache epoch the batch dispatches against — retire-time
         # accounting attributes its hits to this epoch even if a refresh
         # lands while the batch is still in flight.
         ctx.epoch = self.pipe.caches.epoch
+        if self.injector is not None and self.injector.active("adj_fetch"):
+            # Charge BEFORE the RNG key split so a retried attempt replays
+            # the exact same batch — the fault site is idempotent.  There
+            # is no degraded fallback for adjacency: without the graph
+            # there is nothing to sample, so exhausted retries propagate.
+            self._with_retry(ctx, "adj_fetch", lambda: self.injector.check("adj_fetch"))
         self.key, sub = jax.random.split(self.key)
         block = sample_blocks(
             sub,
@@ -342,12 +412,62 @@ class StreamRuntime:
         ``num_miss`` that the consuming ``_gather`` accepts via its
         ``prefetched`` keyword."""
         del ctx
-        return self.pipe.caches.store.prefetch_misses(nodes, num_live=num_live)
+        return self.pipe.caches.store.prefetch_misses(
+            nodes, num_live=num_live, injector=self.injector
+        )
 
     def _gather(self, ctx, indices, **gather_kw):
         """Two-source feature gather over ``indices`` → ``(feats, hit)``."""
         del ctx
-        return self.pipe.caches.store.gather(indices, **gather_kw)
+        return self.pipe.caches.store.gather(indices, injector=self.injector, **gather_kw)
+
+    def _gather_ft(self, ctx, indices, **gather_kw):
+        """``_gather`` under the fault-tolerance envelope.
+
+        With no injector this IS ``_gather`` (one ``is None`` test).  With
+        one, the gather runs under retry; when retries exhaust (or the
+        policy is fail-fast) the recovery depends on the faulted site:
+
+        * ``kernel_gather`` — reroute to the table gather (``use_kernel``
+          off).  Numerically bit-identical by the kernel-parity contract,
+          so the batch is NOT degraded; only ``kernel_fallbacks`` counts.
+        * ``host_fetch`` with ``degraded_mode`` — serve cache-only: hit
+          rows real, miss rows zero, batch marked degraded
+          (:meth:`FeatureStore.gather_cache_only`).
+        * otherwise — propagate.
+        """
+        if self.injector is None:
+            return self._gather(ctx, indices, **gather_kw)
+        try:
+            return self._with_retry(
+                ctx, "host_fetch", lambda: self._gather(ctx, indices, **gather_kw)
+            )
+        except (InjectedFault, RetryExhausted, StageTimeout) as err:
+            root = err.last if isinstance(err, RetryExhausted) else err
+            site = getattr(root, "site", None)
+            if site == "kernel_gather":
+                self.kernel_fallbacks += 1
+                if self.tracer.enabled:
+                    self.tracer.complete(
+                        "kernel-fallback",
+                        lane="faults",
+                        ts_us=self.tracer.now_us(),
+                        dur_us=0.0,
+                        args={"site": site},
+                    )
+                fallback_kw = dict(gather_kw)
+                fallback_kw["use_kernel"] = False
+                fallback_kw.pop("row_block", None)
+                return self._gather(ctx, indices, **fallback_kw)
+            if site == "host_fetch" and self.degraded_mode:
+                self._mark_degraded(ctx)
+                return self._gather_cache_only(ctx, indices)
+            raise
+
+    def _gather_cache_only(self, ctx, indices):
+        """Degraded-mode gather: cached rows only (overridable hook)."""
+        del ctx
+        return self.pipe.caches.store.gather_cache_only(indices)
 
     def prefetch_stage(self, ctx):
         """Stage the *missed* host rows for this batch onto the device.
@@ -363,9 +483,24 @@ class StreamRuntime:
         the gather consuming the pack runs over the unique bucket."""
         if self.dedup:
             _, nu, _, uids = self._dedup_view(ctx)
-            staged = self._prefetch(ctx, np.asarray(uids), num_live=nu)
+            stage = lambda: self._prefetch(ctx, np.asarray(uids), num_live=nu)  # noqa: E731
         else:
-            staged = self._prefetch(ctx, np.asarray(ctx.outputs["sample"][0].input_nodes))
+            nodes = np.asarray(ctx.outputs["sample"][0].input_nodes)
+            stage = lambda: self._prefetch(ctx, nodes)  # noqa: E731
+        if self.injector is None:
+            staged = stage()
+        else:
+            try:
+                staged = self._with_retry(ctx, "prefetch", stage)
+            except (InjectedFault, RetryExhausted, StageTimeout) as err:
+                root = err.last if isinstance(err, RetryExhausted) else err
+                if getattr(root, "site", None) != "prefetch" or not self.degraded_mode:
+                    raise
+                # Prefetch down: skip staging and let the feature stage
+                # gather misses over the ordinary host path.  Outputs and
+                # hit accounting are bit-identical (prefetch only moves
+                # bytes early), so the batch is NOT marked degraded.
+                return None
         self.prefetched_rows += staged.num_miss
         return staged
 
@@ -383,7 +518,7 @@ class StreamRuntime:
             # inverse map, so every count downstream is bit-identical to
             # the duplicate-carrying gather.
             dd, nu, bucket, uids = self._dedup_view(ctx)
-            feats_u, hit_u = self._gather(
+            feats_u, hit_u = self._gather_ft(
                 ctx, uids, row_block=ROW_BLOCK if self.use_kernel else None, **gather_kw
             )
             hit = hit_u[dd.inverse]
@@ -396,11 +531,11 @@ class StreamRuntime:
             pos = self._prev_map[nodes]
             hit_np = pos >= 0
             reused = self._prev_feats[jnp.asarray(np.maximum(pos, 0))]
-            fresh, _ = self._gather(ctx, block.input_nodes, **gather_kw)
+            fresh, _ = self._gather_ft(ctx, block.input_nodes, **gather_kw)
             feats = jnp.where(jnp.asarray(hit_np)[:, None], reused, fresh)
             hit = jnp.asarray(hit_np)
         else:
-            feats, hit = self._gather(ctx, block.input_nodes, **gather_kw)
+            feats, hit = self._gather_ft(ctx, block.input_nodes, **gather_kw)
         if self.pipe.reuse_prev_batch:
             # The *next* batch's gather reads this state, so it must be
             # updated here rather than at retire time — with depth > 1
@@ -857,6 +992,9 @@ class GNNInferenceEngine:
         refresh=None,
         tracer=None,
         metrics=None,
+        injector=None,
+        retry_policy=None,
+        degraded_mode: bool = False,
     ):
         """Run inference over the dataset's test batches (or explicit seed
         ``batches``) and return the stage-time / hit-rate report.
@@ -969,6 +1107,9 @@ class GNNInferenceEngine:
             use_kernel=cfg.use_kernel,
             gather_buffers=cfg.gather_buffers,
             dedup=cfg.dedup,
+            injector=injector,
+            retry_policy=retry_policy,
+            degraded_mode=degraded_mode,
         )
         rt.tracer = tracer
         clock = StageClock(overlap=depth > 1)
@@ -985,6 +1126,7 @@ class GNNInferenceEngine:
             )
             manager.register_clock(clock, key=0)
             manager.tracer = tracer
+            manager.injector = injector
             rt.telemetry = manager.telemetry_for(0)
             if warmup:
                 # Refresh-aware warmup: a growing delta re-fill would

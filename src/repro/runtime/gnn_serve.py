@@ -48,6 +48,8 @@ import jax
 import numpy as np
 
 from repro.core.config import EngineConfig, ServeConfig, coalesce
+from repro.core.faults import FaultInjector, FaultPlan, InjectedFault
+from repro.core.retry import RetryExhausted, StageTimeout
 from repro.core.trace import resolve_tracer
 from repro.runtime.gnn_engine import (
     GNNInferenceEngine,
@@ -99,6 +101,11 @@ class StreamState:
     max_inflight_seen: int = 0
     seeds_served: int = 0
     latencies: list = dataclasses.field(default_factory=list)
+    # Fault-tolerance accounting (zeros without an injector):
+    batches_shed: int = 0  # dropped by the shed policy after retries exhausted
+    batches_timed_out: int = 0  # shed batches whose terminal error was a timeout
+    batches_retried: int = 0  # retired batches that needed >= 1 backoff retry
+    batches_degraded: int = 0  # retired batches served cache-only (miss path down)
     _admit_times: dict = dataclasses.field(default_factory=dict)
     _flow_ids: dict = dataclasses.field(default_factory=dict)  # batch idx -> trace flow id
 
@@ -132,6 +139,11 @@ class StreamReport:
     requests_shed: int = 0
     deadline_hits: int = 0
     deadline_total: int = 0
+    # Fault-tolerance accounting (core/faults.py; zeros without an injector):
+    requests_timed_out: int = 0
+    requests_retried: int = 0
+    requests_degraded: int = 0
+    stage_retries: int = 0  # individual backoff retries across all sites
 
     @property
     def adj_hit_rate(self) -> float:
@@ -154,6 +166,12 @@ class StreamReport:
         }
         if self.requests_shed:
             out["requests_shed"] = self.requests_shed
+        if self.requests_timed_out:
+            out["requests_timed_out"] = self.requests_timed_out
+        if self.requests_retried:
+            out["requests_retried"] = self.requests_retried
+        if self.requests_degraded:
+            out["requests_degraded"] = self.requests_degraded
         if self.deadline_total:
             out["deadline_hits"] = self.deadline_hits
             out["deadline_total"] = self.deadline_total
@@ -192,6 +210,15 @@ class ServeReport:
     requests_shed: int = 0
     deadline_hits: int = 0
     deadline_total: int = 0
+    # Fault-tolerance accounting (None/zeros without an injector):
+    requests_timed_out: int = 0
+    requests_retried: int = 0
+    requests_degraded: int = 0
+    unserved: int = 0  # requests/batches still queued when the loop ended
+    fault_policy: str = "fail"
+    faults: dict | None = None  # FaultInjector.counts() at report time
+    error: str | None = None  # terminal error repr (run(raise_on_error=False))
+    failovers: list = dataclasses.field(default_factory=list)  # shard-loss log
     # Sharded serving (runtime/sharded_serve.py): per-shard hit/byte/
     # allocation accounting; single-device runs leave the defaults.
     num_shards: int = 1
@@ -259,10 +286,25 @@ class ServeReport:
     def deadline_hit_rate(self) -> float:
         """Fraction of deadline-carrying requests retired on time (shed
         and late requests both count as misses); 1.0 when no request
-        carried a deadline."""
+        carried a deadline.  Timed-out requests are excluded from the
+        denominator — they are reported separately as
+        ``requests_timed_out``, not silently folded into SLO misses."""
         if not self.deadline_total:
             return 1.0
         return self.deadline_hits / self.deadline_total
+
+    @property
+    def availability(self) -> float:
+        """Fraction of *offered* work that completed (degraded service
+        counts as available — the request was answered, and marked).
+        Offered = completed + shed + still-queued-at-exit; a fail-fast
+        run that dies early therefore scores near zero, which is exactly
+        the contrast bench_faults gates degraded mode against."""
+        completed = self.total_batches
+        offered = completed + self.requests_shed + self.unserved
+        if not offered:
+            return 1.0
+        return completed / offered
 
     def modeled_transfer_seconds(self, slow_bw: float = PCIE4_BW, fast_bw: float = HBM_BW) -> float:
         """Project aggregate byte movement onto a slow-miss / fast-hit link
@@ -302,6 +344,19 @@ class ServeReport:
             out["requests_shed"] = self.requests_shed
             if self.deadline_total:
                 out["deadline_hit_rate"] = round(self.deadline_hit_rate, 4)
+        if self.faults is not None:
+            out["fault_policy"] = self.fault_policy
+            out["faults"] = self.faults
+            out["availability"] = round(self.availability, 4)
+            out["requests_timed_out"] = self.requests_timed_out
+            out["requests_retried"] = self.requests_retried
+            out["requests_degraded"] = self.requests_degraded
+            out["requests_shed"] = self.requests_shed
+            out["unserved"] = self.unserved
+        if self.failovers:
+            out["failovers"] = self.failovers
+        if self.error is not None:
+            out["error"] = self.error
         if self.dedup:
             out["unique_rows"] = self.unique_rows
             out["gathered_rows"] = self.gathered_rows
@@ -358,6 +413,7 @@ class MultiStreamServer:
         refresh=None,
         tracer=None,
         metrics=None,
+        injector=None,
     ):
         if engine.pipeline is None:
             raise RuntimeError("prepare() the engine before constructing the server")
@@ -390,6 +446,20 @@ class MultiStreamServer:
                 )
             )
         self.config = cfg
+        # Fault-tolerance wiring (core/faults.py, core/retry.py).  The
+        # injector is a live handle like tracer/metrics — pass one in, or
+        # point ``cfg.faults`` at a FaultPlan JSON.  With neither, every
+        # guard below is a single ``is None`` test and the serve path is
+        # bit-for-bit the pre-fault-subsystem one.
+        if injector is None and cfg.faults is not None:
+            injector = FaultInjector(FaultPlan.load(cfg.faults))
+        if injector is not None and not injector.tracer.enabled:
+            injector.tracer = self.tracer
+        self.injector = injector
+        self.retry_policy = cfg.retry_policy()
+        self.degraded_mode = cfg.degraded_mode
+        self.fault_policy = cfg.fault_policy
+        self._last_error: str | None = None
         depth = 2 if cfg.engine.pipeline_depth is None else cfg.engine.pipeline_depth
         self._auto_depth = depth == "auto"
         if depth == "auto":
@@ -416,6 +486,7 @@ class MultiStreamServer:
             # server for each stream's live pressure at refresh time.
             self.refresh_manager.set_weight_fn(self._stream_weight)
             self.refresh_manager.tracer = self.tracer
+            self.refresh_manager.injector = self.injector
         self._started = False  # join/leave events fire only once serving began
         self._executor = None  # live executor during run() (auto-depth hook)
         self._serve_t0 = None  # perf_counter at serve start (arrival clock origin)
@@ -501,6 +572,9 @@ class MultiStreamServer:
             use_kernel=self.use_kernel,
             gather_buffers=self.gather_buffers,
             dedup=self.dedup,
+            injector=self.injector,
+            retry_policy=self.retry_policy,
+            degraded_mode=self.degraded_mode,
         )
 
     def remove_stream(self, stream_id: int) -> StreamState:
@@ -606,6 +680,14 @@ class MultiStreamServer:
     def _on_retire(self, ctx) -> None:
         s: StreamState = ctx.stream
         s.runtime.record(ctx)
+        if ctx.outputs.get("_retried"):
+            s.batches_retried += 1
+            if self.metrics is not None:
+                self.metrics.counter("requests_retried_total", stream=s.stream_id).inc()
+        if ctx.outputs.get("_degraded"):
+            s.batches_degraded += 1
+            if self.metrics is not None:
+                self.metrics.counter("requests_degraded_total", stream=s.stream_id).inc()
         now_t = time.perf_counter()
         admit_t = s._admit_times.pop(s.retired)
         latency = now_t - admit_t
@@ -628,6 +710,70 @@ class MultiStreamServer:
             event = self.refresh_manager.note_retired()
             if event is not None:
                 self._apply_refresh_event(event)
+
+    # ------------------------------------------------------ fault shedding
+    @staticmethod
+    def _fault_root(err: BaseException) -> BaseException:
+        """The underlying fault behind a retry-exhausted wrapper."""
+        return err.last if isinstance(err, RetryExhausted) else err
+
+    def _on_batch_error(self, ctx, err: BaseException) -> bool:
+        """Executor hook under ``fault_policy="shed"``: drop JUST the
+        failing batch (after its retries exhausted) and keep serving.
+
+        Only fault-subsystem errors are shed — injected faults, retry
+        exhaustion, and stage timeouts; anything else is a real bug and
+        propagates.  The dying batch is always the most recently admitted
+        (stages dispatch synchronously at admission), so its per-stream
+        index is ``submitted - 1``; rolling ``submitted`` back keeps the
+        retire-side ``_admit_times.pop(retired)`` bookkeeping contiguous,
+        and a batch is counted shed XOR completed, never both."""
+        if not isinstance(err, (InjectedFault, RetryExhausted, StageTimeout)):
+            return False
+        s: StreamState = ctx.stream
+        root = self._fault_root(err)
+        idx = s.submitted - 1
+        self._shed_inflight(s, idx, root)
+        if self.tracer.enabled:
+            self.tracer.complete(
+                "shed",
+                lane="faults",
+                ts_us=self.tracer.now_us(),
+                dur_us=0.0,
+                args={
+                    "stream": s.stream_id,
+                    "batch": idx,
+                    "error": type(root).__name__,
+                    "site": getattr(root, "site", None),
+                },
+            )
+        return True
+
+    def _shed_inflight(self, s: StreamState, idx: int, root: BaseException) -> None:
+        """Undo batch ``idx``'s admission-side bookkeeping and count it
+        shed.  The request front-end extends this to mark the riding
+        request shed/timed-out as well."""
+        s._admit_times.pop(idx, None)
+        s._flow_ids.pop(idx, None)
+        s.submitted -= 1
+        s.inflight -= 1
+        s.batches_shed += 1
+        if isinstance(root, StageTimeout):
+            s.batches_timed_out += 1
+            if self.metrics is not None:
+                self.metrics.counter("requests_timed_out_total", stream=s.stream_id).inc()
+        if self.metrics is not None:
+            self.metrics.counter("requests_shed_total", stream=s.stream_id).inc()
+
+    def _note_failed_admission(self, err: BaseException) -> None:
+        """After a terminal executor error: the failing batch was admitted
+        but never retired (the drain covered only the others) — roll its
+        bookkeeping back so shed XOR completed still holds in the partial
+        report."""
+        root = self._fault_root(err)
+        for s in self.streams:
+            while s.inflight > 0 and s.submitted > s.retired:
+                self._shed_inflight(s, s.submitted - 1, root)
 
     def _apply_refresh_event(self, event) -> None:
         """React to a refresh that just fired on the retire path.  The
@@ -662,7 +808,16 @@ class MultiStreamServer:
         s = self.streams[key]
         return 1.0 + len(s.queue) + s.inflight
 
-    def run(self, *, warmup: bool = True) -> ServeReport:
+    def run(self, *, warmup: bool = True, raise_on_error: bool = True) -> ServeReport:
+        """Serve every queued batch and return the :class:`ServeReport`.
+
+        ``raise_on_error=False`` converts a terminal fault-subsystem error
+        (injected fault / retry exhaustion / stage timeout escaping the
+        executor under ``fault_policy != "shed"``) into a PARTIAL report:
+        in-flight batches drain with full accounting, the error lands on
+        ``report.error``, and unserved batches count against
+        ``report.availability`` — the fail-fast arm of bench_faults.
+        Real bugs always propagate."""
         if not self.streams:
             raise RuntimeError("add_stream() at least one stream before run()")
         self._started = True
@@ -691,15 +846,26 @@ class MultiStreamServer:
             depth=self.depth,
             clock_for=lambda c: c.stream.clock,
             on_retire=self._on_retire,
+            on_batch_error=self._on_batch_error if self.fault_policy == "shed" else None,
             tracer=self.tracer,
         )
         self._executor = executor
+        self._last_error = None
         self._serve_t0 = t0 = time.perf_counter()
         if self.tracer.enabled:
             self.tracer.instant(
                 "serve-start", lane="serve", args={"streams": len(self.streams)}
             )
-        executor.run_tagged(self._admission())
+        try:
+            executor.run_tagged(self._admission())
+        except (InjectedFault, RetryExhausted, StageTimeout) as err:
+            # The executor already drained in-flight batches (accounting
+            # ran); the failing batch itself never retired — undo its
+            # admission-side bookkeeping so shed XOR completed holds.
+            self._note_failed_admission(err)
+            if raise_on_error:
+                raise
+            self._last_error = repr(err)
         wall = time.perf_counter() - t0
         self._executor = None
         report = self._serve_report(wall)
@@ -748,6 +914,7 @@ class MultiStreamServer:
         for s in self.streams:
             pooled.extend(s.latencies)
         _, _, p50, p95, p99 = _latency_stats(pooled)
+        stream_reports = [self._stream_report(s) for s in self.streams]
         return ServeReport(
             policy=self.engine.pipeline.name,
             num_streams=len(self.streams),
@@ -755,7 +922,7 @@ class MultiStreamServer:
             max_inflight_per_stream=self.max_inflight,
             wall_seconds=wall,
             feat_row_bytes=self.engine.dataset.feature_nbytes_per_row(),
-            streams=[self._stream_report(s) for s in self.streams],
+            streams=stream_reports,
             prefetch=self.prefetch,
             dedup=self.dedup,
             refresh_events=(
@@ -766,7 +933,21 @@ class MultiStreamServer:
             p95_latency_s=p95,
             p99_latency_s=p99,
             config=self._resolved_config(),
+            requests_shed=sum(r.requests_shed for r in stream_reports),
+            requests_timed_out=sum(r.requests_timed_out for r in stream_reports),
+            requests_retried=sum(r.requests_retried for r in stream_reports),
+            requests_degraded=sum(r.requests_degraded for r in stream_reports),
+            unserved=self._unserved(),
+            fault_policy=self.fault_policy,
+            faults=self.injector.counts() if self.injector is not None else None,
+            error=self._last_error,
         )
+
+    def _unserved(self) -> int:
+        """Work still queued when the serve loop ended (terminal error or
+        shed-everything storms leave a non-empty tail); the availability
+        denominator counts it as offered-but-not-served."""
+        return sum(len(s.queue) for s in self.streams)
 
     def _aggregate_epochs(self) -> dict[int, dict]:
         """Sum per-epoch counters across streams — the shared cache's view."""
@@ -803,6 +984,11 @@ class MultiStreamServer:
             unique_rows=rt.unique_rows,
             gathered_rows=rt.gathered_rows,
             epoch_hits=rt.epoch_hit_rates() if self.refresh_manager is not None else None,
+            requests_shed=s.batches_shed,
+            requests_timed_out=s.batches_timed_out,
+            requests_retried=s.batches_retried,
+            requests_degraded=s.batches_degraded,
+            stage_retries=rt.stage_retries,
         )
 
 

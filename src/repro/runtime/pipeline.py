@@ -149,6 +149,14 @@ class PipelinedExecutor:
     the batch's final stage output is ready — the place for host-side
     accounting (hit counters, logits collection) that would otherwise force
     a sync mid-pipeline.
+
+    Failure semantics: an exception escaping a stage mid-window drains
+    every in-flight batch (their ``on_retire`` accounting runs, their
+    slots release) before the first error re-raises — no deadlock, no
+    silently dropped batches.  ``on_batch_error(ctx, err)``, when set,
+    is consulted first: returning ``True`` drops just the failing batch
+    (its slot and index are reused) and the run continues — the serving
+    layer's request-shedding hook.
     """
 
     def __init__(
@@ -159,6 +167,7 @@ class PipelinedExecutor:
         clock: StageClock | None = None,
         clock_for: Callable[[BatchContext], StageClock] | None = None,
         on_retire: Callable[[BatchContext], None] | None = None,
+        on_batch_error: Callable[[BatchContext, BaseException], bool] | None = None,
         tracer=None,
     ):
         if depth < 1:
@@ -171,6 +180,7 @@ class PipelinedExecutor:
         self.clock = clock if clock is not None else StageClock(overlap=depth > 1)
         self.clock_for = clock_for
         self.on_retire = on_retire
+        self.on_batch_error = on_batch_error
         self.tracer = resolve_tracer(tracer)
         self._free_slots: list[int] = []  # min-heap of released window slots
         self._next_slot = 0
@@ -226,38 +236,64 @@ class PipelinedExecutor:
         retired: list[BatchContext] = []
         tracer = self.tracer
         index = 0
-        for item in items:
-            if item is DRAIN:
-                while window:
+        try:
+            for item in items:
+                if item is DRAIN:
+                    while window:
+                        retired.append(self._retire(window.popleft()))
+                    continue
+                stream, payload = item
+                ctx = BatchContext(index, payload, stream)
+                index += 1
+                clock = self._clock(ctx)
+                lane, args = "slot 0", None
+                ctx.slot = self._acquire_slot()
+                if tracer.enabled:
+                    lane = f"slot {ctx.slot}"
+                    args = {"batch": ctx.index}
+                    if ctx.stream is not None:
+                        args["stream"] = _stream_label(ctx.stream)
+                    ctx.trace_t0 = tracer.now_us()
+                try:
+                    for st in self.stages:
+                        sync = None
+                        if st.sync is not None:
+                            sync = (lambda s=st, c=ctx: s.sync(c))
+                        # The trace span wraps the clock lap, so in serial
+                        # mode it covers the stage's sync too — span
+                        # durations and Eq. 1 stage laps agree (asserted in
+                        # tests/test_trace.py).
+                        with tracer.span(st.name, lane=lane, args=args):
+                            with clock.stage(st.name, sync=sync):
+                                ctx.outputs[st.name] = st.fn(ctx)
+                except BaseException as err:
+                    if self.on_batch_error is not None and self.on_batch_error(ctx, err):
+                        # Handled: the batch is dropped (never enters the
+                        # window, never retires) and its slot/index are
+                        # reusable, so the next admission sees the same
+                        # window occupancy a successful retire would leave.
+                        heapq.heappush(self._free_slots, ctx.slot)
+                        ctx.outputs.clear()
+                        index -= 1
+                        continue
+                    raise
+                window.append(ctx)
+                while len(window) > self.depth - 1:
                     retired.append(self._retire(window.popleft()))
-                continue
-            stream, payload = item
-            ctx = BatchContext(index, payload, stream)
-            index += 1
-            clock = self._clock(ctx)
-            lane, args = "slot 0", None
-            ctx.slot = self._acquire_slot()
-            if tracer.enabled:
-                lane = f"slot {ctx.slot}"
-                args = {"batch": ctx.index}
-                if ctx.stream is not None:
-                    args["stream"] = _stream_label(ctx.stream)
-                ctx.trace_t0 = tracer.now_us()
-            for st in self.stages:
-                sync = None
-                if st.sync is not None:
-                    sync = (lambda s=st, c=ctx: s.sync(c))
-                # The trace span wraps the clock lap, so in serial mode it
-                # covers the stage's sync too — span durations and Eq. 1
-                # stage laps agree (asserted in tests/test_trace.py).
-                with tracer.span(st.name, lane=lane, args=args):
-                    with clock.stage(st.name, sync=sync):
-                        ctx.outputs[st.name] = st.fn(ctx)
-            window.append(ctx)
-            while len(window) > self.depth - 1:
+            while window:  # drain whatever is still in flight
                 retired.append(self._retire(window.popleft()))
-        while window:  # drain whatever is still in flight
-            retired.append(self._retire(window.popleft()))
+        except BaseException:
+            # A stage (or retire sync) failed mid-window: drain every
+            # in-flight batch best-effort so completed work still retires
+            # (accounting runs, slots release, nothing is silently
+            # dropped), then re-raise the FIRST error.
+            while window:
+                ctx = window.popleft()
+                try:
+                    self._retire(ctx)
+                except BaseException:  # noqa: S110 - first error wins
+                    pass
+            raise
         return retired
 
     def _retire(self, ctx: BatchContext) -> BatchContext:

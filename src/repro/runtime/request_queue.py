@@ -45,6 +45,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.policies import ADMISSION_POLICIES, AdmissionPolicy
+from repro.core.retry import StageTimeout
 from repro.runtime.gnn_serve import MultiStreamServer, ServeReport, StreamReport, StreamState
 from repro.runtime.pipeline import DRAIN
 
@@ -65,9 +66,14 @@ class Request:
 
     ``arrival_s``/``deadline_s`` are seconds on the serve clock (0 = serve
     start).  ``admitted_s``/``retired_s`` are stamped by the server;
-    ``shed`` marks a request the SLO policy dropped (it never ran),
+    ``shed`` marks a request the SLO policy dropped (it never ran) OR one
+    the fault-shedding policy dropped after its retries exhausted (it ran
+    and failed — ``timed_out`` says whether a stage timeout killed it),
     ``deferred`` one whose blown deadline was demoted to best-effort (it
-    still runs, after everything that can still meet a deadline)."""
+    still runs, after everything that can still meet a deadline).
+    ``degraded`` marks a request answered from cache only (miss path
+    down — hit rows real, miss rows zero); ``retries`` counts the backoff
+    retries its batch needed."""
 
     request_id: int
     stream_id: int
@@ -78,6 +84,9 @@ class Request:
     retired_s: float | None = None
     shed: bool = False
     deferred: bool = False
+    timed_out: bool = False
+    degraded: bool = False
+    retries: int = 0
 
     @property
     def latency_s(self) -> float | None:
@@ -430,10 +439,25 @@ class RequestQueueServer(MultiStreamServer):
         req: Request = s._inflight_reqs.pop(s.retired)  # retiring batch's index
         super()._on_retire(ctx)
         req.retired_s = self._now()
+        req.retries = int(ctx.outputs.get("_retried", 0))
+        req.degraded = bool(ctx.outputs.get("_degraded", False))
         # The base class booked admit→retire; requests are judged on
         # enqueue→retire (queueing wait included).
         s.latencies[-1] = max(req.retired_s - req.arrival_s, 0.0)
         s.completed.append(req)
+
+    def _shed_inflight(self, s: StreamState, idx: int, root: BaseException) -> None:
+        """Fault-shedding under the request front-end: the dying batch is
+        carrying exactly one request — pop it off the in-flight map (so
+        retire-side bookkeeping can never also complete it: shed XOR
+        completed, counted exactly once) and mark why it died."""
+        req = s._inflight_reqs.pop(idx, None)
+        if req is not None:
+            req.shed = True
+            req.timed_out = isinstance(root, StageTimeout)
+            s.shed_requests.append(req)
+            self.total_shed += 1
+        super()._shed_inflight(s, idx, root)
 
     # ----------------------------------------------------------- reporting
     def _stream_weight(self, key) -> float:
@@ -456,11 +480,24 @@ class RequestQueueServer(MultiStreamServer):
         rep = super()._stream_report(s)
         completed = getattr(s, "completed", [])
         shed = getattr(s, "shed_requests", [])
-        with_deadline = [r for r in (*completed, *shed) if r.deadline_s is not None]
+        # Timed-out requests are excluded from the SLO denominator: a
+        # stage timeout is an infrastructure failure, reported on its own
+        # axis (``requests_timed_out``), not a scheduling miss — folding
+        # it into deadline_hit_rate would double-charge one event to two
+        # rates.  Counted exactly once either way: shed XOR completed.
+        with_deadline = [
+            r for r in (*completed, *shed) if r.deadline_s is not None and not r.timed_out
+        ]
         rep.requests_shed = len(shed)
+        rep.requests_timed_out = sum(1 for r in (*completed, *shed) if r.timed_out)
+        rep.requests_retried = sum(1 for r in completed if r.retries)
+        rep.requests_degraded = sum(1 for r in completed if r.degraded)
         rep.deadline_total = len(with_deadline)
         rep.deadline_hits = sum(1 for r in with_deadline if r.deadline_met)
         return rep
+
+    def _unserved(self) -> int:
+        return sum(len(getattr(s, "requests", ())) for s in self.streams)
 
     def _resolved_config(self):
         # Echo the policy actually installed (a class/instance passed via

@@ -39,6 +39,7 @@ import jax
 import numpy as np
 
 from repro.core.allocation import shard_allocations
+from repro.core.faults import InjectedFault
 from repro.graph.csc import BYTES_PER_ADJ_ELEMENT
 from repro.graph.sampling import DedupFrontier
 from repro.graph.shard import ShardedFeatureStore, make_shard_plan
@@ -66,6 +67,40 @@ class ShardedDualCache:
     adj_replicas: list
     devices: list | None
     epoch: int
+    # Failover state (core/faults.py shard_exchange site): shard id →
+    # retired batches left until rejoin (-1 = until process end).  While a
+    # shard is down its id-range is served from the host-mirror fallback
+    # (ShardedFeatureStore._failover_gather) — values and hit accounting
+    # bit-identical, only the byte route changes.
+    down: dict = dataclasses.field(default_factory=dict)
+    failovers: list = dataclasses.field(default_factory=list)
+
+    @property
+    def down_set(self) -> set:
+        return set(self.down)
+
+    def mark_down(self, shard: int, *, down_for: int | None = None, call: int = 0) -> None:
+        """Record a lost shard; idempotent while already down."""
+        if shard not in self.down:
+            self.down[shard] = -1 if down_for is None else int(down_for)
+            self.failovers.append(
+                {"shard": int(shard), "down_for": self.down[shard], "call": int(call)}
+            )
+
+    def note_retired(self) -> list[int]:
+        """Tick rejoin countdowns at a retire boundary; returns the shards
+        that just rejoined (their device exchange resumes on the next
+        batch — the host fallback was bit-identical, so rejoin is also
+        invisible to outputs)."""
+        rejoined = []
+        for shard in list(self.down):
+            if self.down[shard] < 0:
+                continue
+            self.down[shard] -= 1
+            if self.down[shard] <= 0:
+                del self.down[shard]
+                rejoined.append(shard)
+        return rejoined
 
     @classmethod
     def build(cls, caches, num_shards: int, devices=None) -> "ShardedDualCache":
@@ -155,18 +190,61 @@ class ShardedStreamRuntime(StreamRuntime):
 
     def _prefetch(self, ctx, nodes, num_live=None):
         del num_live  # the partition's per-shard live windows carry it
-        staged = self.sharded.store.prefetch(self._partition(ctx, nodes))
+        if self.injector is not None:
+            # Charged ONCE per batch at the runtime level (the per-shard
+            # fan-out below is one logical staging op), mirroring the
+            # single-device FeatureStore.prefetch_misses site.
+            self.injector.check("prefetch")
+        staged = self.sharded.store.prefetch(
+            self._partition(ctx, nodes), down=self.sharded.down_set or None
+        )
         for s, p in enumerate(staged.parts):
             if p is not None:
                 self.shard_prefetched_rows[s] += p.num_miss
         return staged
 
     def _gather(self, ctx, indices, **gather_kw):
+        if self.injector is not None:
+            # Same once-per-batch charging as FeatureStore.gather: the
+            # whole-frontier host path, then the kernel route when on.
+            self.injector.check("host_fetch")
+            if gather_kw.get("use_kernel"):
+                self.injector.check("kernel_gather")
         part = self._partition(ctx, indices)
         for s, buf in enumerate(part.seg_ids):
             if buf is not None:
                 self.shard_gathered_rows[s] += len(buf)
-        return self.sharded.store.gather(part, tracer=self.tracer, **gather_kw)
+        while True:
+            try:
+                return self.sharded.store.gather(
+                    part,
+                    tracer=self.tracer,
+                    injector=self.injector,
+                    down=self.sharded.down_set or None,
+                    **gather_kw,
+                )
+            except InjectedFault as err:
+                if err.site != "shard_exchange" or err.shard is None:
+                    raise
+                # Lost device mid-exchange: fail the shard over to its
+                # host mirror and redo the gather — already-exchanged
+                # segments re-gather the same bits, the victim's segment
+                # takes the fallback route, and the loop converges (a
+                # downed shard is never charged again).
+                rule = self.injector.plan.rule_for("shard_exchange")
+                self.sharded.mark_down(
+                    err.shard,
+                    down_for=rule.down_for if rule is not None else None,
+                    call=err.call,
+                )
+                if self.tracer.enabled:
+                    self.tracer.complete(
+                        "shard-down",
+                        lane="faults",
+                        ts_us=self.tracer.now_us(),
+                        dur_us=0.0,
+                        args={"shard": err.shard, "call": err.call},
+                    )
 
     # ----------------------------------------------------------- accounting
     def record(self, ctx) -> None:
@@ -245,6 +323,9 @@ class ShardedServer(MultiStreamServer):
             use_kernel=self.use_kernel,
             gather_buffers=self.gather_buffers,
             dedup=self.dedup,
+            injector=self.injector,
+            retry_policy=self.retry_policy,
+            degraded_mode=self.degraded_mode,
             sharded=self.sharded,
             replica=sid % self.num_shards,
         )
@@ -277,6 +358,16 @@ class ShardedServer(MultiStreamServer):
             feat_need_bytes=self.engine.dataset.features.nbytes,
         )
 
+    def _on_retire(self, ctx) -> None:
+        super()._on_retire(ctx)
+        if self.sharded.down:
+            # Failover rejoin ticks on the same retire boundary every
+            # other epoch-style transition uses, so no batch ever sees a
+            # mixed layout mid-flight.
+            for shard in self.sharded.note_retired():
+                if self.tracer.enabled:
+                    self.tracer.instant("shard-rejoin", lane="faults", args={"shard": shard})
+
     def _apply_refresh_event(self, event) -> None:
         super()._apply_refresh_event(event)
         # The manager refreshed the BASE caches (global Eq. 1 + globally
@@ -297,6 +388,11 @@ class ShardedServer(MultiStreamServer):
         replica (stream state and RNG sequences untouched)."""
         for r in range(min(self.num_shards, len(self.sharded.adj_replicas))):
             rt = self._make_runtime(r, self.engine.seed, collect_outputs=False)
+            # Warmup must not consume fault-plan draws (the serve loop's
+            # replay is a pure function of plan + serve-path call index)
+            # nor fault before serving starts.
+            rt.injector = None
+            rt.retry_policy = None
             ctx = BatchContext(-1 - r, np.asarray(seeds))
             ctx.outputs["sample"] = rt.sample(ctx)
             if self.prefetch:
@@ -304,12 +400,12 @@ class ShardedServer(MultiStreamServer):
             ctx.outputs["feature"] = rt.feature(ctx)
             jax.block_until_ready(rt.compute(ctx))
 
-    def run(self, *, warmup: bool = True) -> ServeReport:
+    def run(self, *, warmup: bool = True, raise_on_error: bool = True) -> ServeReport:
         if warmup:
             seeds = self._warmup_seeds()
             if seeds is not None:
                 self._warmup_sharded(seeds)
-        return super().run(warmup=False)
+        return super().run(warmup=False, raise_on_error=raise_on_error)
 
     # ------------------------------------------------------------- report
     def _shard_summaries(self) -> list[dict]:
@@ -373,4 +469,10 @@ class ShardedServer(MultiStreamServer):
         rep = super()._serve_report(wall)
         rep.num_shards = self.num_shards
         rep.shards = self._shard_summaries()
+        if self.sharded.failovers:
+            for shard, entry in enumerate(rep.shards):
+                entry["failed_over"] = any(
+                    f["shard"] == shard for f in self.sharded.failovers
+                )
+            rep.failovers = list(self.sharded.failovers)
         return rep

@@ -276,6 +276,80 @@ def test_batch_context_carries_payload():
     assert ctx.index == 3 and ctx.payload == "payload" and ctx.outputs == {}
 
 
+def test_stage_error_drains_inflight_then_reraises():
+    """A stage failure mid-window must not strand completed work: every
+    in-flight batch retires (accounting runs, slots release) before the
+    FIRST error re-raises, and the executor stays usable afterwards."""
+    events = []
+
+    def fn(c):
+        if c.index == 2:
+            raise RuntimeError("boom")
+        events.append(("a", c.index))
+        return c.index
+
+    ex = PipelinedExecutor(
+        [Stage("a", fn)], depth=3, on_retire=lambda c: events.append(("r", c.index))
+    )
+    with pytest.raises(RuntimeError, match="boom"):
+        ex.run(range(5))
+    # batches 0 and 1 were in flight when 2 died: both retired, in order
+    assert events == [("a", 0), ("a", 1), ("r", 0), ("r", 1)]
+    # all window slots were released: a fresh run reuses slots 0..depth-1
+    events.clear()
+    out = ex.run([10, 11])
+    assert [c.index for c in out] == [0, 1]
+    assert sorted({c.slot for c in out}) <= [0, 1, 2]
+
+
+def test_retire_error_still_drains_remaining_window():
+    """An exception thrown by on_retire itself (the drain path's own
+    failure mode) also drains the rest of the window best-effort and the
+    original error wins."""
+    retired = []
+
+    def on_retire(c):
+        if c.index == 0:
+            raise RuntimeError("retire-boom")
+        retired.append(c.index)
+
+    ex = PipelinedExecutor([Stage("a", lambda c: c.index)], depth=3, on_retire=on_retire)
+    with pytest.raises(RuntimeError, match="retire-boom"):
+        ex.run(range(3))
+    assert retired == [1, 2]  # later batches still retired during the drain
+
+
+def test_on_batch_error_drops_only_the_failing_batch():
+    """The shed hook: a handled failure drops exactly that batch — its
+    slot and index are reused, later batches keep contiguous indices, and
+    unhandled errors still take the drain-and-raise path."""
+    dropped, retired = [], []
+
+    def fn(c):
+        if c.payload == "bad":
+            raise RuntimeError("poisoned")
+        return c.payload
+
+    ex = PipelinedExecutor(
+        [Stage("a", fn)],
+        depth=2,
+        on_retire=lambda c: retired.append((c.index, c.outputs["a"])),
+        on_batch_error=lambda c, e: dropped.append((c.index, str(e))) or True,
+    )
+    out = ex.run(["x", "bad", "y", "z"])
+    assert dropped == [(1, "poisoned")]
+    # the dropped batch's index was reused: retires are contiguous 0..2
+    assert retired == [(0, "x"), (1, "y"), (2, "z")]
+    assert [c.index for c in out] == [0, 1, 2]
+
+    # a handler that declines (returns False) falls through to the drain
+    ex2 = PipelinedExecutor(
+        [Stage("a", fn)], depth=2, on_batch_error=lambda c, e: False
+    )
+    with pytest.raises(RuntimeError, match="poisoned"):
+        ex2.run(["x", "bad"])
+
+
 # ----------------------------------------------------- StageClock invariants
 
 

@@ -305,3 +305,86 @@ def test_flash_crowd_trace_all_at_zero(small_dataset):
     )
     assert len(trace) == 3
     assert all(r.arrival_s == 0.0 and r.deadline_s == 0.05 for s in trace for r in s)
+
+
+# --------------------------------------------------- fault-tolerant accounting
+
+
+def test_timed_out_requests_shed_once_and_excluded_from_slo(small_dataset):
+    """Shed/defer bookkeeping under retry: a request whose attempts all
+    overrun the per-attempt budget is shed exactly once (never also
+    completed), marked timed-out, and EXCLUDED from the deadline-hit
+    denominator — a timeout is an availability event, not an SLO miss."""
+    from repro.core.config import EngineConfig, ServeConfig
+    from repro.core.faults import FaultInjector, FaultPlan, FaultRule
+
+    engine = _shared_engine(small_dataset)
+    (queue,) = _queues(small_dataset, n=1, batches=4)
+    reqs = _as_requests(queue, 0, deadlines=[3600.0] * 4)
+    # Two injected 50 ms delays against a 5 ms per-attempt budget and a
+    # 2-attempt retry: ONE request exhausts on timeouts and sheds; the
+    # delay cap is then spent, so every other request completes in time.
+    plan = FaultPlan(
+        rules=(
+            FaultRule(
+                "host_fetch", kind="delay", latency_s=0.05, start_after=1, max_faults=2
+            ),
+        )
+    )
+    cfg = ServeConfig(
+        engine=EngineConfig(pipeline_depth=2),
+        fault_policy="shed",
+        retry_attempts=2,
+        retry_backoff_ms=0.01,
+        retry_timeout_ms=5.0,
+    )
+    rq = RequestQueueServer(engine, config=cfg, injector=FaultInjector(plan))
+    rq.add_request_stream(reqs, seed=STREAM_SEEDS[0])
+    rep = rq.run()
+    (s,) = rq.streams
+
+    # shed XOR completed, exactly once each: ids partition the trace
+    assert len(s.shed_requests) == 1 and len(s.completed) == 3
+    done = {r.request_id for r in s.completed}
+    shed = {r.request_id for r in s.shed_requests}
+    assert done | shed == {0, 1, 2, 3} and not (done & shed)
+    victim = s.shed_requests[0]
+    assert victim.shed and victim.timed_out
+    assert rep.requests_shed == 1 and rq.total_shed == 1
+    assert rep.requests_timed_out == 1
+    assert rep.unserved == 0
+
+    # SLO accounting: the timed-out request is OUT of the denominator —
+    # the three completed (deadline-met) requests give a 1.0 hit rate
+    assert rep.deadline_total == 3 and rep.deadline_hits == 3
+    assert rep.deadline_hit_rate == 1.0
+    assert all(r.deadline_met for r in s.completed)
+    assert rep.availability == pytest.approx(3 / 4)
+    assert rep.fault_policy == "shed"
+
+
+def test_request_retry_and_degraded_marking(small_dataset):
+    """Recovered retries and degraded service are stamped onto the
+    individual Request rows and summed on the report."""
+    from repro.core.config import EngineConfig, ServeConfig
+    from repro.core.faults import FaultInjector, FaultPlan, FaultRule
+
+    engine = _shared_engine(small_dataset)
+    (queue,) = _queues(small_dataset, n=1, batches=3)
+    reqs = _as_requests(queue, 0)
+    plan = FaultPlan(rules=(FaultRule("host_fetch", start_after=1, max_faults=1),))
+    cfg = ServeConfig(
+        engine=EngineConfig(pipeline_depth=2),
+        fault_policy="retry",
+        retry_attempts=3,
+        retry_backoff_ms=0.01,
+    )
+    rq = RequestQueueServer(engine, config=cfg, injector=FaultInjector(plan))
+    rq.add_request_stream(reqs, seed=STREAM_SEEDS[0])
+    rep = rq.run()
+    (s,) = rq.streams
+    assert len(s.completed) == 3 and rep.requests_shed == 0
+    retried = [r for r in s.completed if r.retries > 0]
+    assert len(retried) == 1 and rep.requests_retried == 1
+    assert all(not r.degraded for r in s.completed)
+    assert rep.availability == 1.0
